@@ -1,0 +1,46 @@
+"""Shared benchmark utilities: timing, CSV/markdown emission, quick mode."""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import time
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "bench"
+
+QUICK = os.environ.get("BENCH_QUICK", "0") == "1"
+
+
+def timed(fn, *args, repeat: int = 1, **kw):
+    best = float("inf")
+    out = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        best = min(best, time.perf_counter() - t0)
+    return out, best
+
+
+def emit(name: str, rows: list[dict], cols: list[str] | None = None):
+    """Print a markdown table and persist rows as JSON."""
+    if not rows:
+        print(f"## {name}\n(no rows)")
+        return
+    cols = cols or list(rows[0].keys())
+    print(f"\n## {name}\n")
+    print("| " + " | ".join(cols) + " |")
+    print("|" + "---|" * len(cols))
+    for r in rows:
+        print("| " + " | ".join(_fmt(r.get(c, "")) for c in cols) + " |")
+    ART.mkdir(parents=True, exist_ok=True)
+    (ART / f"{name}.json").write_text(json.dumps(rows, indent=1, default=str))
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        if v == 0:
+            return "0"
+        if abs(v) >= 1e4 or abs(v) < 1e-3:
+            return f"{v:.3e}"
+        return f"{v:.4g}"
+    return str(v)

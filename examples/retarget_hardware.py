@@ -1,0 +1,59 @@
+"""Re-targeting demo — the paper's core selling point.
+
+    PYTHONPATH=src python examples/retarget_hardware.py [--bits 12]
+
+The complete design space is generated ONCE; three different "hardware
+technologies" then explore the *same* space with different decision
+procedures (§III: "Targeting alternative hardware technologies simply
+requires a modified decision procedure"):
+
+  * asic   — the paper's ordering (square path critical): min k, max square
+             truncation, max linear truncation, min a/b/c widths.
+  * sram   — LUT-dominated target (FPGA BRAM-ish): minimize total LUT row
+             width first (smallest memory), tolerate wider multipliers.
+  * vmem   — this repo's TPU kernel target: minimize R at fixed widths
+             (VMEM footprint = 2^R rows x row width drives kernel residency).
+"""
+from __future__ import annotations
+
+import argparse
+
+from repro.core import area as area_model
+from repro.core.funcspec import get_spec
+from repro.core.generate import sweep_lub
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--bits", type=int, default=12)
+    ap.add_argument("--kind", default="recip")
+    args = ap.parse_args()
+    spec = get_spec(args.kind, args.bits)
+
+    # one design space -> many targets
+    results = sweep_lub(spec)
+    assert results, "no feasible designs"
+
+    def describe(tag, g):
+        d = g.design
+        rows = 1 << d.lookup_bits
+        print(f"  {tag:5s}: R={d.lookup_bits} {'lin' if d.degree == 1 else 'quad'}"
+              f" widths={d.lut_widths} LUT={rows}x{sum(d.lut_widths)}b"
+              f" ({rows*sum(d.lut_widths)/8192:.1f} KiB)"
+              f" area={g.area:.0f} delay={g.delay:.2f}")
+
+    asic = min(results, key=lambda g: g.area_delay)
+    sram = min(results, key=lambda g: (1 << g.design.lookup_bits) * sum(g.design.lut_widths))
+    vmem = min(results, key=lambda g: (g.design.lookup_bits, sum(g.design.lut_widths)))
+
+    print(f"design space for {spec.name}: {len(results)} feasible LUT heights\n")
+    print("same space, three targets:")
+    describe("asic", asic)
+    describe("sram", sram)
+    describe("vmem", vmem)
+    print("\nno re-generation happened between targets — only the decision "
+          "procedure changed (the paper's §III claim).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,64 @@
+"""Serving with certified table numerics: continuous batching, exact-vs-interp.
+
+    PYTHONPATH=src python examples/serve_interp.py [--arch yi_6b]
+
+Loads a (smoke-size) model twice — once with XLA transcendentals, once with
+the paper's piecewise-polynomial tables in every softmax/SiLU/rsqrt — serves
+the same batched request stream through the continuous-batching engine, and
+reports token agreement plus the certified worst-case softmax error bound
+carried by the tables.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs.base import get_smoke_config
+from repro.models import transformer as tf
+from repro.numerics.ops import softmax_ulp_bound
+from repro.serve import ServeEngine
+from repro.serve.engine import Request
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi_6b")
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--slots", type=int, default=3)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+
+    base = get_smoke_config(args.arch)
+    params = tf.init_params(jax.random.key(0), base)
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, base.vocab_size, args.prompt_len).astype(np.int32)
+               for _ in range(args.requests)]
+
+    outs = {}
+    for numerics in ("exact", "interp"):
+        cfg = base.replace(numerics=numerics)
+        eng = ServeEngine(cfg, params, slots=args.slots, cache_len=128)
+        for i, p in enumerate(prompts):
+            eng.submit(Request(i, p, args.max_new))
+        done = sorted(eng.run(), key=lambda r: r.rid)
+        outs[numerics] = [r.out for r in done]
+        total = sum(len(r.out) for r in done)
+        print(f"{numerics:7s}: served {len(done)} requests, {total} tokens")
+
+    agree = [
+        np.mean([a == b for a, b in zip(ea, ia)])
+        for ea, ia in zip(outs["exact"], outs["interp"])
+    ]
+    print(f"\nper-request greedy token agreement exact-vs-interp: "
+          f"{[f'{a:.2f}' for a in agree]}")
+    print(f"certified softmax relative error bound of the tables: "
+          f"{softmax_ulp_bound():.2e}")
+    print("(tokens can differ only where the argmax margin is inside that "
+          "bound — the approximation is *certified*, not heuristic)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Assigned-architecture configs (one module per arch) + shape table."""
+from repro.configs.base import (ARCH_IDS, SHAPES, EncoderConfig, MLAConfig,  # noqa: F401
+                                ModelConfig, MoEConfig, ShapeConfig, SSMConfig,
+                                cell_is_runnable, get_config, get_smoke_config)

@@ -1,0 +1,17 @@
+"""Core library: the paper's complete polynomial-interpolation design space.
+
+Public API:
+    get_spec            — fixed-point function specifications (funcspec)
+    generate_table      — spec -> verified TableDesign (generate)
+    sweep_lub           — LUT-height sweep (generate)
+    run_decision        — §III decision procedure (decision)
+    regions_feasible    — Eqns 9-10 feasibility (designspace)
+    generate_remez_table— FloPoCo-style Remez baseline (remez)
+"""
+from repro.core.decision import run_decision  # noqa: F401
+from repro.core.designspace import build_design_space, minimal_k, regions_feasible  # noqa: F401
+from repro.core.funcspec import FunctionSpec, get_spec  # noqa: F401
+from repro.core.generate import (GenResult, generate_for_r, generate_table,  # noqa: F401
+                                 min_feasible_r, sweep_lub)
+from repro.core.remez import generate_remez_table  # noqa: F401
+from repro.core.table import TableDesign  # noqa: F401

@@ -1,0 +1,419 @@
+"""Design-space exploration: the §III decision procedure + Algorithm 1.
+
+Order (paper §III, tuned for the square-critical-path ASIC target, kept
+verbatim here because the same ordering also minimizes the Pallas kernel's
+integer-multiply widths and VMEM table footprint):
+
+  1. Minimize k                  (polynomial evaluation precision)
+  2. Maximize square truncation  (bits dropped from x before squaring)
+  3. Maximize linear truncation  (bits dropped from x in the b*x term)
+  4. Minimize a, then b, then c storage widths (Algorithm 1), pruning the
+     candidate dictionary after each step; pick the first survivor per region.
+
+Algorithm 1 is implemented twice: literally on explicit value sets
+(`alg1_set_precision`) and analytically on integer intervals
+(`alg1_interval_precision`) — equivalence is property-tested. Production uses
+the interval form (value sets here are intervals or small unions of them).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+from repro.core import searches
+from repro.core.designspace import (Candidate, DesignSpace, c_interval,
+                                    minimal_k)
+from repro.core.fixedpoint import (bit_length_of, interval_trailing_zeros,
+                                   min_bits_in_interval, trailing_zeros)
+from repro.core.funcspec import FunctionSpec
+from repro.core.table import CoeffMeta, TableDesign
+
+B_ENUM_CAP = 64
+
+
+# --------------------------------------------------------------------------
+# Linear (degree-1) exact feasibility: exists (b, c) with
+#   forall p: Lo[p] <= b*pos[p] + c <= Hi[p]
+# --------------------------------------------------------------------------
+
+def linear_fit_interval(lo: np.ndarray, hi: np.ndarray, stride: int = 1,
+                        impl: str = "hull") -> tuple[int, int] | None:
+    """Integer interval [b_min, b_max] of slopes b such that some intercept c
+    satisfies Lo <= b * (stride * index) + c <= Hi pointwise; None if empty.
+
+    Derivation: c exists iff forall x,y: Lo[x] - b*px <= Hi[y] - b*py, i.e.
+    max_{x<y}(Lo[y]-Hi[x])/(py-px) <= b <= min_{x<y}(Hi[y]-Lo[x])/(py-px).
+    """
+    if np.any(lo > hi):
+        return None
+    if len(lo) < 2:
+        return (0, 0)
+    b_lo, *_ = searches.max_dd(lo, hi, impl)
+    b_hi, *_ = searches.min_dd(hi, lo, impl)
+    # positions are stride*index, so real slopes divide by stride; b integer.
+    b_min = int(math.ceil(b_lo / stride - 1e-12))
+    b_max = int(math.floor(b_hi / stride + 1e-12))
+    # exact witness check (float-slop guard): shrink/grow by one if needed
+    idx = np.arange(len(lo), dtype=np.int64) * stride
+
+    def c_ok(b: int) -> bool:
+        t = b * idx
+        return int((lo - t).max()) <= int((hi - t).min())
+
+    while b_min <= b_max and not c_ok(b_min):
+        b_min += 1
+    while b_min <= b_max and not c_ok(b_max):
+        b_max -= 1
+    if b_min > b_max:
+        for b in (b_min - 1, b_max + 1):
+            if c_ok(b):
+                return (b, b)
+        return None
+    return b_min, b_max
+
+
+def _trunc(x: np.ndarray, bits: int) -> np.ndarray:
+    return (x >> bits) << bits
+
+
+def _region_trunc_candidates(L: np.ndarray, U: np.ndarray, k: int,
+                             a_values: list[int], sq_t: int, lin_t: int,
+                             impl: str = "hull") -> list[Candidate]:
+    """Surviving (a, b-interval) choices under truncations (i, j) — exact."""
+    n = len(L)
+    x = np.arange(n, dtype=np.int64)
+    sq = _trunc(x, sq_t) ** 2
+    out: list[Candidate] = []
+    lo_base = L.astype(np.int64) << k
+    hi_base = ((U.astype(np.int64) + 1) << k) - 1
+    n_buckets = n >> lin_t if lin_t else n
+    for a in a_values:
+        v_lo = lo_base - a * sq
+        v_hi = hi_base - a * sq
+        if lin_t:
+            v_lo = v_lo.reshape(n_buckets, -1).max(axis=1)
+            v_hi = v_hi.reshape(n_buckets, -1).min(axis=1)
+        iv = linear_fit_interval(v_lo, v_hi, stride=1 << lin_t, impl=impl)
+        if iv is not None:
+            out.append(Candidate(a, iv[0], iv[1]))
+    return out
+
+
+# --------------------------------------------------------------------------
+# Algorithm 1 — precision minimization
+# --------------------------------------------------------------------------
+
+def alg1_set_precision(sets: list[list[int]]) -> tuple[int, int]:
+    """Literal Algorithm 1 on explicit non-negative value sets.
+
+    Returns (P, t): minimal storage bits P with t truncated trailing zeros.
+    """
+    if any(len(s) == 0 for s in sets):
+        raise ValueError("empty region set")
+    t_cap = min(max(trailing_zeros(s) for s in sr) for sr in sets)
+    best_p, best_t = None, 0
+    for t in range(t_cap + 1):
+        p_t = 0
+        for sr in sets:
+            pruned = [s for s in sr if trailing_zeros(s) >= t]
+            p_t = max(p_t, min(max(bit_length_of(s) - t, 0) if s else 0
+                               for s in pruned))
+        if best_p is None or p_t < best_p:
+            best_p, best_t = p_t, t
+    return best_p, best_t
+
+
+@dataclasses.dataclass(frozen=True)
+class IntervalSet:
+    """Union of disjoint inclusive integer intervals (may span signs)."""
+
+    intervals: tuple[tuple[int, int], ...]
+
+    @classmethod
+    def single(cls, lo: int, hi: int) -> "IntervalSet":
+        return cls(((lo, hi),))
+
+    @classmethod
+    def union(cls, sets: list["IntervalSet"]) -> "IntervalSet":
+        ivs = sorted(i for s in sets for i in s.intervals)
+        merged: list[tuple[int, int]] = []
+        for lo, hi in ivs:
+            if merged and lo <= merged[-1][1] + 1:
+                merged[-1] = (merged[-1][0], max(merged[-1][1], hi))
+            else:
+                merged.append((lo, hi))
+        return cls(tuple(merged))
+
+    def abs_part(self, sign: int) -> "IntervalSet | None":
+        """Non-negative magnitudes of the sign-restricted part (0 in both)."""
+        out = []
+        for lo, hi in self.intervals:
+            if sign > 0 and hi >= 0:
+                out.append((max(lo, 0), hi))
+            elif sign < 0 and lo <= 0:
+                out.append((max(-hi, 0), -lo))
+        return IntervalSet(tuple(sorted(out))) if out else None
+
+    def max_trailing_zeros(self) -> int:
+        return max(interval_trailing_zeros(lo, hi) for lo, hi in self.intervals)
+
+    def min_bits(self, t: int) -> int | None:
+        cands = [min_bits_in_interval(lo, hi, t) for lo, hi in self.intervals]
+        cands = [c for c in cands if c is not None]
+        return min(cands) if cands else None
+
+    def restrict(self, bits: int, shift: int, signed: bool, sign: int) -> "IntervalSet":
+        """Intersect with representable values: s = +-(v << shift), v < 2^bits."""
+        cap = ((1 << bits) - 1) << shift
+        lo_cap = -cap if (signed or sign < 0) else 0
+        hi_cap = cap if (signed or sign > 0) else 0
+        out = []
+        for lo, hi in self.intervals:
+            lo2, hi2 = max(lo, lo_cap), min(hi, hi_cap)
+            step = 1 << shift
+            lo3 = -((-lo2) // step) * step  # ceil to multiple
+            hi3 = (hi2 // step) * step  # floor to multiple
+            if lo3 <= hi3:
+                out.append((lo3, hi3))
+        return IntervalSet(tuple(out))
+
+    def first_value(self) -> int | None:
+        """Smallest-magnitude member (ties: positive)."""
+        best = None
+        for lo, hi in self.intervals:
+            v = lo if lo >= 0 else (hi if hi <= 0 else 0)
+            if best is None or abs(v) < abs(best) or (abs(v) == abs(best) and v > best):
+                best = v
+        return best
+
+    def enumerate(self, shift: int, cap: int = B_ENUM_CAP) -> list[int]:
+        vals: list[int] = []
+        step = 1 << shift
+        for lo, hi in self.intervals:
+            lo = -((-lo) // step) * step
+            v = lo
+            while v <= hi and len(vals) < cap * 4:
+                vals.append(v)
+                v += step
+        vals.sort(key=abs)
+        return vals[:cap]
+
+    @property
+    def empty(self) -> bool:
+        return len(self.intervals) == 0
+
+
+def alg1_interval_precision(sets: list[IntervalSet]) -> CoeffMeta:
+    """Algorithm 1 over interval-sets, trying sign modes {pos, neg, signed}
+    and returning the narrowest storage format valid for EVERY region."""
+    best: CoeffMeta | None = None
+    for mode in ("pos", "neg", "signed"):
+        if mode == "pos":
+            parts = [s.abs_part(+1) for s in sets]
+            signed = False
+        elif mode == "neg":
+            parts = [s.abs_part(-1) for s in sets]
+            signed = False
+        else:
+            parts = [IntervalSet.union([p for p in (s.abs_part(+1), s.abs_part(-1)) if p])
+                     for s in sets]
+            signed = True
+        if any(p is None or p.empty for p in parts):
+            continue
+        t_cap = min(p.max_trailing_zeros() for p in parts)
+        for t in range(min(t_cap, 62) + 1):
+            per_region = [p.min_bits(t) for p in parts]
+            if any(b is None for b in per_region):
+                continue
+            p_t = max(per_region)  # type: ignore[type-var]
+            meta = CoeffMeta(bits=p_t, shift=t, signed=signed)
+            if best is None or (meta.width, -meta.shift) < (best.width, -best.shift):
+                best = meta
+    assert best is not None, "alg1: no sign mode feasible (impossible for nonempty sets)"
+    return best
+
+
+# --------------------------------------------------------------------------
+# Full decision procedure
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class DecisionReport:
+    lookup_bits: int
+    degree: int
+    k: int
+    sq_trunc: int
+    lin_trunc: int
+    widths: tuple[int, int, int]
+    linear_possible: bool
+
+
+def _trunc_worker(args):
+    L_row, U_row, k, a_vals, i, j, impl = args
+    return _region_trunc_candidates(L_row, U_row, k, a_vals, i, j, impl)
+
+
+def run_decision(spec: FunctionSpec, lookup_bits: int, degree: int | None = None,
+                 impl: str = "vectorized", k_max: int = 24,
+                 processes: int | None = None
+                 ) -> tuple[TableDesign, DecisionReport] | None:
+    """Run the full §III procedure; returns a verified TableDesign or None if
+    no piecewise polynomial of the requested degree exists at this R.
+    ``processes > 1`` parallelizes the per-region work (paper §V future work)."""
+    from repro.core.pmap import RegionPool
+
+    with RegionPool(processes) as pool:
+        return _run_decision_pooled(spec, lookup_bits, degree, impl, k_max, pool)
+
+
+def _run_decision_pooled(spec, lookup_bits, degree, impl, k_max, pool
+                         ) -> tuple[TableDesign, DecisionReport] | None:
+    # -- step 1: minimal k, and lin-vs-quad choice (paper: linear iff 0 is in
+    # every region's a-interval — smaller, faster hardware) ----------------
+    lin_ds = minimal_k(spec, lookup_bits, force_linear=True, impl=impl, k_max=k_max,
+                       pool=pool)
+    linear_possible = lin_ds is not None and lin_ds.feasible
+    if degree == 1 or (degree is None and linear_possible):
+        ds = lin_ds
+        deg = 1
+    else:
+        ds = minimal_k(spec, lookup_bits, force_linear=False, impl=impl, k_max=k_max,
+                       pool=pool)
+        deg = 2
+    if ds is None or not ds.feasible:
+        return None
+
+    n_regions = 1 << lookup_bits
+    w = ds.eval_bits
+    k = ds.k
+    a_sets: list[list[int]] = [[c.a for c in ds.candidates[r]] for r in range(n_regions)]
+
+    # -- step 2: maximize square truncation i (quadratic only) -------------
+    sq_t = 0
+    if deg == 2 and w > 0:
+        for i in range(1, w + 1):
+            rows = pool.map(_trunc_worker,
+                            [(ds.L[r], ds.U[r], k, a_sets[r], i, 0, impl)
+                             for r in range(n_regions)])
+            if any(not c for c in rows):
+                break
+            sq_t, a_sets = i, [[c.a for c in cands] for cands in rows]
+
+    # -- step 3: maximize linear truncation j ------------------------------
+    lin_t = 0
+    region_cands: list[list[Candidate]] = pool.map(
+        _trunc_worker, [(ds.L[r], ds.U[r], k, a_sets[r], sq_t, 0, impl)
+                        for r in range(n_regions)])
+    if any(not c for c in region_cands):
+        return None  # should not happen: step-2 kept feasibility
+    for j in range(1, w + 1):
+        trial = pool.map(
+            _trunc_worker,
+            [(ds.L[r], ds.U[r], k, [c.a for c in region_cands[r]], sq_t, j, impl)
+             for r in range(n_regions)])
+        if any(not c for c in trial):
+            break
+        lin_t, region_cands = j, trial
+
+    # -- step 4: Algorithm 1 width minimization, a -> b -> c ---------------
+    # a widths
+    a_meta = alg1_interval_precision([
+        IntervalSet.union([IntervalSet.single(c.a, c.a) for c in region_cands[r]])
+        for r in range(n_regions)
+    ])
+    region_cands = [
+        [c for c in cands
+         if not IntervalSet.single(c.a, c.a).restrict(
+             a_meta.bits, a_meta.shift, a_meta.signed, 1 if c.a >= 0 else -1).empty]
+        for cands in region_cands
+    ]
+    if any(not c for c in region_cands):
+        return None
+    # b widths over the union of surviving b-intervals
+    b_meta = alg1_interval_precision([
+        IntervalSet.union([IntervalSet.single(c.b_min, c.b_max) for c in cands])
+        for cands in region_cands
+    ])
+    # prune b to representable values; keep (a, bs) with survivors
+    pruned: list[list[tuple[int, list[int]]]] = []
+    for cands in region_cands:
+        row = []
+        for c in cands:
+            iv = IntervalSet.single(c.b_min, c.b_max).restrict(
+                b_meta.bits, b_meta.shift, b_meta.signed, 1 if c.b_max >= 0 else -1)
+            if not b_meta.signed:
+                # unsigned mode: restrict() above guessed a sign; redo both
+                iv = IntervalSet.union([
+                    IntervalSet.single(c.b_min, c.b_max).restrict(
+                        b_meta.bits, b_meta.shift, False, +1),
+                    IntervalSet.single(c.b_min, c.b_max).restrict(
+                        b_meta.bits, b_meta.shift, False, -1),
+                ])
+            bs = iv.enumerate(b_meta.shift)
+            if bs:
+                row.append((c.a, bs))
+        pruned.append(row)
+    if any(not row for row in pruned):
+        return None
+
+    # c width over exact c-intervals of surviving (a, b) pairs
+    x = np.arange(1 << w, dtype=np.int64)
+    sqv = _trunc(x, sq_t) ** 2
+    linv = _trunc(x, lin_t)
+
+    def c_iv(r: int, a: int, b: int) -> tuple[int, int]:
+        return c_interval(ds.L[r], ds.U[r], a, b, k, sq=sqv, lin=linv)
+
+    c_sets = []
+    for r in range(n_regions):
+        ivs = []
+        for a, bs in pruned[r]:
+            for b in bs:
+                lo, hi = c_iv(r, a, b)
+                if lo <= hi:
+                    ivs.append(IntervalSet.single(lo, hi))
+        if not ivs:
+            return None
+        c_sets.append(IntervalSet.union(ivs))
+    c_meta = alg1_interval_precision(c_sets)
+
+    # final pick: first surviving (a, b, c) per region
+    av = np.zeros(n_regions, dtype=np.int64)
+    bv = np.zeros(n_regions, dtype=np.int64)
+    cv = np.zeros(n_regions, dtype=np.int64)
+    for r in range(n_regions):
+        done = False
+        for a, bs in pruned[r]:
+            for b in bs:
+                lo, hi = c_iv(r, a, b)
+                if lo > hi:
+                    continue
+                sign = 1 if hi >= 0 else -1
+                iv = IntervalSet.single(lo, hi).restrict(
+                    c_meta.bits, c_meta.shift, c_meta.signed, sign)
+                if not c_meta.signed and iv.empty:
+                    iv = IntervalSet.single(lo, hi).restrict(
+                        c_meta.bits, c_meta.shift, False, -sign)
+                val = iv.first_value()
+                if val is not None:
+                    av[r], bv[r], cv[r] = a, b, val
+                    done = True
+                    break
+            if done:
+                break
+        if not done:
+            return None
+
+    design = TableDesign(
+        name=f"{spec.name}_R{lookup_bits}", in_bits=spec.in_bits,
+        out_bits=spec.out_bits, lookup_bits=lookup_bits, k=k, degree=deg,
+        sq_trunc=sq_t, lin_trunc=lin_t, a=av, b=bv, c=cv,
+        a_meta=a_meta, b_meta=b_meta, c_meta=c_meta,
+    )
+    ok, _ = design.verify(spec)
+    assert ok, f"decision produced an invalid design for {spec.name} R={lookup_bits}"
+    report = DecisionReport(lookup_bits, deg, k, sq_t, lin_t,
+                            design.lut_widths, linear_possible)
+    return design, report

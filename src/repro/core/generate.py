@@ -1,0 +1,85 @@
+"""Top-level table generation: the public entry point of the core library.
+
+``generate_table(spec)`` reproduces the paper's flow end to end: find the
+feasible lookup-bit range, run the §III decision procedure per R, rank by the
+area-delay proxy (paper: "We select the number of lookup bits based on the
+best area-delay product") and return a verified artifact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.core import area as area_model
+from repro.core.decision import DecisionReport, run_decision
+from repro.core.designspace import regions_feasible
+from repro.core.funcspec import FunctionSpec
+from repro.core.table import TableDesign
+
+
+@dataclasses.dataclass
+class GenResult:
+    design: TableDesign
+    report: DecisionReport
+    runtime_s: float
+    area: float
+    delay: float
+
+    @property
+    def area_delay(self) -> float:
+        return self.area * self.delay
+
+
+def generate_for_r(spec: FunctionSpec, lookup_bits: int, degree: int | None = None,
+                   impl: str = "hull", processes: int | None = None
+                   ) -> GenResult | None:
+    t0 = time.perf_counter()
+    out = run_decision(spec, lookup_bits, degree=degree, impl=impl,
+                       processes=processes)
+    if out is None:
+        return None
+    design, report = out
+    ad = area_model.estimate(design)
+    return GenResult(design, report, time.perf_counter() - t0, ad.area, ad.delay)
+
+
+def min_feasible_r(spec: FunctionSpec, impl: str = "hull",
+                   r_max: int | None = None) -> int | None:
+    """Smallest R whose every region passes Eqns 9-10 (min #regions needed —
+    the 'minimum number of regions' knowledge the abstract advertises)."""
+    r_max = spec.in_bits if r_max is None else r_max
+    for r in range(0, r_max + 1):
+        ok, _ = regions_feasible(spec, r, impl)
+        if ok:
+            return r
+    return None
+
+
+def sweep_lub(spec: FunctionSpec, r_lo: int | None = None, r_hi: int | None = None,
+              degree: int | None = None, impl: str = "hull") -> list[GenResult]:
+    """Generate designs across LUT heights (Fig 3's x-axis)."""
+    if r_lo is None:
+        r_lo = min_feasible_r(spec, impl)
+        if r_lo is None:
+            return []
+    r_hi = min(spec.in_bits, r_lo + 6) if r_hi is None else r_hi
+    out = []
+    for r in range(r_lo, r_hi + 1):
+        res = generate_for_r(spec, r, degree=degree, impl=impl)
+        if res is not None:
+            out.append(res)
+    return out
+
+
+def generate_table(spec: FunctionSpec, lookup_bits: int | None = None,
+                   degree: int | None = None, impl: str = "hull") -> GenResult:
+    """Best-area-delay design; fixed R if given, else swept."""
+    if lookup_bits is not None:
+        res = generate_for_r(spec, lookup_bits, degree=degree, impl=impl)
+        if res is None:
+            raise ValueError(f"no feasible design: {spec.name} R={lookup_bits}")
+        return res
+    results = sweep_lub(spec, degree=degree, impl=impl)
+    if not results:
+        raise ValueError(f"no feasible design for {spec.name}")
+    return min(results, key=lambda g: g.area_delay)

@@ -1,0 +1,50 @@
+"""Region-parallel execution — the paper's §V future-work line
+("Scalability concerns could be addressed by introducing parallelism").
+
+Regions are embarrassingly parallel in every phase of §II generation: the
+M/m envelopes, the Eqn 9-10 feasibility searches and the truncation
+re-checks of §III all touch one region's (L, U) rows only. ``RegionPool``
+wraps a fork-based process pool; all submitted callables must be
+module-level (picklable) functions.
+"""
+from __future__ import annotations
+
+import contextlib
+import multiprocessing as mp
+import os
+from typing import Callable, Iterable, Sequence
+
+
+def default_processes() -> int:
+    return max(1, min(8, os.cpu_count() or 1))
+
+
+class RegionPool:
+    """map() over per-region work items; transparent when processes <= 1."""
+
+    def __init__(self, processes: int | None = None):
+        self.processes = 1 if processes is None else processes
+        self._pool = None
+
+    def __enter__(self):
+        if self.processes > 1:
+            self._pool = mp.get_context("fork").Pool(self.processes)
+        return self
+
+    def __exit__(self, *exc):
+        if self._pool is not None:
+            self._pool.terminate()
+            self._pool.join()
+            self._pool = None
+
+    def map(self, fn: Callable, items: Sequence, chunksize: int | None = None):
+        if self._pool is None or len(items) <= 1:
+            return [fn(it) for it in items]
+        cs = chunksize or max(1, len(items) // (4 * self.processes))
+        return self._pool.map(fn, items, cs)
+
+
+@contextlib.contextmanager
+def region_pool(processes: int | None):
+    with RegionPool(processes) as p:
+        yield p

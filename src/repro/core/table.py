@@ -1,0 +1,150 @@
+"""Interpolation table artifact + exhaustive bit-exact verification.
+
+A ``TableDesign`` is the framework's equivalent of the paper's generated RTL:
+a coefficient ROM (one (a, b, c) row per region) plus the static datapath
+parameters (k, square/linear input truncations, coefficient widths/shifts).
+``verify`` replaces the paper's HECTOR formal check with an exhaustive int64
+sweep over every input code — exact, and feasible at the widths we target.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any
+
+import numpy as np
+
+from repro.core.funcspec import FunctionSpec
+
+
+@dataclasses.dataclass
+class CoeffMeta:
+    """Storage format of one coefficient column (Algorithm 1 output)."""
+
+    bits: int  # stored magnitude bits P
+    shift: int  # trailing zeros truncated from storage
+    signed: bool  # whether a sign bit is stored
+
+    @property
+    def width(self) -> int:  # LUT column width as reported in Table II
+        return self.bits + (1 if self.signed else 0)
+
+    def to_dict(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class TableDesign:
+    """A concrete, verified piecewise-polynomial implementation."""
+
+    name: str
+    in_bits: int
+    out_bits: int
+    lookup_bits: int  # R
+    k: int
+    degree: int  # 1 (linear) or 2 (quadratic)
+    sq_trunc: int  # i: low bits of x zeroed before squaring
+    lin_trunc: int  # j: low bits of x zeroed in the linear term
+    a: np.ndarray  # (2^R,) int64
+    b: np.ndarray
+    c: np.ndarray
+    a_meta: CoeffMeta
+    b_meta: CoeffMeta
+    c_meta: CoeffMeta
+
+    @property
+    def eval_bits(self) -> int:  # W
+        return self.in_bits - self.lookup_bits
+
+    @property
+    def lut_widths(self) -> tuple[int, int, int]:
+        return (self.a_meta.width, self.b_meta.width, self.c_meta.width)
+
+    @property
+    def lut_total_width(self) -> int:
+        return sum(self.lut_widths)
+
+    def eval_int(self, codes: np.ndarray) -> np.ndarray:
+        """Exact integer evaluation: floor((a*sq(x) + b*lin(x) + c) / 2^k).
+
+        Arithmetic right shift on signed int64 == floor division by 2^k,
+        matching the paper's floor semantics.
+        """
+        codes = np.asarray(codes, dtype=np.int64)
+        w = self.eval_bits
+        r = codes >> w
+        x = codes & ((1 << w) - 1)
+        xs = (x >> self.sq_trunc) << self.sq_trunc
+        xl = (x >> self.lin_trunc) << self.lin_trunc
+        acc = self.a[r] * xs * xs + self.b[r] * xl + self.c[r]
+        return acc >> self.k
+
+    def verify(self, spec: FunctionSpec) -> tuple[bool, int]:
+        """Exhaustive check: every input's output inside [L, U].
+
+        Returns (ok, worst signed violation in output ULPs; 0 when ok).
+        """
+        lo, hi = spec.bound_arrays()
+        codes = np.arange(1 << self.in_bits, dtype=np.int64)
+        y = self.eval_int(codes)
+        under = lo - y
+        over = y - hi
+        worst = int(max(under.max(), over.max()))
+        return worst <= 0, max(worst, 0)
+
+    def max_error_ulp(self, spec: FunctionSpec) -> float:
+        """Max |y - value| in output ULPs against the real-valued target."""
+        if spec.value is None:
+            raise ValueError("spec has no real-valued target")
+        codes = np.arange(1 << self.in_bits, dtype=np.int64)
+        y = self.eval_int(codes).astype(np.float64)
+        return float(np.abs(y - spec.value(codes)).max())
+
+    # -- serialization ----------------------------------------------------
+    def to_dict(self) -> dict[str, Any]:
+        d = {
+            "name": self.name,
+            "in_bits": self.in_bits,
+            "out_bits": self.out_bits,
+            "lookup_bits": self.lookup_bits,
+            "k": self.k,
+            "degree": self.degree,
+            "sq_trunc": self.sq_trunc,
+            "lin_trunc": self.lin_trunc,
+            "a": self.a.tolist(),
+            "b": self.b.tolist(),
+            "c": self.c.tolist(),
+            "a_meta": self.a_meta.to_dict(),
+            "b_meta": self.b_meta.to_dict(),
+            "c_meta": self.c_meta.to_dict(),
+        }
+        return d
+
+    def to_json(self) -> str:
+        return json.dumps(self.to_dict())
+
+    @classmethod
+    def from_dict(cls, d: dict[str, Any]) -> "TableDesign":
+        return cls(
+            name=d["name"], in_bits=d["in_bits"], out_bits=d["out_bits"],
+            lookup_bits=d["lookup_bits"], k=d["k"], degree=d["degree"],
+            sq_trunc=d["sq_trunc"], lin_trunc=d["lin_trunc"],
+            a=np.array(d["a"], dtype=np.int64),
+            b=np.array(d["b"], dtype=np.int64),
+            c=np.array(d["c"], dtype=np.int64),
+            a_meta=CoeffMeta(**d["a_meta"]),
+            b_meta=CoeffMeta(**d["b_meta"]),
+            c_meta=CoeffMeta(**d["c_meta"]),
+        )
+
+    def packed_coeffs(self) -> np.ndarray:
+        """(2^R, 3) int32 coefficient matrix for the Pallas kernels.
+
+        Raises if any coefficient exceeds int32 — such tables (e.g. the
+        23-bit reciprocal's 37-bit c) evaluate on the int64 jnp path instead
+        (DESIGN.md §7.5).
+        """
+        mat = np.stack([self.a, self.b, self.c], axis=1)
+        if np.abs(mat).max() >= 2**31:
+            raise ValueError(f"{self.name}: coefficients exceed int32")
+        return mat.astype(np.int32)

@@ -1,0 +1,59 @@
+"""Public wrapper: Pallas-accelerated envelope computation for generation.
+
+``envelopes_pallas`` returns M(t), m(t) in the exact layout the core numpy
+path (`repro.core.designspace.envelopes`) produces, so the generator can swap
+implementations freely (``impl="pallas"`` in benchmarks).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.dspace.kernel import TILE, envelopes_parity
+from repro.kernels.dspace.ref import envelopes_parity_ref
+
+
+def _interleave(me, mo, be, bo, n: int):
+    """Parity arrays -> (M, m) indexed by t in [0, 2n-2); index 0 is padding."""
+    m = np.empty(2 * n - 2, dtype=np.float64)
+    big_m = np.empty(2 * n - 2, dtype=np.float64)
+    m[0::2] = np.asarray(me)[: n - 1]
+    m[1::2] = np.asarray(mo)[: n - 1]
+    big_m[0::2] = np.asarray(be)[: n - 1]
+    big_m[1::2] = np.asarray(bo)[: n - 1]
+    m[0], big_m[0] = np.inf, -np.inf
+    m[m >= 3.0e38] = np.inf
+    big_m[big_m <= -3.0e38] = -np.inf
+    return big_m, m
+
+
+def envelopes_pallas(L: np.ndarray, U: np.ndarray, interpret: bool = True
+                     ) -> tuple[np.ndarray, np.ndarray]:
+    """Drop-in replacement for core.designspace.envelopes via the kernel.
+
+    Pads N up to a TILE multiple; pad lanes only ever appear as the *right*
+    (y) operand of a kept-lane pair, so L[pad] = -2^30 / U[pad] = +2^30 make
+    every pad-touching divided difference lose its min/max reduction.
+    """
+    n = len(L)
+    if n < 2:
+        return np.full(1, -np.inf), np.full(1, np.inf)
+    n_pad = max(((n + TILE - 1) // TILE) * TILE, TILE)
+    lp = np.zeros(n_pad, np.float64)
+    up = np.zeros(n_pad, np.float64)
+    lp[:n], up[:n] = L, U
+    if n_pad > n:
+        lp[n:] = -(2.0**30)  # d_lo = (L[y]-U[x]-1)/.. -> -huge, loses max
+        up[n:] = 2.0**30  # d_up = (U[y]+1-L[x])/.. -> +huge, loses min
+    me, mo, be, bo = envelopes_parity(jnp.asarray(lp), jnp.asarray(up), interpret)
+    big_m, m = _interleave(me, mo, be, bo, n_pad)
+    return big_m[: 2 * n - 2], m[: 2 * n - 2]
+
+
+def envelopes_ref_jnp(L: np.ndarray, U: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    n = len(L)
+    if n < 2:
+        return np.full(1, -np.inf), np.full(1, np.inf)
+    me, mo, be, bo = envelopes_parity_ref(jnp.asarray(L), jnp.asarray(U))
+    return _interleave(me, mo, be, bo, n)

@@ -1,0 +1,32 @@
+"""Dense jnp oracle for the envelope kernel: straight from the definition."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+BIG = 3.4e38
+
+
+def envelopes_parity_ref(l_arr, u_arr):
+    """O(N^2)-memory masked reduction; returns (m_even, m_odd, M_even, M_odd)."""
+    n = l_arr.shape[-1]
+    lf = jnp.asarray(l_arr, jnp.float32)
+    uf = jnp.asarray(u_arr, jnp.float32)
+    x = jnp.arange(n)[:, None]
+    y = jnp.arange(n)[None, :]
+    with np.errstate(divide="ignore", invalid="ignore"):
+        d_up = jnp.where(y > x, (uf[None, :] + 1.0 - lf[:, None]) / jnp.maximum(y - x, 1), BIG)
+        d_lo = jnp.where(y > x, (lf[None, :] - uf[:, None] - 1.0) / jnp.maximum(y - x, 1), -BIG)
+    m_even = jnp.full(n, BIG)
+    m_odd = jnp.full(n, BIG)
+    b_even = jnp.full(n, -BIG)
+    b_odd = jnp.full(n, -BIG)
+    tsum = x + y
+    for j in range(n):
+        even_mask = (tsum == 2 * j) & (y > x)
+        odd_mask = (tsum == 2 * j + 1) & (y > x)
+        m_even = m_even.at[j].set(jnp.where(even_mask, d_up, BIG).min())
+        b_even = b_even.at[j].set(jnp.where(even_mask, d_lo, -BIG).max())
+        m_odd = m_odd.at[j].set(jnp.where(odd_mask, d_up, BIG).min())
+        b_odd = b_odd.at[j].set(jnp.where(odd_mask, d_lo, -BIG).max())
+    return m_even, m_odd, b_even, b_odd

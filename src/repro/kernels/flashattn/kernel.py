@@ -1,0 +1,133 @@
+"""Pallas TPU kernel: fused flash attention with table-backed exp/recip.
+
+The structural answer to the §Perf Cell-B memory term: the score block,
+mask, exponential, running renormalization and PV product live entirely in
+VMEM — HBM sees only Q/K/V reads and one output write per tile. Both
+transcendentals come from the paper's certified tables (the same `_lut`
+one-hot-MXU datapath as kernels/softmax), so the fused kernel *is* the
+generated hardware of Fig. 1 dropped into the attention hot loop.
+
+Tiling: grid (N heads-batch, Sq/BLOCK_Q); per step the q tile (BLOCK_Q, D)
+and the full K/V stripe (Sk, D) for that head are VMEM-resident (bf16
+Sk=4k, D=128 -> 2 MB; longer Sk moves kv onto the grid axis — documented
+bound). The kv loop runs in BLOCK_K chunks with `pl.when`-guarded compute:
+causally-dead chunks are skipped (perf iteration B1 inside the kernel).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.softmax.kernel import _lut
+
+BLOCK_Q = 128
+BLOCK_K = 128
+LOG2E = 1.4426950408889634
+NEG = -1e30
+M_FLOOR = -1e20
+
+
+def _table_exp_neg(t, coeffs, meta):
+    """2^(-t) for t >= 0 via the exp2neg table (exact power-of-2 scaling)."""
+    t = jnp.minimum(t, 126.0)
+    n = jnp.floor(t)
+    frac = t - n
+    eb = meta["in_bits"]
+    codes = jnp.clip(jnp.round(frac * (1 << eb)).astype(jnp.int32),
+                     0, (1 << eb) - 1)
+    tab = _lut(codes, coeffs, **meta["eval"]).astype(jnp.float32)
+    return tab * (2.0 ** -meta["out_bits"]) * jnp.exp2(-n)
+
+
+def _table_recip(s, coeffs, meta):
+    """1/s for s > 0 via IEEE-754 mantissa split + reciprocal table."""
+    bits = jax.lax.bitcast_convert_type(s, jnp.int32)
+    expo = jnp.bitwise_and(jax.lax.shift_right_logical(bits, 23), 255) - 127
+    mant = jnp.bitwise_and(bits, (1 << 23) - 1)
+    rb = meta["in_bits"]
+    half = 1 << (23 - rb - 1)
+    rcodes = jnp.clip(jax.lax.shift_right_logical(mant + half, 23 - rb),
+                      0, (1 << rb) - 1)
+    rtab = _lut(rcodes, coeffs, **meta["eval"]).astype(jnp.float32)
+    return rtab * (2.0 ** -(rb + 1)) * jnp.exp2(-expo.astype(jnp.float32))
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, ecoef_ref, rcoef_ref, out_ref, *,
+                  causal: bool, scale: float, exp_meta: dict,
+                  recip_meta: dict, block_k: int):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale  # (BQ, D)
+    sk = k_ref.shape[1]
+    nk = sk // block_k
+    bq = q.shape[0]
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
+
+    def body(j, carry):
+        m_i, l_i, acc = carry
+        kb = jax.lax.dynamic_slice_in_dim(k_ref[0], j * block_k, block_k
+                                          ).astype(jnp.float32)  # (BK, D)
+        vb = jax.lax.dynamic_slice_in_dim(v_ref[0], j * block_k, block_k)
+        s = jax.lax.dot_general(q, kb, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (BQ, BK)
+        if causal:
+            k_pos = j * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (1, block_k), 1)
+            s = jnp.where(q_pos >= k_pos, s, NEG)
+        m_new = jnp.maximum(jnp.maximum(m_i, jnp.max(s, -1, keepdims=True)),
+                            M_FLOOR)
+        p = _table_exp_neg((m_new - s) * LOG2E, ecoef_ref[...], exp_meta)
+        corr = _table_exp_neg((m_new - m_i) * LOG2E, ecoef_ref[...], exp_meta)
+        l_new = l_i * corr + jnp.sum(p, -1, keepdims=True)
+        pv = jax.lax.dot_general(p.astype(vb.dtype), vb,
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+        return m_new, l_new, acc * corr + pv
+
+    def guarded(j, carry):
+        if not causal:
+            return body(j, carry)
+        # B1 inside the kernel: skip chunks strictly above the diagonal
+        live = (j * block_k) <= (qi * bq + bq - 1)
+        return jax.lax.cond(live, lambda c: body(j, c), lambda c: c, carry)
+
+    init = (jnp.full((bq, 1), M_FLOOR, jnp.float32),
+            jnp.zeros((bq, 1), jnp.float32),
+            jnp.zeros((bq, v_ref.shape[-1]), jnp.float32))
+    m_i, l_i, acc = jax.lax.fori_loop(0, nk, guarded, init)
+    recip = _table_recip(jnp.maximum(l_i, 1e-30), rcoef_ref[...], recip_meta)
+    out_ref[0] = (acc * recip).astype(out_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                    exp_coeffs: jax.Array, recip_coeffs: jax.Array,
+                    exp_meta: dict, recip_meta: dict, *,
+                    causal: bool = True, scale: float | None = None,
+                    block_q: int = BLOCK_Q, block_k: int = BLOCK_K,
+                    interpret: bool = True) -> jax.Array:
+    """q: (N, Sq, D); k, v: (N, Sk, D). N = batch x heads (GQA expansion is
+    the caller's contract). Sq % block_q == 0, Sk % block_k == 0."""
+    n, sq, d = q.shape
+    sk = k.shape[1]
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk)
+    scale = (d ** -0.5) if scale is None else scale
+    kernel = functools.partial(_flash_kernel, causal=causal, scale=scale,
+                               exp_meta=exp_meta, recip_meta=recip_meta,
+                               block_k=block_k)
+    ne, nr = exp_coeffs.shape[0], recip_coeffs.shape[0]
+    return pl.pallas_call(
+        kernel,
+        grid=(n, sq // block_q),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, sk, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, sk, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((ne, 3), lambda i, j: (0, 0)),
+            pl.BlockSpec((nr, 3), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, sq, d), v.dtype),
+        interpret=interpret,
+    )(q, k, v, exp_coeffs, recip_coeffs)

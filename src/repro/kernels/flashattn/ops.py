@@ -1,0 +1,42 @@
+"""Jitted public wrapper for the table-numerics flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.table import TableDesign
+from repro.kernels.flashattn.kernel import flash_attention
+from repro.kernels.flashattn.ref import flash_attention_ref
+from repro.kernels.softmax.ops import _meta
+from repro.numerics.registry import get_table
+
+
+def attention_fused(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, scale: float | None = None,
+                    exp_design: TableDesign | None = None,
+                    recip_design: TableDesign | None = None,
+                    use_kernel: bool = True,
+                    interpret: bool | None = None) -> jax.Array:
+    """(B, S, H, D) multi-head attention through the fused kernel.
+
+    GQA callers expand kv heads first (kernel contract: one kv stripe per
+    query head)."""
+    b, sq, h, d = q.shape
+    sk = k.shape[1]
+    assert k.shape[2] == h, "expand GQA kv heads before calling"
+    exp_design = exp_design or get_table("exp2neg")
+    recip_design = recip_design or get_table("recip")
+    qn = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kn = k.transpose(0, 2, 1, 3).reshape(b * h, sk, d)
+    vn = v.transpose(0, 2, 1, 3).reshape(b * h, sk, d)
+    if not use_kernel:
+        o = flash_attention_ref(qn, kn, vn, exp_design, recip_design,
+                                causal=causal, scale=scale)
+    else:
+        interpret = (jax.default_backend() != "tpu") if interpret is None else interpret
+        ec = jnp.asarray(exp_design.packed_coeffs())
+        rc = jnp.asarray(recip_design.packed_coeffs())
+        o = flash_attention(qn, kn, vn, ec, rc, _meta(exp_design),
+                            _meta(recip_design), causal=causal, scale=scale,
+                            interpret=interpret)
+    return o.reshape(b, h, sq, d).transpose(0, 2, 1, 3)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the flash-attention kernel: unchunked attention with
+the same table-backed exponential / reciprocal semantics."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.numerics.ops import approx_exp_neg, approx_recip_pos
+
+NEG = -1e30
+M_FLOOR = -1e20
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                        exp_design, recip_design, *, causal: bool = True,
+                        scale: float | None = None) -> jax.Array:
+    """q: (N, Sq, D); k, v: (N, Sk, D)."""
+    n, sq, d = q.shape
+    sk = k.shape[1]
+    scale = (d ** -0.5) if scale is None else scale
+    s = jnp.einsum("nqd,nkd->nqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        qp = jnp.arange(sq)[:, None]
+        kp = jnp.arange(sk)[None, :]
+        s = jnp.where(qp >= kp, s, NEG)
+    m = jnp.maximum(jnp.max(s, -1, keepdims=True), M_FLOOR)
+    p = approx_exp_neg(s - m, exp_design)
+    l = jnp.sum(p, -1, keepdims=True)
+    o = jnp.einsum("nqk,nkd->nqd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32)
+    return (o * approx_recip_pos(jnp.maximum(l, 1e-30), recip_design)
+            ).astype(v.dtype)

@@ -1,0 +1,46 @@
+"""Jitted public wrapper: evaluate a TableDesign on arbitrary-shape codes."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.table import TableDesign
+from repro.kernels.interp.kernel import BLOCK_ROWS, LANES, interp_eval_2d
+from repro.kernels.interp.ref import interp_eval_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@partial(jax.jit, static_argnames=("eval_bits", "k", "sq_trunc", "lin_trunc",
+                                   "degree", "interpret"))
+def _eval_padded(codes, coeffs, *, eval_bits, k, sq_trunc, lin_trunc, degree,
+                 interpret):
+    n = codes.size
+    tile = BLOCK_ROWS * LANES
+    pad = (-n) % tile
+    flat = jnp.pad(codes.reshape(-1), (0, pad)).reshape(-1, LANES)
+    out = interp_eval_2d(flat, coeffs, eval_bits=eval_bits, k=k,
+                         sq_trunc=sq_trunc, lin_trunc=lin_trunc,
+                         degree=degree, interpret=interpret)
+    return out.reshape(-1)[:n].reshape(codes.shape)
+
+
+def table_eval(codes: jax.Array, design: TableDesign,
+               use_kernel: bool = True, interpret: bool | None = None) -> jax.Array:
+    """Evaluate ``design`` on int32 codes; Pallas kernel or jnp-ref path."""
+    codes = codes.astype(jnp.int32)
+    if not use_kernel:
+        coeffs64 = jnp.asarray(np.stack([design.a, design.b, design.c], 1))
+        return interp_eval_ref(codes, coeffs64, eval_bits=design.eval_bits,
+                               k=design.k, sq_trunc=design.sq_trunc,
+                               lin_trunc=design.lin_trunc, degree=design.degree)
+    coeffs = jnp.asarray(design.packed_coeffs())
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return _eval_padded(codes, coeffs, eval_bits=design.eval_bits, k=design.k,
+                        sq_trunc=design.sq_trunc, lin_trunc=design.lin_trunc,
+                        degree=design.degree, interpret=interpret)

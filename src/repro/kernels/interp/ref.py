@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the interp kernel (gather semantics, exact ints)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def interp_eval_ref(codes: jax.Array, coeffs: jax.Array, *, eval_bits: int,
+                    k: int, sq_trunc: int, lin_trunc: int, degree: int) -> jax.Array:
+    r = jax.lax.shift_right_logical(codes, eval_bits)
+    x = jnp.bitwise_and(codes, (1 << eval_bits) - 1)
+    sel = coeffs[r]
+    xs = jax.lax.shift_left(jax.lax.shift_right_logical(x, sq_trunc), sq_trunc)
+    xl = jax.lax.shift_left(jax.lax.shift_right_logical(x, lin_trunc), lin_trunc)
+    acc = sel[..., 1] * xl + sel[..., 2]
+    if degree == 2:
+        acc = acc + sel[..., 0] * xs * xs
+    return jax.lax.shift_right_arithmetic(acc, k)

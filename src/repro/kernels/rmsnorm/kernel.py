@@ -1,0 +1,56 @@
+"""Pallas TPU kernel: fused RMSNorm with a table-backed rsqrt.
+
+mean-square -> rsqrt via the generated table over [1, 4) (IEEE exponent
+split, odd/even-exponent segment select) -> scale by gamma. One (rows, D)
+pass; the rsqrt LUT is the paper-generated artifact.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.softmax.kernel import _lut
+
+BLOCK_ROWS = 8
+
+
+def _rmsnorm_kernel(x_ref, gamma_ref, coef_ref, out_ref, *, meta: dict, eps: float):
+    x = x_ref[...].astype(jnp.float32)  # (BLOCK_ROWS, D)
+    ms = jnp.mean(x * x, axis=-1, keepdims=True) + eps  # > 0
+    bits = jax.lax.bitcast_convert_type(ms, jnp.int32)
+    e = jnp.bitwise_and(jax.lax.shift_right_logical(bits, 23), 255) - 127
+    mant = jnp.bitwise_and(bits, (1 << 23) - 1)
+    b = meta["in_bits"]
+    halfcode = 1 << (b - 1)
+    rnd = 1 << (23 - (b - 1) - 1)
+    frac_code = jnp.clip(jax.lax.shift_right_logical(mant + rnd, 23 - (b - 1)),
+                         0, halfcode - 1)
+    even = jnp.bitwise_and(e, 1) == 0  # e even -> v = 1.mant in [1,2): segment 0
+    codes = jnp.where(even, frac_code, halfcode + frac_code)
+    h = jnp.where(even, e // 2, (e - 1) // 2)
+    tab = _lut(codes.astype(jnp.int32), coef_ref[...], **meta["eval"]).astype(jnp.float32)
+    rs = tab * (2.0 ** -meta["out_bits"]) * jnp.exp2(-h.astype(jnp.float32))
+    out_ref[...] = (x * rs * gamma_ref[...].astype(jnp.float32)).astype(out_ref.dtype)
+
+
+def fused_rmsnorm(x: jax.Array, gamma: jax.Array, coeffs: jax.Array, meta: dict,
+                  eps: float = 1e-6, interpret: bool = True) -> jax.Array:
+    rows, d = x.shape
+    assert rows % BLOCK_ROWS == 0 and d % 128 == 0, x.shape
+    nr = coeffs.shape[0]
+    kernel = functools.partial(_rmsnorm_kernel, meta=meta, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // BLOCK_ROWS,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((nr, 3), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=interpret,
+    )(x, gamma.reshape(1, d), coeffs)

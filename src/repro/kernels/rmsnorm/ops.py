@@ -1,0 +1,32 @@
+"""Jitted wrapper for the fused approx-RMSNorm kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.table import TableDesign
+from repro.kernels.rmsnorm.kernel import BLOCK_ROWS, fused_rmsnorm
+from repro.kernels.rmsnorm.ref import fused_rmsnorm_ref
+from repro.kernels.softmax.ops import _meta
+from repro.numerics.registry import get_table
+
+
+def approx_rmsnorm_fused(x: jax.Array, gamma: jax.Array,
+                         design: TableDesign | None = None, eps: float = 1e-6,
+                         use_kernel: bool = True,
+                         interpret: bool | None = None) -> jax.Array:
+    design = design or get_table("rsqrt")
+    coeffs = jnp.asarray(design.packed_coeffs())
+    meta = _meta(design)
+    shape = x.shape
+    d = shape[-1]
+    rows = x.size // d
+    xf = x.reshape(rows, d)
+    if not use_kernel:
+        return fused_rmsnorm_ref(xf, gamma, coeffs, meta, eps).reshape(shape)
+    pad = (-rows) % BLOCK_ROWS
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)), constant_values=1.0)
+    interpret = (jax.default_backend() != "tpu") if interpret is None else interpret
+    out = fused_rmsnorm(xf, gamma, coeffs, meta, eps=eps, interpret=interpret)
+    return out[:rows].reshape(shape)

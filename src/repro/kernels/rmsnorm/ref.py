@@ -1,0 +1,33 @@
+"""Oracle for the fused rmsnorm kernel (identical math, plain jnp gather)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_rmsnorm_ref(x, gamma, coeffs, meta, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    ms = jnp.mean(xf * xf, axis=-1, keepdims=True) + eps
+    bits = jax.lax.bitcast_convert_type(ms, jnp.int32)
+    e = jnp.bitwise_and(jax.lax.shift_right_logical(bits, 23), 255) - 127
+    mant = jnp.bitwise_and(bits, (1 << 23) - 1)
+    b = meta["in_bits"]
+    halfcode = 1 << (b - 1)
+    rnd = 1 << (23 - (b - 1) - 1)
+    frac_code = jnp.clip(jax.lax.shift_right_logical(mant + rnd, 23 - (b - 1)),
+                         0, halfcode - 1)
+    even = jnp.bitwise_and(e, 1) == 0
+    codes = jnp.where(even, frac_code, halfcode + frac_code).astype(jnp.int32)
+    h = jnp.where(even, e // 2, (e - 1) // 2)
+    ev = meta["eval"]
+    r = jax.lax.shift_right_logical(codes, ev["eval_bits"])
+    xi = jnp.bitwise_and(codes, (1 << ev["eval_bits"]) - 1)
+    sel = coeffs[r]
+    xs = jax.lax.shift_left(jax.lax.shift_right_logical(xi, ev["sq_trunc"]), ev["sq_trunc"])
+    xl = jax.lax.shift_left(jax.lax.shift_right_logical(xi, ev["lin_trunc"]), ev["lin_trunc"])
+    acc = sel[..., 1] * xl + sel[..., 2]
+    if ev["degree"] == 2:
+        acc = acc + sel[..., 0] * xs * xs
+    tab = jax.lax.shift_right_arithmetic(acc, ev["k"]).astype(jnp.float32)
+    rs = tab * (2.0 ** -meta["out_bits"]) * jnp.exp2(-h.astype(jnp.float32))
+    return (xf * rs * gamma.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: fused softmax with table-backed exp + reciprocal.
+
+The paper's generated "hardware" evaluated inside one fused pass:
+
+  1. row max (VPU reduction), t = (max - x) * log2(e) >= 0
+  2. exponential: 2^-t = 2^-n * table_exp(frac(t))   — LUT + poly datapath
+  3. row sum, then 1/sum via IEEE-754 exponent/mantissa split feeding the
+     reciprocal table over [1, 2)                     — second LUT datapath
+  4. scale.
+
+The mantissa split uses integer bit twiddles (bitcast) exactly like the RTL
+front-end the paper's reciprocal assumes (input already normalized to 1.x).
+Table reads are one-hot MXU contractions; see kernels/interp for rationale.
+Tiling: (BLOCK_ROWS, D) blocks, the whole feature dim resident in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_ROWS = 8
+LOG2E = 1.4426950408889634
+
+
+def _lut(codes: jax.Array, coeffs: jax.Array, *, eval_bits: int, k: int,
+         sq_trunc: int, lin_trunc: int, degree: int) -> jax.Array:
+    """One-hot table evaluation on int32 codes (any 2-D shape)."""
+    n_regions = coeffs.shape[0]
+    r = jax.lax.shift_right_logical(codes, eval_bits)
+    x = jnp.bitwise_and(codes, (1 << eval_bits) - 1)
+    flat_r = r.reshape(-1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (flat_r.shape[0], n_regions), 1)
+    onehot = (flat_r[:, None] == iota).astype(jnp.int32)
+    sel = jax.lax.dot_general(onehot, coeffs, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32
+                              ).reshape(codes.shape + (3,))
+    xs = jax.lax.shift_left(jax.lax.shift_right_logical(x, sq_trunc), sq_trunc)
+    xl = jax.lax.shift_left(jax.lax.shift_right_logical(x, lin_trunc), lin_trunc)
+    acc = sel[..., 1] * xl + sel[..., 2]
+    if degree == 2:
+        acc = acc + sel[..., 0] * xs * xs
+    return jax.lax.shift_right_arithmetic(acc, k)
+
+
+def _softmax_kernel(x_ref, ecoef_ref, rcoef_ref, out_ref, *, exp_meta: dict,
+                    recip_meta: dict):
+    x = x_ref[...].astype(jnp.float32)  # (BLOCK_ROWS, D)
+    m = jnp.max(x, axis=-1, keepdims=True)
+    t = jnp.minimum((m - x) * LOG2E, 126.0)
+    n = jnp.floor(t)
+    frac = t - n
+    eb = exp_meta["in_bits"]
+    codes = jnp.clip(jnp.round(frac * (1 << eb)).astype(jnp.int32), 0, (1 << eb) - 1)
+    tab = _lut(codes, ecoef_ref[...], **exp_meta["eval"]).astype(jnp.float32)
+    e = tab * (2.0 ** -exp_meta["out_bits"]) * jnp.exp2(-n)
+    s = jnp.sum(e, axis=-1, keepdims=True)  # > 0
+    # IEEE-754 split: s = 1.mant * 2^(E-127); reciprocal table wants 1.x codes
+    bits = jax.lax.bitcast_convert_type(s, jnp.int32)
+    expo = jnp.bitwise_and(jax.lax.shift_right_logical(bits, 23), 255) - 127
+    mant = jnp.bitwise_and(bits, (1 << 23) - 1)
+    rb = recip_meta["in_bits"]
+    half = 1 << (23 - rb - 1)
+    rcodes = jnp.clip(jax.lax.shift_right_logical(mant + half, 23 - rb),
+                      0, (1 << rb) - 1)
+    rtab = _lut(rcodes, rcoef_ref[...], **recip_meta["eval"]).astype(jnp.float32)
+    recip = rtab * (2.0 ** -(rb + 1)) * jnp.exp2(-expo.astype(jnp.float32))
+    out_ref[...] = (e * recip).astype(out_ref.dtype)
+
+
+def fused_softmax(x: jax.Array, exp_coeffs: jax.Array, recip_coeffs: jax.Array,
+                  exp_meta: dict, recip_meta: dict,
+                  interpret: bool = True) -> jax.Array:
+    """x: (rows, D) with rows % BLOCK_ROWS == 0, D % 128 == 0."""
+    rows, d = x.shape
+    assert rows % BLOCK_ROWS == 0 and d % 128 == 0, x.shape
+    kernel = functools.partial(_softmax_kernel, exp_meta=exp_meta,
+                               recip_meta=recip_meta)
+    ne, nr = exp_coeffs.shape[0], recip_coeffs.shape[0]
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // BLOCK_ROWS,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, d), lambda i: (i, 0)),
+            pl.BlockSpec((ne, 3), lambda i: (0, 0)),
+            pl.BlockSpec((nr, 3), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=interpret,
+    )(x, exp_coeffs, recip_coeffs)

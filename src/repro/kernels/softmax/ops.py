@@ -1,0 +1,53 @@
+"""Jitted wrapper for the fused approx-softmax kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.table import TableDesign
+from repro.kernels.softmax.kernel import BLOCK_ROWS, fused_softmax
+from repro.kernels.softmax.ref import fused_softmax_ref
+from repro.numerics.registry import get_table
+
+
+def _meta(design: TableDesign) -> dict:
+    return {
+        "in_bits": design.in_bits,
+        "out_bits": design.out_bits,
+        "eval": {
+            "eval_bits": design.eval_bits,
+            "k": design.k,
+            "sq_trunc": design.sq_trunc,
+            "lin_trunc": design.lin_trunc,
+            "degree": design.degree,
+        },
+    }
+
+
+def approx_softmax_fused(x: jax.Array,
+                         exp_design: TableDesign | None = None,
+                         recip_design: TableDesign | None = None,
+                         use_kernel: bool = True,
+                         interpret: bool | None = None) -> jax.Array:
+    """Fused softmax over the last axis; leading axes are flattened to rows.
+
+    Rows are padded to the 8-row block; the feature dim must be a multiple
+    of 128 (the serving attention shapes used by the examples all are).
+    """
+    exp_design = exp_design or get_table("exp2neg")
+    recip_design = recip_design or get_table("recip")
+    ec = jnp.asarray(exp_design.packed_coeffs())
+    rc = jnp.asarray(recip_design.packed_coeffs())
+    em, rm = _meta(exp_design), _meta(recip_design)
+    shape = x.shape
+    d = shape[-1]
+    rows = x.size // d
+    xf = x.reshape(rows, d)
+    if not use_kernel:
+        return fused_softmax_ref(xf, ec, rc, em, rm).reshape(shape)
+    pad = (-rows) % BLOCK_ROWS
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    interpret = (jax.default_backend() != "tpu") if interpret is None else interpret
+    out = fused_softmax(xf, ec, rc, em, rm, interpret=interpret)
+    return out[:rows].reshape(shape)

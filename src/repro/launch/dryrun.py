@@ -1,0 +1,197 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+"""Multi-pod dry-run (deliverable e): lower + compile every
+(architecture x input-shape x mesh) cell on 512 placeholder devices and dump
+memory_analysis / cost_analysis / HLO-parsed collective bytes to JSON.
+
+The two lines above run before ANY other import — jax locks the device count
+on first init. Do not move them.
+
+Usage:
+    python -m repro.launch.dryrun --arch yi_6b --shape train_4k [--multi-pod]
+    python -m repro.launch.dryrun --all [--out artifacts/dryrun]
+"""
+
+import argparse
+import json
+import pathlib
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import (ARCH_IDS, SHAPES, ModelConfig, ShapeConfig,
+                                cell_is_runnable, get_config)
+from repro.launch import sharding as shlib
+from repro.launch.xprof import analyze_hlo
+from repro.launch.inputs import batch_shapes, input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.models import transformer as tf
+from repro.numerics.ops import get_numerics
+from repro.serve.engine import make_serve_step
+from repro.train.step import StepConfig, make_train_step, train_state_shapes
+
+DEFAULT_OUT = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def _train_lowered(cfg: ModelConfig, shape: ShapeConfig, mesh, step_cfg: StepConfig):
+    state_shapes = train_state_shapes(cfg, step_cfg)
+    b_shapes = batch_shapes(cfg, shape.global_batch, shape.seq_len)
+    state_sh = shlib.param_specs(state_shapes, mesh)
+    batch_sh = shlib.batch_specs(b_shapes, mesh)
+    rep = shlib.replicated(mesh)
+    step = make_train_step(cfg, step_cfg)
+    jitted = jax.jit(
+        step,
+        in_shardings=(state_sh, batch_sh, rep),
+        out_shardings=(state_sh, jax.tree.map(lambda _: rep, {
+            "loss": 0, "aux": 0, "lr": 0, "grad_norm": 0})),
+        donate_argnums=0,
+    )
+    with shlib.axis_rules(mesh):
+        return jitted.lower(state_shapes, b_shapes,
+                            jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def _prefill_lowered(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    numerics = get_numerics(cfg.numerics)
+    specs = input_specs(cfg, shape)
+    p_shapes = tf.model_shapes(cfg)
+    p_sh = shlib.param_specs(p_shapes, mesh)
+    extras = {k: specs[k] for k in ("frontend_emb", "enc_frames") if k in specs}
+
+    def pf(params, tokens, extras):
+        logits, caches, cross = tf.prefill(params, tokens, cfg, numerics,
+                                           shape.seq_len,
+                                           frontend_emb=extras.get("frontend_emb"),
+                                           enc_frames=extras.get("enc_frames"))
+        return logits, caches
+
+    in_sh = (p_sh,
+             shlib.batch_specs({"t": specs["tokens"]}, mesh)["t"],
+             shlib.batch_specs(extras, mesh))
+    jitted = jax.jit(pf, in_shardings=in_sh)
+    with shlib.axis_rules(mesh):
+        return jitted.lower(p_shapes, specs["tokens"], extras)
+
+
+def _decode_lowered(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    specs = input_specs(cfg, shape)
+    p_shapes = tf.model_shapes(cfg)
+    p_sh = shlib.param_specs(p_shapes, mesh)
+    tok_sh = shlib.batch_specs({"t": specs["token"]}, mesh)["t"]
+    cache_sh = shlib.cache_specs_sharding(specs["caches"], cfg, mesh)
+    rep = shlib.replicated(mesh)
+    step = make_serve_step(cfg)
+    in_sh = [p_sh, tok_sh, rep, cache_sh]
+    args = [p_shapes, specs["token"], specs["pos"], specs["caches"]]
+    if "cross" in specs:
+        in_sh.append(shlib.batch_specs({"c": specs["cross"]}, mesh)["c"])
+        args.append(specs["cross"])
+    jitted = jax.jit(step, in_shardings=tuple(in_sh),
+                     donate_argnums=3)
+    with shlib.axis_rules(mesh):
+        return jitted.lower(*args)
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool = False,
+               step_cfg: StepConfig | None = None, cfg: ModelConfig | None = None):
+    cfg = cfg or get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    step_cfg = step_cfg or StepConfig(
+        microbatches=1, compress_pods=multi_pod)
+    if shape.kind == "train":
+        return _train_lowered(cfg, shape, mesh, step_cfg), mesh
+    if shape.kind == "prefill":
+        return _prefill_lowered(cfg, shape, mesh), mesh
+    return _decode_lowered(cfg, shape, mesh), mesh
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool = False,
+             out_dir: pathlib.Path | None = None, save_hlo: bool = False,
+             cfg: ModelConfig | None = None, tag: str = "",
+             step_cfg: StepConfig | None = None) -> dict:
+    shape = SHAPES[shape_name]
+    the_cfg = cfg or get_config(arch)
+    ok, why = cell_is_runnable(the_cfg, shape)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        if out_dir is not None:
+            out_dir.mkdir(parents=True, exist_ok=True)
+            (out_dir / f"{arch}_{shape_name}_{mesh_name}{tag}.json").write_text(
+                json.dumps(rec, indent=1, default=str))
+        return rec
+    t0 = time.perf_counter()
+    try:
+        lowered, mesh = lower_cell(arch, shape_name, multi_pod, cfg=cfg,
+                                   step_cfg=step_cfg)
+        t_lower = time.perf_counter() - t0
+        compiled = lowered.compile()
+        t_compile = time.perf_counter() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        prof = analyze_hlo(hlo)
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            memory={
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+            },
+            # raw HloCostAnalysis numbers (loop bodies counted once — kept
+            # for reference); the roofline uses the trip-scaled profile
+            xla_cost_flops=cost.get("flops", 0.0) if cost else None,
+            xla_cost_bytes=cost.get("bytes accessed", 0.0) if cost else None,
+            profile=prof.to_dict(),
+        )
+        if save_hlo and out_dir is not None:
+            (out_dir / f"{arch}_{shape_name}_{mesh_name}{tag}.hlo.txt").write_text(hlo)
+    except Exception as e:  # a failure here is a bug in our sharding
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    if out_dir is not None:
+        out_dir.mkdir(parents=True, exist_ok=True)
+        (out_dir / f"{arch}_{shape_name}_{mesh_name}{tag}.json").write_text(
+            json.dumps(rec, indent=1, default=str))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default=str(DEFAULT_OUT))
+    args = ap.parse_args()
+    out = pathlib.Path(args.out)
+
+    cells = ([(a, s, m) for a in ARCH_IDS for s in SHAPES for m in (False, True)]
+             if args.all else [(args.arch, args.shape, args.multi_pod)])
+    n_ok = n_skip = n_err = 0
+    for arch, shape, multi in cells:
+        rec = run_cell(arch, shape, multi, out, save_hlo=args.save_hlo, tag=args.tag)
+        n_ok += rec["status"] == "ok"
+        n_skip += rec["status"] == "skipped"
+        n_err += rec["status"] == "error"
+        msg = rec.get("error", "") or f"compile {rec.get('compile_s', '-')}s"
+        print(f"[{rec['status']:>7}] {arch:18s} {shape:12s} {rec['mesh']:10s} {msg}",
+              flush=True)
+    print(f"done: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+    raise SystemExit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

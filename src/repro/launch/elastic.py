@@ -1,0 +1,45 @@
+"""Elastic scaling: re-shard a checkpoint onto a different device count.
+
+When the straggler telemetry (train/trainer.py) or the fleet scheduler drops
+hosts, the controller calls ``reshard_checkpoint``: the training state is
+loaded host-side (numpy), new shardings are derived from the same rule
+engine on the *new* mesh, and the arrays are device_put with the new layout.
+Nothing about the rules is mesh-shape specific — the divisibility-checked
+fallback chain picks new axes automatically (e.g. vocab sharded 16-way
+re-shards 8-way, or falls to replication on a single device).
+
+Also hosts ``remesh_state`` for in-memory re-sharding (no checkpoint round
+trip) when the new mesh is visible from the same process.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.checkpoint import latest_step, restore
+from repro.launch import sharding as shlib
+
+
+def remesh_state(state, new_mesh, rules: dict | None = None):
+    """Re-device_put a (possibly sharded) pytree onto a new mesh."""
+    shapes = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+    specs = shlib.param_specs(shapes, new_mesh, rules)
+    host = jax.tree.map(lambda x: jax.device_get(x), state)
+    return jax.tree.map(lambda a, s: jax.device_put(a, s), host, specs)
+
+
+def reshard_checkpoint(ckpt_dir: str, like, new_mesh, step: int | None = None,
+                       rules: dict | None = None):
+    """Load the latest (or given) checkpoint and place it on ``new_mesh``.
+
+    Returns (step, resharded state). ``like`` provides the pytree structure
+    (ShapeDtypeStructs or arrays).
+    """
+    s = latest_step(ckpt_dir) if step is None else step
+    if s is None:
+        raise FileNotFoundError(f"no committed checkpoint under {ckpt_dir}")
+    host_state, _ = restore(ckpt_dir, s, like)
+    shapes = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), host_state)
+    specs = shlib.param_specs(shapes, new_mesh, rules)
+    return s, jax.tree.map(lambda a, sp: jax.device_put(a, sp), host_state, specs)

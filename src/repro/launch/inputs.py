@@ -1,0 +1,53 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run signature).
+
+``input_specs(cfg, shape)`` returns the abstract arguments for the jit'd
+step that cell lowers: a training batch for ``train_*`` shapes, a prompt
+batch for ``prefill_*``, and (token, pos, caches) for ``decode_*`` /
+``long_*`` — one new token against a seq_len-deep cache, per the shape table.
+No device allocation happens anywhere here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as tf
+from repro.models.layers import spec
+
+
+def batch_shapes(cfg: ModelConfig, b: int, s: int) -> dict:
+    out = {
+        "tokens": spec((b, s), jnp.int32),
+        "labels": spec((b, s), jnp.int32),
+        "mask": spec((b, s), jnp.float32),
+    }
+    if cfg.frontend == "vision_stub":
+        out["frontend_emb"] = spec((b, cfg.frontend_len, cfg.frontend_dim), jnp.float32)
+    elif cfg.frontend == "audio_stub":
+        out["enc_frames"] = spec((b, cfg.encoder.source_len, cfg.d_model), jnp.float32)
+    return out
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """Abstract inputs keyed by argument name, per the cell's step kind."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return {"batch": batch_shapes(cfg, b, s)}
+    if shape.kind == "prefill":
+        out = {"tokens": spec((b, s), jnp.int32)}
+        if cfg.frontend == "vision_stub":
+            out["frontend_emb"] = spec((b, cfg.frontend_len, cfg.frontend_dim), jnp.float32)
+        if cfg.encoder is not None:
+            out["enc_frames"] = spec((b, cfg.encoder.source_len, cfg.d_model), jnp.float32)
+        return out
+    # decode: one token against a seq_len-deep cache
+    out = {
+        "token": spec((b, 1), jnp.int32),
+        "pos": spec((), jnp.int32),
+        "caches": tf.cache_shapes(cfg, b, s),
+    }
+    if cfg.encoder is not None:
+        out["cross"] = spec((b, cfg.encoder.source_len, cfg.d_model),
+                            jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32)
+    return out

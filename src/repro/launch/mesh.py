@@ -1,0 +1,37 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state — required because the dry-run
+forces 512 host devices while tests/benches must see 1.
+
+Axes:
+  * ``pod``   — outer data parallelism across pods; crosses DCN. Gradient
+    all-reduce on this axis is the slow hop (int8 EF compression applies).
+  * ``data``  — data parallelism / FSDP (ZeRO-3 parameter+optimizer sharding)
+    inside a pod; ICI.
+  * ``model`` — tensor parallelism (Megatron column/row), expert parallelism
+    for MoE, and sequence parallelism for long-context serving; ICI.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Whatever this host actually has (tests, examples)."""
+    n = len(jax.devices())
+    assert n % model == 0
+    return jax.make_mesh((n // model, model), ("data", "model"))
+
+
+# TPU v5e-class hardware constants used by the roofline (DESIGN.md §2)
+PEAK_FLOPS_BF16 = 197e12  # per chip
+HBM_BW = 819e9  # bytes/s per chip
+ICI_BW = 50e9  # bytes/s per link (~per-direction per chip, 1 axis)
+DCN_BW = 6.25e9  # bytes/s per chip cross-pod (50 Gbit)

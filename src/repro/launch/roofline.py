@@ -1,0 +1,155 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape x mesh)
+cell from the dry-run profiles.
+
+    compute    = HLO_FLOPs_per_chip / peak_FLOP/s
+    memory     = HLO_bytes_per_chip / HBM_bw
+    collective = collective_bytes_per_chip / link_bw
+
+All three are *seconds per step on one chip's resources* — the bottleneck is
+the largest. MODEL_FLOPS = 6 N D (dense) or 6 N_active D (MoE); the ratio
+MODEL_FLOPS / HLO_FLOPs measures how much compiled compute is useful
+(remat/redundancy waste shows up here). The profile numbers are already
+per-chip (SPMD-partitioned HLO), trip-count scaled by launch/xprof.py.
+
+Usage: python -m repro.launch.roofline [--dir artifacts/dryrun] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+
+from repro.configs.base import ARCH_IDS, SHAPES, get_config
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+DEFAULT_DIR = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+# ---------------------------------------------------------------------------
+# analytic parameter counts / useful-FLOPs model
+# ---------------------------------------------------------------------------
+
+def param_counts(cfg) -> tuple[int, int]:
+    """(total params, active-per-token params) from the config alone."""
+    from repro.models.layers import count_params
+    from repro.models.transformer import model_shapes
+    total = count_params(model_shapes(cfg))
+    active = total
+    if cfg.moe is not None:
+        m = cfg.moe
+        # routed expert params counted per layer: only top_k of n_experts fire
+        per_expert = 3 * cfg.d_model * m.d_expert  # SwiGLU wi(2f) + wo(f)
+        n_moe_layers = _n_moe_layers(cfg)
+        active = total - n_moe_layers * (m.n_experts - m.top_k) * per_expert
+    return total, active
+
+
+def _n_moe_layers(cfg) -> int:
+    from repro.models.transformer import layer_plan
+    n = 0
+    for seg in layer_plan(cfg):
+        n += sum(k.ffn == "moe" for k in seg.pattern) * seg.repeat
+    return n
+
+
+def model_flops(cfg, shape, kind: str) -> float:
+    """Useful FLOPs per step: 6 N_active D for training, 2 N_active per
+    decoded token for decode, 2 N_active D for prefill."""
+    _, active = param_counts(cfg)
+    if kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * active * tokens
+    if kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * active * tokens
+    return 2.0 * active * shape.global_batch  # decode: one token per row
+
+
+# ---------------------------------------------------------------------------
+# report
+# ---------------------------------------------------------------------------
+
+def cell_roofline(rec: dict) -> dict | None:
+    if rec.get("status") != "ok" or "profile" not in rec:
+        return None
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    chips = 512 if rec["mesh"] == "pod2x16x16" else 256
+    prof = rec["profile"]
+    t_c = prof["flops"] / PEAK_FLOPS_BF16
+    t_m = prof["hbm_bytes"] / HBM_BW
+    t_l = prof["total_collective_bytes"] / ICI_BW
+    useful = model_flops(cfg, shape, shape.kind)
+    useful_per_chip = useful / chips
+    terms = {"compute": t_c, "memory": t_m, "collective": t_l}
+    dom = max(terms, key=terms.get)
+    bound = max(t_c, t_m, t_l)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "tag": rec.get("tag", ""),
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_l,
+        "dominant": dom,
+        "model_flops": useful, "hlo_flops_per_chip": prof["flops"],
+        "useful_ratio": useful_per_chip / prof["flops"] if prof["flops"] else 0.0,
+        # fraction of roofline: useful work at peak over the bound term
+        "roofline_frac": (useful_per_chip / PEAK_FLOPS_BF16) / bound if bound else 0.0,
+        "temp_bytes": rec["memory"]["temp_bytes"],
+    }
+
+
+def load_records(d: pathlib.Path, tag: str = "") -> list[dict]:
+    out = []
+    for f in sorted(d.glob("*.json")):
+        rec = json.loads(f.read_text())
+        if rec.get("tag", "") == tag:
+            out.append(rec)
+    return out
+
+
+def fmt_s(x: float) -> str:
+    return f"{x*1e3:8.2f}ms" if x >= 1e-4 else f"{x*1e6:8.1f}us"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=str(DEFAULT_DIR))
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    rows = []
+    for rec in load_records(pathlib.Path(args.dir), args.tag):
+        r = cell_roofline(rec)
+        if r is None:
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "mesh": rec["mesh"], "status": rec["status"],
+                         "reason": rec.get("reason", rec.get("error", ""))[:60]})
+        else:
+            r["status"] = "ok"
+            rows.append(r)
+    if args.md:
+        print("| arch | shape | mesh | compute | memory | collective | bound |"
+              " useful/HLO | roofline |")
+        print("|---|---|---|---|---|---|---|---|---|")
+        for r in rows:
+            if r["status"] != "ok":
+                print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | - | - | - |"
+                      f" {r['status']}: {r['reason']} | - | - |")
+            else:
+                print(f"| {r['arch']} | {r['shape']} | {r['mesh']} |"
+                      f" {fmt_s(r['compute_s'])} | {fmt_s(r['memory_s'])} |"
+                      f" {fmt_s(r['collective_s'])} | {r['dominant']} |"
+                      f" {r['useful_ratio']:.2f} | {r['roofline_frac']:.3f} |")
+    else:
+        for r in rows:
+            if r["status"] != "ok":
+                print(f"{r['arch']:18s} {r['shape']:12s} {r['mesh']:10s} "
+                      f"{r['status']}: {r['reason']}")
+            else:
+                print(f"{r['arch']:18s} {r['shape']:12s} {r['mesh']:10s} "
+                      f"C {fmt_s(r['compute_s'])}  M {fmt_s(r['memory_s'])}  "
+                      f"L {fmt_s(r['collective_s'])}  -> {r['dominant']:10s} "
+                      f"useful {r['useful_ratio']:.2f}  roofline {r['roofline_frac']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,70 @@
+"""Training launcher CLI.
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi_6b --smoke \
+        --steps 50 --seq-len 256 --global-batch 8 [--numerics interp]
+
+``--smoke`` selects the reduced config (CPU-runnable); without it the full
+config is used (requires real accelerators). SIGTERM triggers a clean
+save-and-exit (preemption handling). On a multi-host fleet this same entry
+point runs per host under ``jax.distributed.initialize``; host sharding of
+the batch comes from the data pipeline's ``lo/hi`` slicing.
+"""
+from __future__ import annotations
+
+import argparse
+import signal
+
+import jax
+
+from repro.configs.base import ARCH_IDS, get_config, get_smoke_config
+from repro.launch import sharding as shlib
+from repro.launch.mesh import make_host_mesh
+from repro.train.step import StepConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--warmup", type=int, default=20)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--numerics", choices=["exact", "interp"], default=None)
+    ap.add_argument("--model-parallel", type=int, default=1)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    if args.numerics:
+        cfg = cfg.replace(numerics=args.numerics)
+
+    tc = TrainerConfig(
+        steps=args.steps, ckpt_dir=f"{args.ckpt_dir}/{args.arch}",
+        ckpt_every=args.ckpt_every, seq_len=args.seq_len,
+        global_batch=args.global_batch, seed=args.seed,
+        step=StepConfig(microbatches=args.microbatches, peak_lr=args.lr,
+                        warmup=args.warmup, total_steps=args.steps),
+    )
+    mesh = make_host_mesh(args.model_parallel)
+
+    def shard_batch(b):
+        sh = shlib.batch_specs({k: v for k, v in b.items()}, mesh)
+        return jax.tree.map(jax.device_put, b, sh)
+
+    trainer = Trainer(cfg, tc, mesh=mesh, shard_batch=shard_batch)
+    signal.signal(signal.SIGTERM, lambda *_: trainer.request_stop())
+    with mesh, shlib.axis_rules(mesh):
+        hist = trainer.run()
+    if trainer.stragglers:
+        print(f"stragglers: {trainer.stragglers[:5]}")
+    print(f"final loss {hist[-1]['loss']:.4f} over {len(hist)} steps")
+
+
+if __name__ == "__main__":
+    main()

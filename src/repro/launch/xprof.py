@@ -1,0 +1,322 @@
+"""Structural HLO profiler: trip-count-scaled FLOPs / HBM bytes / collective
+bytes from compiled HLO text.
+
+Why not ``compiled.cost_analysis()``: XLA's HloCostAnalysis counts each
+while-loop *body once*, so any scanned-layer model (every model here) is
+under-counted by the scan length. This profiler splits the module into
+computations, walks the call graph (while bodies x known_trip_count, fusion
+bodies inline), and accumulates:
+
+  * **flops** — 2 x M x N x K for every ``dot`` (including dots inside fusion
+    bodies), the MXU-relevant count. Elementwise FLOPs are not counted
+    (<~3% for these models); noted in EXPERIMENTS.md.
+  * **hbm_bytes** — 2 x sum of top-level op output bytes (one write + ~one
+    read per produced value). Ops inside fusion bodies are VMEM/register
+    traffic and excluded; parameters/tuples/GTEs/bitcasts move no data.
+  * **collective bytes** — per-chip ring-model bytes by kind (see factors),
+    trip-count scaled.
+
+Trip counts come from ``backend_config={"known_trip_count":{"n":...}}``
+(emitted by XLA's while-loop analysis), falling back to the largest integer
+constant in the loop condition.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(pred|[suf]\d+|bf16|c\d+)\[([\d,]*)\]")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_WHILE_RE = re.compile(r"\bwhile\(.*condition=%?([\w\.\-]+).*body=%?([\w\.\-]+)")
+_FUSION_RE = re.compile(r"\b(?:fusion|call)\(.*?(?:calls|to_apply)=%?([\w\.\-]+)")
+_COND_RE = re.compile(
+    r"\bconditional\(.*?(?:branch_computations=\{([^}]+)\}|"
+    r"true_computation=%?([\w\.\-]+).*?false_computation=%?([\w\.\-]+))")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_OPCODE_RE = re.compile(r"=\s*(?:\([^=]*?\)|[\w\[\]\{\},\/ ]+?)\s+([\w\-]+)\(")
+_DOT_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_COMP_HDR_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+_COLL_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+_NO_TRAFFIC = {"parameter", "constant", "tuple", "get-tuple-element",
+               "bitcast", "while", "after-all", "partition-id", "replica-id",
+               "get-dimension-size", "opt-barrier", "domain"}
+
+_FACTORS = {
+    "all-gather": lambda g: (g - 1) / g,
+    "all-reduce": lambda g: 2 * (g - 1) / g,
+    "reduce-scatter": lambda g: float(g - 1),  # x output bytes
+    "all-to-all": lambda g: (g - 1) / g,
+    "collective-permute": lambda g: 1.0,
+}
+
+
+def _shapes_in(s: str) -> list[tuple[str, int]]:
+    out = []
+    for dt, dims in _SHAPE_RE.findall(s):
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        out.append((dt, n))
+    return out
+
+
+def _bytes_of(shapes: list[tuple[str, int]]) -> int:
+    return sum(n * _DTYPE_BYTES[dt] for dt, n in shapes)
+
+
+def _result_type_str(line: str) -> str:
+    """Text between '=' and the opcode's '(' — the result type."""
+    m = _OPCODE_RE.search(line)
+    if not m:
+        return ""
+    return line[line.index("=") + 1: m.start(1)]
+
+
+def _group_size(line: str) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return 1
+
+
+@dataclasses.dataclass
+class HloProfile:
+    flops: float
+    hbm_bytes: float
+    collective_bytes: dict  # kind -> per-chip bytes
+    collective_count: dict  # kind -> static op count
+    trip_counts: list
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return float(sum(self.collective_bytes.values()))
+
+    def to_dict(self) -> dict:
+        return {"flops": self.flops, "hbm_bytes": self.hbm_bytes,
+                "collective_bytes": dict(self.collective_bytes),
+                "collective_count": dict(self.collective_count),
+                "total_collective_bytes": self.total_collective_bytes,
+                "trip_counts": self.trip_counts[:24]}
+
+
+def _split_computations(hlo_text: str) -> tuple[dict[str, list[str]], str | None]:
+    comps: dict[str, list[str]] = {}
+    entry = None
+    cur: list[str] | None = None
+    for raw in hlo_text.splitlines():
+        line = _COMMENT_RE.sub("", raw).rstrip()  # /*index=5*/ breaks [^=]
+        if cur is None or (line and not line.startswith(" ")):
+            m = _COMP_HDR_RE.match(line.strip())
+            if m:
+                name = m.group(2)
+                comps[name] = cur = []
+                if m.group(1):
+                    entry = name
+                continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is not None:
+            cur.append(line)
+    return comps, entry
+
+
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=")
+_OPERAND_RE = re.compile(r"\(\s*%([\w\.\-]+)")
+
+
+def _build_symtab(comps: dict[str, list[str]]) -> dict[str, list[int]]:
+    """op name -> result dims (first array shape in the result type)."""
+    tab: dict[str, list[int]] = {}
+    for lines in comps.values():
+        for line in lines:
+            md = _DEF_RE.match(line)
+            if not md:
+                continue
+            res = _result_type_str(line) or line.split("=", 1)[1][:160]
+            ms = _SHAPE_RE.search(res)
+            if ms:
+                tab[md.group(1)] = [int(d) for d in ms.group(2).split(",") if d]
+    return tab
+
+
+def _dot_flops(line: str, symtab: dict[str, list[int]]) -> float:
+    """2 x prod(result dims) x prod(lhs contracting dims)."""
+    res_shapes = _shapes_in(_result_type_str(line))
+    if not res_shapes:
+        return 0.0
+    out_elems = res_shapes[0][1]
+    # optimized HLO omits operand types inline: resolve lhs via symbol table
+    mo = _OPCODE_RE.search(line)
+    oper = _OPERAND_RE.search(line[mo.end(1):])
+    cd = _DOT_DIMS_RE.search(line)
+    k = 1
+    if cd and oper:
+        lhs_dims = symtab.get(oper.group(1), [])
+        for ax in (int(a) for a in cd.group(1).split(",") if a):
+            if ax < len(lhs_dims):
+                k *= lhs_dims[ax]
+    return 2.0 * out_elems * k
+
+
+def analyze_hlo(hlo_text: str) -> HloProfile:
+    comps, entry = _split_computations(hlo_text)
+    symtab = _build_symtab(comps)
+    coll_count: dict = defaultdict(int)
+    trips_seen: list[int] = []
+    memo: dict[tuple[str, bool], tuple] = {}
+
+    def visit(name: str, internal: bool, stack=()):
+        """Returns (flops, bytes, coll: dict) for ONE execution."""
+        key = (name, internal)
+        if key in memo:
+            return memo[key]
+        if name not in comps or name in stack:
+            return 0.0, 0.0, {}
+        flops = 0.0
+        byts = 0.0
+        coll: dict = defaultdict(float)
+        for line in comps[name]:
+            mo = _OPCODE_RE.search(line)
+            opcode = mo.group(1) if mo else ""
+            if opcode in ("dot", "convolution"):
+                flops += _dot_flops(line, symtab)
+            mc = _COLL_RE.search(line)
+            if mc and "-done" not in line:
+                g = _group_size(line)
+                kind = mc.group(1)
+                if g > 1 or kind == "collective-permute":
+                    shapes = _shapes_in(_result_type_str(line))
+                    # async -start forms type as (input, ..., output): the
+                    # last array shape is the transferred result buffer
+                    payload = _bytes_of(shapes[-1:])
+                    coll[kind] += payload * _FACTORS[kind](g)
+                    coll_count[kind] += 1
+            mw = _WHILE_RE.search(line)
+            if mw:
+                mt = _TRIP_RE.search(line)
+                if mt:
+                    trips = int(mt.group(1))
+                else:
+                    best = 1
+                    for cl in comps.get(mw.group(1), []):
+                        for c in _CONST_RE.findall(cl):
+                            best = max(best, int(c))
+                    trips = best
+                trips_seen.append(trips)
+                f, b, c = visit(mw.group(2), internal, stack + (name,))
+                flops += trips * f
+                byts += trips * b
+                for k, v in c.items():
+                    coll[k] += trips * v
+                continue
+            md = _COND_RE.search(line)
+            if md:
+                # data-dependent branch (e.g. flash-attention chunk-skip):
+                # weight each branch by its expected execution probability
+                # (uniform 1/n — for causal chunk-skipping the true rate is
+                # ~(nq+1)/2nq ~= 0.5, so this is the honest estimate)
+                branches = ([x.strip().lstrip("%") for x in md.group(1).split(",")]
+                            if md.group(1) else [md.group(2), md.group(3)])
+                w = 1.0 / max(len(branches), 1)
+                for br in branches:
+                    f, bb, c = visit(br, internal, stack + (name,))
+                    flops += w * f
+                    byts += w * bb
+                    for k, v in c.items():
+                        coll[k] += w * v
+                continue
+            mf = _FUSION_RE.search(line)
+            if mf:
+                f, b, c = visit(mf.group(1), True, stack + (name,))
+                flops += f  # dots inside fusions still burn MXU flops
+                for k, v in c.items():
+                    coll[k] += v
+            if not internal and opcode and opcode not in _NO_TRAFFIC:
+                byts += 2.0 * _bytes_of(_shapes_in(_result_type_str(line)))
+        memo[key] = (flops, byts, dict(coll))
+        return memo[key]
+
+    if entry is None and comps:
+        entry = list(comps)[-1]
+    flops, byts, coll = visit(entry, False) if entry else (0.0, 0.0, {})
+    return HloProfile(flops, byts, dict(coll), dict(coll_count), trips_seen)
+
+
+def breakdown(hlo_text: str, top: int = 20) -> list[dict]:
+    """Per-op_name aggregation of trip-scaled bytes / flops / collective
+    bytes — the 'where is it going' view used by the perf hillclimb."""
+    comps, entry = _split_computations(hlo_text)
+    symtab = _build_symtab(comps)
+    execn: dict = defaultdict(float)
+
+    def walk(name: str, mult: float, internal: bool, stack=()):
+        if name in stack or name not in comps:
+            return
+        execn[(name, internal)] = execn.get((name, internal), 0.0) + mult
+        for line in comps[name]:
+            mw = _WHILE_RE.search(line)
+            if mw:
+                mt = _TRIP_RE.search(line)
+                trips = int(mt.group(1)) if mt else 1
+                walk(mw.group(2), mult * trips, internal, stack + (name,))
+                continue
+            md = _COND_RE.search(line)
+            if md:
+                branches = ([x.strip().lstrip("%") for x in md.group(1).split(",")]
+                            if md.group(1) else [md.group(2), md.group(3)])
+                for br in branches:
+                    walk(br, mult / max(len(branches), 1), internal,
+                         stack + (name,))
+                continue
+            mf = _FUSION_RE.search(line)
+            if mf:
+                walk(mf.group(1), mult, True, stack + (name,))
+
+    if entry is None and comps:
+        entry = list(comps)[-1]
+    walk(entry, 1.0, False)
+
+    agg: dict = {}
+    meta_re = re.compile(r'op_name="([^"]+)"')
+    for (name, internal), mult in execn.items():
+        for line in comps[name]:
+            mo = _OPCODE_RE.search(line)
+            opcode = mo.group(1) if mo else ""
+            if not opcode:
+                continue
+            mm = meta_re.search(line)
+            op_name = mm.group(1) if mm else f"({opcode})"
+            key = op_name[:110]
+            e = agg.setdefault(key, {"op": key, "bytes": 0.0, "flops": 0.0,
+                                     "coll_bytes": 0.0})
+            if opcode in ("dot", "convolution"):
+                e["flops"] += mult * _dot_flops(line, symtab)
+            mc = _COLL_RE.search(line)
+            if mc and "-done" not in line:
+                g = _group_size(line)
+                if g > 1 or mc.group(1) == "collective-permute":
+                    shapes = _shapes_in(_result_type_str(line))
+                    e["coll_bytes"] += mult * _bytes_of(shapes[-1:]) * _FACTORS[mc.group(1)](g)
+            if not internal and opcode not in _NO_TRAFFIC:
+                e["bytes"] += mult * 2.0 * _bytes_of(_shapes_in(_result_type_str(line)))
+    rows = sorted(agg.values(), key=lambda r: -(r["bytes"] + r["coll_bytes"]))
+    return rows[:top]

@@ -1,0 +1,119 @@
+"""Mixture-of-experts: token-choice top-k routing with capacity-bounded
+per-example dispatch and intra-expert tensor parallelism.
+
+Sharding design (perf iteration A1, EXPERIMENTS.md §Perf — the original
+global-capacity formulation replicated an (E, C_global, d) dispatch buffer on
+every chip because E=8/64/16 never divides the 16-way model axis; measured
+2.9e13 collective bytes/chip/step on mixtral train_4k):
+
+  * dispatch runs *per example*: position-in-expert cumsum over one example's
+    S*k assignments only — no cross-device sequential dependency, batch axis
+    keeps its DP sharding, capacity is the standard GShard group capacity
+    with group = one example.
+  * expert weights are sharded on the *d_expert* axis over the model axis
+    (Megatron column/row inside every expert) and on d_model over the FSDP
+    axis; every chip holds a 1/(16*16) shard of every expert. The only
+    collective in the MoE block is the row-parallel all-reduce of the
+    combined token outputs — (B_local, S, d) once per layer, exactly what a
+    dense Megatron MLP pays.
+
+Router softmax goes through the numerics backend: the paper's table-based
+softmax certifies the routing probabilities too (``MoEConfig.router_numerics``).
+``moe_block`` returns (y, router_probs) so the load-balance aux loss reuses
+the routing pass instead of recomputing it (the old separate aux function
+doubled router flops and collectives).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.launch.sharding import constrain
+from repro.models.layers import Params, ShapeTree, pdtype, spec
+
+
+def moe_shapes(cfg) -> ShapeTree:
+    m, d, dt = cfg.moe, cfg.d_model, pdtype(cfg)
+    out: ShapeTree = {
+        "router": spec((d, m.n_experts), jnp.float32),
+        "wi": spec((m.n_experts, d, 2 * m.d_expert), dt),  # SwiGLU gate+up
+        "wo": spec((m.n_experts, m.d_expert, d), dt),
+    }
+    if m.n_shared:
+        out["shared_wi"] = spec((d, 2 * m.n_shared * m.d_expert), dt)
+        out["shared_wo"] = spec((m.n_shared * m.d_expert, d), dt)
+    return out
+
+
+def _capacity(seq: int, cfg) -> int:
+    m = cfg.moe
+    c = int(seq * m.top_k * m.capacity_factor / m.n_experts)
+    return max(min(c, seq * m.top_k), 4)
+
+
+def moe_block(p: Params, x: jax.Array, cfg, numerics,
+              return_probs: bool = False):
+    """x: (B, S, d) -> (B, S, d). Dropped tokens (over per-example capacity)
+    fall through on the residual path, standard GShard behaviour."""
+    m = cfg.moe
+    b, s, d = x.shape
+    cap = _capacity(s, cfg)
+    k = m.top_k
+
+    logits = x.astype(jnp.float32) @ p["router"]  # (B, S, E)
+    probs = (numerics.softmax(logits, axis=-1) if m.router_numerics
+             else jax.nn.softmax(logits, axis=-1))
+    gate, idx = jax.lax.top_k(probs, k)  # (B, S, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # --- per-example dispatch plan (no cross-device dependencies) ----------
+    flat_e = idx.reshape(b, s * k)  # (B, SK) expert ids, token-major
+    onehot = jax.nn.one_hot(flat_e, m.n_experts, dtype=jnp.int32)  # (B, SK, E)
+    pos = jnp.cumsum(onehot, axis=1) - onehot
+    pos_in_e = jnp.take_along_axis(pos, flat_e[..., None], axis=2)[..., 0]
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, pos_in_e, cap)  # overflow -> scratch row
+
+    # --- dispatch: (B, E, C+1, d), batch keeps its DP sharding -------------
+    xk = jnp.repeat(x, k, axis=1)  # (B, SK, d) token-major copies
+    buf = jnp.zeros((b, m.n_experts, cap + 1, d), x.dtype)
+    bidx = jnp.arange(b, dtype=jnp.int32)[:, None]
+    buf = buf.at[bidx, flat_e, slot].add(xk, mode="drop")
+    buf = constrain(buf, ("batch", None, None, None))
+
+    # --- expert FFN, d_expert sharded on the model axis (Megatron col/row) -
+    # (A2 — explicitly pre-gathering the weights' FSDP axis here — was tried
+    # and REFUTED: +14% collective, +27% memory vs letting GSPMD place the
+    # d-contraction partial sums. See EXPERIMENTS.md §Perf.)
+    h = jnp.einsum("becd,edf->becf", buf, p["wi"],
+                   preferred_element_type=jnp.float32)
+    gate_h, up = jnp.split(h, 2, axis=-1)
+    h = (numerics.silu(gate_h) * up).astype(x.dtype)
+    h = constrain(h, ("batch", None, None, "mlp"))
+    out_buf = jnp.einsum("becf,efd->becd", h, p["wo"],
+                         preferred_element_type=jnp.float32)
+
+    # --- combine (gather is linear, so it commutes with the row-parallel
+    # partial sum; the single all-reduce lands on y below) -------------------
+    tok_out = out_buf[bidx, flat_e, slot]  # (B, SK, d)
+    tok_out = tok_out * (keep * gate.reshape(b, s * k))[..., None]
+    y = tok_out.reshape(b, s, k, d).sum(axis=2).astype(x.dtype)
+
+    if m.n_shared:
+        hs = x @ p["shared_wi"]
+        gs, us = jnp.split(hs, 2, axis=-1)
+        y = y + ((numerics.silu(gs) * us) @ p["shared_wo"]).astype(x.dtype)
+    y = constrain(y, ("batch", "seq", None))
+    if return_probs:
+        return y, probs
+    return y
+
+
+def load_balance_loss_from_probs(probs: jax.Array, cfg) -> jax.Array:
+    """Switch-style load-balance aux from the routing pass's probs (B, S, E)."""
+    m = cfg.moe
+    pe = probs.reshape(-1, m.n_experts)
+    me = pe.mean(0)
+    _, idx = jax.lax.top_k(pe, m.top_k)
+    ce = jnp.mean(jax.nn.one_hot(idx, m.n_experts).sum(1), 0)
+    return m.n_experts * jnp.sum(me * ce)

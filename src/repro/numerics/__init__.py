@@ -1,0 +1,7 @@
+"""Table-backed approximate numerics (the paper's technique, integrated)."""
+from repro.numerics.ops import (BACKENDS, ExactNumerics, InterpNumerics,  # noqa: F401
+                                approx_exp_neg, approx_gelu, approx_recip_pos,
+                                approx_rmsnorm, approx_rsqrt_pos, approx_sigmoid,
+                                approx_silu, approx_softmax, approx_softplus,
+                                get_numerics, softmax_ulp_bound, table_eval_int)
+from repro.numerics.registry import get_table, spec_for  # noqa: F401

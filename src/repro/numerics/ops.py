@@ -1,0 +1,219 @@
+"""JAX evaluation of generated tables + approximate transcendental ops.
+
+This is the integration layer between the paper's artifacts and the model
+stack: pure-jnp (GSPMD-shardable) implementations of softmax / rsqrt / SiLU /
+exp built on the certified piecewise-polynomial tables. The Pallas kernels in
+``repro.kernels`` fuse the same math for the hot paths; these functions are
+their reference semantics and the portable fallback used inside the large
+models (so the multi-pod dry-run lowers identically on any backend).
+
+Float glue (max-subtract, exponent split, power-of-two scaling) is exact
+hardware-wise — only the table lookups carry approximation error, and those
+errors are *proved* bounds from table verification.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.table import TableDesign
+from repro.numerics.registry import get_table
+
+LOG2E = 1.4426950408889634
+
+
+def table_eval_int(codes: jax.Array, design: TableDesign) -> jax.Array:
+    """Evaluate a table on int32 input codes (exact integer semantics)."""
+    w = design.eval_bits
+    coeffs = jnp.asarray(np.stack([design.a, design.b, design.c], 1), jnp.int32)
+    r = jax.lax.shift_right_logical(codes, w)
+    x = jnp.bitwise_and(codes, (1 << w) - 1)
+    sel = coeffs[r]  # gather: (..., 3)
+    xs = jax.lax.shift_left(jax.lax.shift_right_logical(x, design.sq_trunc), design.sq_trunc)
+    xl = jax.lax.shift_left(jax.lax.shift_right_logical(x, design.lin_trunc), design.lin_trunc)
+    acc = sel[..., 0] * xs * xs + sel[..., 1] * xl + sel[..., 2]
+    return jax.lax.shift_right_arithmetic(acc, design.k)
+
+
+def _quantize(v: jax.Array, bits: int) -> jax.Array:
+    """Map v in [0, 1) to an input code (round-to-nearest, clamped)."""
+    q = jnp.round(v * (1 << bits)).astype(jnp.int32)
+    return jnp.clip(q, 0, (1 << bits) - 1)
+
+
+# ---------------------------------------------------------------------------
+# exp(x) for x <= 0  (softmax exponential):  2^(x*log2e) = 2^(-n) * 2^(-f)
+# ---------------------------------------------------------------------------
+
+def approx_exp_neg(x: jax.Array, design: TableDesign | None = None) -> jax.Array:
+    """exp(x) for x <= 0 via the exp2neg table; exact power-of-two scaling."""
+    design = design or get_table("exp2neg")
+    t = jnp.maximum(-x, 0.0).astype(jnp.float32) * LOG2E
+    t = jnp.minimum(t, 126.0)  # below fp32 denormal cliff anyway
+    n = jnp.floor(t)
+    f = t - n  # in [0, 1)
+    codes = _quantize(f, design.in_bits)
+    frac = table_eval_int(codes, design).astype(jnp.float32) * (2.0 ** -design.out_bits)
+    return frac * jnp.exp2(-n)  # exp2 of an integer == exact exponent shift
+
+
+# ---------------------------------------------------------------------------
+# reciprocal of positive floats:  1/(m * 2^e) = recip(m) * 2^-e,  m in [1, 2)
+# ---------------------------------------------------------------------------
+
+def approx_recip_pos(x: jax.Array, design: TableDesign | None = None) -> jax.Array:
+    design = design or get_table("recip")
+    m, e = jnp.frexp(x.astype(jnp.float32))  # m in [0.5, 1)
+    m2 = 2.0 * m  # [1, 2)
+    codes = _quantize(m2 - 1.0, design.in_bits)
+    # table target: V = 2^(2b+1)/(2^b + Z)  ==  (1/m2) * 2^(bits+1)
+    val = table_eval_int(codes, design).astype(jnp.float32) * (2.0 ** -(design.in_bits + 1))
+    return val * jnp.exp2(1.0 - e.astype(jnp.float32))  # 1/x = (1/m2) * 2^(1-e)
+
+
+# ---------------------------------------------------------------------------
+# rsqrt of positive floats:  x = v * 4^h, v in [1,4);  rsqrt = tab(v) * 2^-h
+# ---------------------------------------------------------------------------
+
+def approx_rsqrt_pos(x: jax.Array, design: TableDesign | None = None) -> jax.Array:
+    design = design or get_table("rsqrt")
+    m, e = jnp.frexp(x.astype(jnp.float32))  # x = m * 2^e, m in [0.5, 1)
+    e = e.astype(jnp.int32)
+    odd = jnp.bitwise_and(e, 1)  # e odd -> v = m*2 in [1,2); even -> v = m*4 in [2,4)
+    v = jnp.where(odd == 1, 2.0 * m, 4.0 * m)
+    h = jnp.where(odd == 1, (e - 1) // 2, (e - 2) // 2)
+    half = 1 << (design.in_bits - 1)
+    codes = jnp.where(
+        odd == 1,
+        _quantize(v - 1.0, design.in_bits - 1),
+        half + _quantize((v - 2.0) * 0.5, design.in_bits - 1),
+    ).astype(jnp.int32)
+    codes = jnp.clip(codes, 0, (1 << design.in_bits) - 1)
+    val = table_eval_int(codes, design).astype(jnp.float32) * (2.0 ** -design.out_bits)
+    return val * jnp.exp2(-h.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# bounded-range activations (SiLU / sigmoid / softplus / GELU): direct tables
+# ---------------------------------------------------------------------------
+
+def _range_table_eval(x: jax.Array, design: TableDesign, lo: float, hi: float,
+                      out_scale: float) -> jax.Array:
+    xc = jnp.clip(x.astype(jnp.float32), lo, hi - 1e-6)
+    codes = _quantize((xc - lo) / (hi - lo), design.in_bits)
+    return table_eval_int(codes, design).astype(jnp.float32) * out_scale
+
+
+def approx_silu(x: jax.Array, design: TableDesign | None = None) -> jax.Array:
+    design = design or get_table("silu")
+    y = _range_table_eval(x, design, -8.0, 8.0, 16.0 / (1 << design.out_bits))
+    # outside the table range silu(x) ~= x (right) or ~= 0 (left)
+    return jnp.where(x >= 8.0, x, jnp.where(x <= -8.0, 0.0, y)).astype(x.dtype)
+
+
+def approx_sigmoid(x: jax.Array, design: TableDesign | None = None) -> jax.Array:
+    design = design or get_table("sigmoid")
+    y = _range_table_eval(x, design, -8.0, 8.0, 1.0 / (1 << design.out_bits))
+    return jnp.where(x >= 8.0, 1.0, jnp.where(x <= -8.0, 0.0, y)).astype(x.dtype)
+
+
+def approx_softplus(x: jax.Array, design: TableDesign | None = None) -> jax.Array:
+    design = design or get_table("softplus")
+    y = _range_table_eval(x, design, -8.0, 8.0, 16.0 / (1 << design.out_bits))
+    return jnp.where(x >= 8.0, x, jnp.where(x <= -8.0, 0.0, y)).astype(x.dtype)
+
+
+def approx_gelu(x: jax.Array, design: TableDesign | None = None) -> jax.Array:
+    design = design or get_table("gelu")
+    y = _range_table_eval(x, design, -8.0, 8.0, 16.0 / (1 << design.out_bits))
+    return jnp.where(x >= 8.0, x, jnp.where(x <= -8.0, 0.0, y)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# composite ops
+# ---------------------------------------------------------------------------
+
+def approx_softmax(x: jax.Array, axis: int = -1,
+                   exp_design: TableDesign | None = None,
+                   recip_design: TableDesign | None = None) -> jax.Array:
+    """Softmax with table-backed exponential and normalization reciprocal."""
+    xf = x.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(xf, axis=axis, keepdims=True))
+    e = approx_exp_neg(xf - m, exp_design)
+    s = jnp.sum(e, axis=axis, keepdims=True)
+    return (e * approx_recip_pos(s, recip_design)).astype(x.dtype)
+
+
+def approx_rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6,
+                   design: TableDesign | None = None) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True) + eps
+    return (xf * approx_rsqrt_pos(var, design) * gamma).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# numerics backends handed to the model stack
+# ---------------------------------------------------------------------------
+
+class ExactNumerics:
+    """Plain XLA transcendentals (the no-technique baseline)."""
+
+    name = "exact"
+
+    softmax = staticmethod(jax.nn.softmax)
+    silu = staticmethod(jax.nn.silu)
+    gelu = staticmethod(partial(jax.nn.gelu, approximate=True))
+    sigmoid = staticmethod(jax.nn.sigmoid)
+    softplus = staticmethod(jax.nn.softplus)
+
+    @staticmethod
+    def exp_neg(x):
+        return jnp.exp(x)
+
+    @staticmethod
+    def rmsnorm(x, gamma, eps=1e-6):
+        xf = x.astype(jnp.float32)
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True) + eps
+        return (xf * jax.lax.rsqrt(var) * gamma).astype(x.dtype)
+
+    @staticmethod
+    def recip_pos(x):
+        return 1.0 / x
+
+
+class InterpNumerics:
+    """The paper's technique as the model's numerics backend."""
+
+    name = "interp"
+
+    softmax = staticmethod(approx_softmax)
+    silu = staticmethod(approx_silu)
+    gelu = staticmethod(approx_gelu)
+    sigmoid = staticmethod(approx_sigmoid)
+    softplus = staticmethod(approx_softplus)
+    exp_neg = staticmethod(approx_exp_neg)
+    rmsnorm = staticmethod(approx_rmsnorm)
+    recip_pos = staticmethod(approx_recip_pos)
+
+
+BACKENDS = {"exact": ExactNumerics, "interp": InterpNumerics}
+
+
+def get_numerics(name: str):
+    return BACKENDS[name]
+
+
+def softmax_ulp_bound(exp_design: TableDesign | None = None,
+                      recip_design: TableDesign | None = None) -> float:
+    """Certified relative error bound of approx_softmax terms, from the
+    tables' verified ULP guarantees (used by tests and EXPERIMENTS.md)."""
+    exp_design = exp_design or get_table("exp2neg")
+    recip_design = recip_design or get_table("recip")
+    # quantization of f adds 1/2 ulp of 2^-in_bits in the exponent argument
+    exp_rel = (2.0 ** -exp_design.out_bits) * 2 + math.log(2.0) * 2.0 ** -(exp_design.in_bits + 1)
+    recip_rel = 2.0 ** -recip_design.in_bits  # quantization + 1 ulp of output
+    return 2 * exp_rel + 2 * recip_rel

@@ -1,0 +1,4 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update  # noqa: F401
+from repro.optim.compress import (compress_grads, compress_state_shapes,  # noqa: F401
+                                  decompress_grads)
+from repro.optim.schedule import cosine_schedule  # noqa: F401

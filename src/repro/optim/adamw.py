@@ -1,0 +1,71 @@
+"""AdamW with decoupled weight decay and global-norm clipping.
+
+Built from scratch (no optax in this environment). Moments are kept in fp32
+regardless of the bf16 parameter dtype — the master copy of the weights is
+also fp32 (stored in the optimizer state) so repeated bf16 rounding never
+accumulates across steps.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array  # () int32
+    master: dict  # fp32 master weights
+    mu: dict  # first moment, fp32
+    nu: dict  # second moment, fp32
+
+
+def adamw_init(params: dict) -> AdamWState:
+    # copy=True: fp32 params must not alias the master buffers (donation)
+    f32 = lambda t: jax.tree.map(lambda x: jnp.array(x, jnp.float32, copy=True), t)
+    zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+    return AdamWState(jnp.zeros((), jnp.int32), f32(params), zeros,
+                      jax.tree.map(jnp.copy, zeros))
+
+
+def adamw_state_shapes(param_shapes: dict) -> AdamWState:
+    """ShapeDtypeStruct mirror for the dry-run (no allocation)."""
+    f32 = lambda t: jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), t)
+    return AdamWState(jax.ShapeDtypeStruct((), jnp.int32), f32(param_shapes),
+                      f32(param_shapes), f32(param_shapes))
+
+
+def global_norm(tree: dict) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(x.astype(jnp.float32) ** 2)
+                        for x in jax.tree.leaves(tree)))
+
+
+def _is_matrix(x: jax.Array) -> bool:
+    return x.ndim >= 2
+
+
+def adamw_update(grads: dict, state: AdamWState, lr: jax.Array,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, clip_norm: float = 1.0,
+                 param_dtype=jnp.bfloat16):
+    """Returns (new bf16 params, new state, metrics)."""
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-12))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+    nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(w, m, v):
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        if _is_matrix(w):  # decay matrices only (norm scales/biases exempt)
+            u = u + weight_decay * w
+        return w - lr * u
+
+    master = jax.tree.map(upd, state.master, mu, nu)
+    params = jax.tree.map(lambda w: w.astype(param_dtype), master)
+    return params, AdamWState(step, master, mu, nu), {"grad_norm": gnorm}

@@ -1,0 +1,46 @@
+"""int8 error-feedback gradient compression for cross-pod all-reduce.
+
+Per-tensor symmetric int8 quantization with an error-feedback residual: the
+quantization error of step t is added back to the gradient at step t+1, so
+the compression bias telescopes away (Seide et al. 1-bit SGD lineage). Used
+on the *pod* axis only — intra-pod ICI reduces full-precision grads, and the
+slow DCN hop between pods carries 4x fewer bytes.
+
+The all-reduce itself stays a standard jnp.sum under GSPMD; compression is a
+(quantize -> dequantize) pair around the pod-axis reduction, which XLA fuses
+around the collective. Residuals are part of the train state (checkpointed).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_state_shapes(param_shapes: dict) -> dict:
+    return jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                        param_shapes)
+
+
+def compress_init(params: dict) -> dict:
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), params)
+
+
+def compress_grads(grads: dict, residual: dict):
+    """Returns (int8 payload, fp32 scales, new residual)."""
+
+    def one(g, r):
+        gf = g.astype(jnp.float32) + r
+        scale = jnp.max(jnp.abs(gf)) / 127.0 + 1e-12
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        new_r = gf - q.astype(jnp.float32) * scale
+        return q, scale, new_r
+
+    flat, tdef = jax.tree.flatten(grads)
+    rflat = jax.tree.leaves(residual)
+    qs, scales, rs = zip(*[one(g, r) for g, r in zip(flat, rflat)])
+    return (jax.tree.unflatten(tdef, qs), jax.tree.unflatten(tdef, scales),
+            jax.tree.unflatten(tdef, rs))
+
+
+def decompress_grads(payload: dict, scales: dict) -> dict:
+    return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s, payload, scales)

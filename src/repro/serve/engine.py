@@ -1,0 +1,125 @@
+"""Serving: jit'd prefill/decode steps + a continuous-batching engine.
+
+``make_serve_step`` builds the decode function the dry-run lowers for the
+``decode_32k`` / ``long_500k`` cells: one new token against a seq_len-deep
+KV cache (or SSM state), exactly as the shape table specifies.
+
+``ServeEngine`` is a minimal continuous-batching driver: a fixed pool of B
+slots, each slot holding one request's cache rows; finished requests free
+their slot and a queued request is prefilled into it. Slot state lives in
+the batched cache pytree — insertion is a per-slot dynamic_update on the
+batch axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as tf
+from repro.numerics.ops import get_numerics
+
+
+def make_serve_step(cfg) -> Callable:
+    """decode_step(params, token (B,1), pos (), caches) -> (logits, caches)."""
+    numerics = get_numerics(cfg.numerics)
+
+    def step(params, token, pos, caches, cross=None):
+        return tf.decode_step(params, token, pos, caches, cfg, numerics, cross=cross)
+
+    return step
+
+
+def make_prefill(cfg, cache_len: int) -> Callable:
+    numerics = get_numerics(cfg.numerics)
+
+    def pf(params, tokens, frontend_emb=None, enc_frames=None):
+        return tf.prefill(params, tokens, cfg, numerics, cache_len,
+                          frontend_emb=frontend_emb, enc_frames=enc_frames)
+
+    return pf
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    """Continuous batching over a fixed slot pool (greedy decoding)."""
+
+    def __init__(self, cfg, params, slots: int, cache_len: int):
+        self.cfg, self.params = cfg, params
+        self.slots, self.cache_len = slots, cache_len
+        numerics = get_numerics(cfg.numerics)
+        self.numerics = numerics
+        self.caches = tf.init_cache(cfg, slots, cache_len)
+        self.pos = np.zeros(slots, np.int32)  # next position per slot
+        self.cur = np.full(slots, -1, np.int32)  # current token per slot
+        self.req: list[Request | None] = [None] * slots
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+
+        self._prefill1 = jax.jit(make_prefill(cfg, cache_len))
+        self._decode = jax.jit(make_serve_step(cfg))
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for s in range(self.slots):
+            if self.req[s] is None and self.queue:
+                r = self.queue.pop(0)
+                logits, cache1, _ = self._prefill1(self.params, r.prompt[None, :])
+                # splice this request's cache rows into slot s of the pool
+                self.caches = jax.tree.map(
+                    lambda pool, one: jax.lax.dynamic_update_slice_in_dim(
+                        pool, one.astype(pool.dtype), s, axis=0),
+                    self.caches, cache1)
+                tok = int(jnp.argmax(logits[0, -1]))
+                r.out.append(tok)
+                self.req[s] = r
+                self.pos[s] = len(r.prompt)
+                self.cur[s] = tok
+
+    def _retire(self):
+        for s, r in enumerate(self.req):
+            if r is not None and (len(r.out) >= r.max_new):
+                r.done = True
+                self.finished.append(r)
+                self.req[s] = None
+                self.cur[s] = -1
+
+    def step(self):
+        """One engine tick: admit, batch-decode every live slot, retire."""
+        self._admit()
+        if all(r is None for r in self.req):
+            return False
+        # uniform-position decode per tick: all live slots share max(pos);
+        # empty slots decode garbage that is ignored (standard slot padding)
+        pos = int(self.pos.max())
+        toks = jnp.asarray(np.maximum(self.cur, 0)[:, None], jnp.int32)
+        logits, self.caches = self._decode(self.params, toks,
+                                           jnp.asarray(pos, jnp.int32), self.caches)
+        nxt = np.asarray(jnp.argmax(logits[:, 0], -1), np.int32)
+        for s, r in enumerate(self.req):
+            if r is not None:
+                r.out.append(int(nxt[s]))
+                self.cur[s] = int(nxt[s])
+                self.pos[s] = pos + 1
+        self._retire()
+        return True
+
+    def run(self, max_ticks: int = 10_000) -> list[Request]:
+        t = 0
+        while (self.queue or any(r is not None for r in self.req)) and t < max_ticks:
+            self.step()
+            t += 1
+        return self.finished

@@ -1,0 +1,2 @@
+from repro.train.step import TrainState, make_train_step, train_state_shapes  # noqa: F401
+from repro.train.trainer import Trainer, TrainerConfig  # noqa: F401

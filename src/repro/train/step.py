@@ -1,0 +1,122 @@
+"""The jit-compiled train step: microbatched grad accumulation, optional
+cross-pod int8 error-feedback gradient compression, AdamW, LR schedule.
+
+One function is lowered for every (arch x mesh) dry-run cell, so everything
+here must be shape-polymorphic only through the config (no python state).
+
+Compute/communication overlap: gradients are accumulated over microbatches
+with ``lax.scan``; under GSPMD+latency-hiding-scheduler the per-microbatch
+reduce-scatter of the previous slice overlaps the next microbatch's compute.
+The cross-pod hop is deferred to once per step (after accumulation), where
+the optional int8 compression cuts DCN bytes 4x.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tf
+from repro.numerics.ops import get_numerics
+from repro.optim.adamw import (AdamWState, adamw_init, adamw_state_shapes,
+                               adamw_update)
+from repro.optim.compress import compress_grads, compress_init, decompress_grads
+from repro.optim.schedule import cosine_schedule
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: AdamWState
+    residual: dict | None  # error-feedback residual (compression on) or None
+
+
+@dataclasses.dataclass(frozen=True)
+class StepConfig:
+    microbatches: int = 1
+    peak_lr: float = 3e-4
+    warmup: int = 100
+    total_steps: int = 10_000
+    clip_norm: float = 1.0
+    weight_decay: float = 0.1
+    compress_pods: bool = False  # int8 EF compression on the pod axis
+
+
+def train_state_init(key, cfg, step_cfg: "StepConfig | None" = None) -> TrainState:
+    params = tf.init_params(key, cfg)
+    res = compress_init(params) if (step_cfg and step_cfg.compress_pods) else None
+    return TrainState(params, adamw_init(params), res)
+
+
+def train_state_shapes(cfg, step_cfg: StepConfig) -> TrainState:
+    ps = tf.model_shapes(cfg)
+    res = (jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32), ps)
+           if step_cfg.compress_pods else None)
+    return TrainState(ps, adamw_state_shapes(ps), res)
+
+
+def _split_micro(batch: dict, n: int) -> dict:
+    """(B, ...) -> (n, B/n, ...) for scan."""
+    def r(x):
+        b = x.shape[0]
+        assert b % n == 0, (b, n)
+        return x.reshape(n, b // n, *x.shape[1:])
+    return jax.tree.map(r, batch)
+
+
+def make_train_step(cfg, step_cfg: StepConfig) -> Callable:
+    """Returns step(state, batch, step_idx) -> (state, metrics)."""
+    numerics = get_numerics(cfg.numerics)
+    pdt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.param_dtype]
+
+    def loss(p, mb):
+        return tf.loss_fn(p, mb, cfg, numerics)
+
+    def step(state: TrainState, batch: dict, step_idx: jax.Array):
+        n = step_cfg.microbatches
+        if n > 1:
+            micro = _split_micro(batch, n)
+
+            def acc_body(carry, mb):
+                gsum, lsum, auxsum = carry
+                (l, m), g = jax.value_and_grad(loss, has_aux=True)(state.params, mb)
+                gsum = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l, auxsum + m["aux"]), None
+
+            gz = jax.tree.map(lambda x: jnp.zeros(x.shape, jnp.float32), state.params)
+            (grads, lsum, auxsum), _ = jax.lax.scan(
+                acc_body, (gz, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), micro)
+            grads = jax.tree.map(lambda g: g / n, grads)
+            l, aux = lsum / n, auxsum / n
+        else:
+            (l, m), grads = jax.value_and_grad(loss, has_aux=True)(state.params, batch)
+            aux = m["aux"]
+
+        residual = state.residual
+        if step_cfg.compress_pods and residual is not None:
+            # DCN-side compression: quantize -> (implicit pod all-reduce via
+            # GSPMD when grads are pod-sharded) -> dequantize, with EF residual
+            payload, scales, residual = compress_grads(grads, residual)
+            grads = decompress_grads(payload, scales)
+
+        lr = cosine_schedule(step_idx, peak_lr=step_cfg.peak_lr,
+                             warmup=step_cfg.warmup, total=step_cfg.total_steps)
+        params, opt, om = adamw_update(
+            grads, state.opt, lr, clip_norm=step_cfg.clip_norm,
+            weight_decay=step_cfg.weight_decay, param_dtype=pdt)
+        metrics = {"loss": l, "aux": aux, "lr": lr, "grad_norm": om["grad_norm"]}
+        return TrainState(params, opt, residual), metrics
+
+    return step
+
+
+def make_eval_step(cfg) -> Callable:
+    numerics = get_numerics(cfg.numerics)
+
+    def eval_step(params, batch):
+        l, m = tf.loss_fn(params, batch, cfg, numerics)
+        return {"loss": l, **m}
+
+    return eval_step

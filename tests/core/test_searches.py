@@ -1,0 +1,66 @@
+"""Equivalence of the four divided-difference search implementations."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import searches
+
+
+def arrays(draw, n):
+    g = draw(st.lists(st.integers(-1000, 1000), min_size=n, max_size=n))
+    h = draw(st.lists(st.integers(-1000, 1000), min_size=n, max_size=n))
+    return np.array(g, np.float64), np.array(h, np.float64)
+
+
+@st.composite
+def gh_pairs(draw):
+    n = draw(st.integers(2, 40))
+    return arrays(draw, n)
+
+
+@settings(max_examples=200, deadline=None)
+@given(gh_pairs())
+def test_all_impls_agree_on_value(gh):
+    g, h = gh
+    vals = {name: impl(g, h)[0] for name, impl in searches.IMPLS.items()}
+    ref = vals["naive"]
+    for name, v in vals.items():
+        assert v == pytest.approx(ref, rel=1e-12, abs=1e-12), name
+
+
+@settings(max_examples=100, deadline=None)
+@given(gh_pairs())
+def test_min_dd_is_negated_max(gh):
+    g, h = gh
+    v_min, *_ = searches.min_dd(g, h, "naive")
+    brute = min((g[y] - h[x]) / (y - x) for x in range(len(g)) for y in range(x + 1, len(g)))
+    assert v_min == pytest.approx(brute)
+
+
+def test_claim21_prunes_but_matches_on_convex_data():
+    # convex-ish data triggers heavy pruning; values must still agree
+    n = 200
+    x = np.arange(n, dtype=np.float64)
+    g = 0.01 * x**2 - x
+    h = 0.01 * x**2 + 1.0
+    ref = searches.max_dd_naive(g, h)
+    pruned = searches.max_dd_claim21(g, h)
+    assert pruned[0] == pytest.approx(ref[0])
+
+
+def test_argmax_is_a_true_maximizer():
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        g = rng.integers(-50, 50, 30).astype(np.float64)
+        h = rng.integers(-50, 50, 30).astype(np.float64)
+        for name, impl in searches.IMPLS.items():
+            val, x, y = impl(g, h)
+            assert x < y
+            assert val == pytest.approx((g[y] - h[x]) / (y - x)), name
+
+
+def test_degenerate_sizes():
+    one = np.zeros(1)
+    for impl in searches.IMPLS.values():
+        assert impl(one, one)[0] == -np.inf

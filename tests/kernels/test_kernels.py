@@ -1,0 +1,148 @@
+"""Per-kernel interpret-mode validation: shape/dtype sweeps vs jnp oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import designspace as dsp
+from repro.core.funcspec import get_spec
+from repro.kernels.dspace.ops import envelopes_pallas, envelopes_ref_jnp
+from repro.kernels.interp.ops import table_eval
+from repro.kernels.rmsnorm.ops import approx_rmsnorm_fused
+from repro.kernels.softmax.ops import approx_softmax_fused
+from repro.numerics import approx_rmsnorm, approx_softmax, get_table, softmax_ulp_bound
+
+
+# ------------------------------------------------------------------- interp
+
+@pytest.mark.parametrize("kind", ["exp2neg", "recip", "silu", "sigmoid"])
+@pytest.mark.parametrize("shape", [(17,), (128,), (8, 200), (3, 5, 64)])
+def test_interp_kernel_matches_ref_and_table(kind, shape):
+    design = get_table(kind)
+    rng = np.random.default_rng(0)
+    codes = rng.integers(0, 1 << design.in_bits, size=shape).astype(np.int32)
+    out_kernel = np.asarray(table_eval(jnp.asarray(codes), design, use_kernel=True))
+    out_ref = np.asarray(table_eval(jnp.asarray(codes), design, use_kernel=False))
+    out_exact = design.eval_int(codes.astype(np.int64))
+    np.testing.assert_array_equal(out_kernel, out_ref)
+    np.testing.assert_array_equal(out_kernel.astype(np.int64), out_exact)
+
+
+def test_interp_kernel_all_codes_exhaustive():
+    design = get_table("recip")
+    codes = np.arange(1 << design.in_bits, dtype=np.int32)
+    out = np.asarray(table_eval(jnp.asarray(codes), design)).astype(np.int64)
+    np.testing.assert_array_equal(out, design.eval_int(codes.astype(np.int64)))
+
+
+# ------------------------------------------------------------------- dspace
+
+@pytest.mark.parametrize("n", [128, 256, 384])
+def test_envelope_kernel_matches_numpy_core(n):
+    rng = np.random.default_rng(n)
+    L = np.cumsum(rng.integers(0, 3, n)).astype(np.int64)
+    U = L + rng.integers(0, 4, n)
+    m_core, s_core = dsp.envelopes(L, U)
+    m_pal, s_pal = envelopes_pallas(L, U)
+    np.testing.assert_allclose(m_pal[1:], m_core[1:], rtol=1e-5)
+    np.testing.assert_allclose(s_pal[1:], s_core[1:], rtol=1e-5)
+
+
+def test_envelope_kernel_handles_padding():
+    rng = np.random.default_rng(7)
+    n = 200  # not a TILE multiple -> exercises sentinel padding
+    L = np.cumsum(rng.integers(0, 3, n)).astype(np.int64)
+    U = L + rng.integers(0, 4, n)
+    m_core, s_core = dsp.envelopes(L, U)
+    m_pal, s_pal = envelopes_pallas(L, U)
+    assert m_pal.shape == m_core.shape
+    np.testing.assert_allclose(m_pal[1:], m_core[1:], rtol=1e-5)
+    np.testing.assert_allclose(s_pal[1:], s_core[1:], rtol=1e-5)
+
+
+def test_envelope_ref_jnp_matches_numpy():
+    rng = np.random.default_rng(3)
+    n = 64
+    L = np.cumsum(rng.integers(0, 3, n)).astype(np.int64)
+    U = L + rng.integers(0, 4, n)
+    m_core, s_core = dsp.envelopes(L, U)
+    m_ref, s_ref = envelopes_ref_jnp(L, U)
+    np.testing.assert_allclose(m_ref[1:], m_core[1:], rtol=1e-5)
+    np.testing.assert_allclose(s_ref[1:], s_core[1:], rtol=1e-5)
+
+
+def test_envelope_kernel_drives_real_generation():
+    """The kernel's envelopes reproduce the same feasibility verdicts."""
+    spec = get_spec("recip", 8)
+    L, U = spec.region_bounds(2)
+    for r in range(4):
+        m_core, s_core = dsp.envelopes(L[r], U[r])
+        m_pal, s_pal = envelopes_pallas(L[r], U[r])
+        assert np.all((m_pal[1:] < s_pal[1:]) == (m_core[1:] < s_core[1:]))
+
+
+# ------------------------------------------------------------------ softmax
+
+@pytest.mark.parametrize("shape", [(8, 128), (32, 256), (4, 8, 128)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_softmax_accuracy(shape, dtype):
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(0, 4, shape), dtype)
+    out = approx_softmax_fused(x)
+    ref = jax.nn.softmax(x.astype(jnp.float32), axis=-1)
+    tol = max(softmax_ulp_bound(), 1e-3 if dtype == jnp.float32 else 1e-2)
+    np.testing.assert_allclose(np.asarray(out, np.float32), np.asarray(ref),
+                               atol=tol)
+    sums = np.asarray(out, np.float32).sum(-1)
+    np.testing.assert_allclose(sums, 1.0, atol=5e-3)
+
+
+def test_fused_softmax_matches_its_ref():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(0, 3, (16, 128)), jnp.float32)
+    out_k = approx_softmax_fused(x, use_kernel=True)
+    out_r = approx_softmax_fused(x, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r),
+                               rtol=1e-6, atol=1e-7)
+
+
+def test_fused_softmax_close_to_jnp_numerics_path():
+    rng = np.random.default_rng(4)
+    x = jnp.asarray(rng.normal(0, 3, (8, 128)), jnp.float32)
+    fused = approx_softmax_fused(x)
+    unfused = approx_softmax(x)
+    # frexp vs bit-twiddle rounding may differ by 1 table ulp
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused), atol=2e-3)
+
+
+# ------------------------------------------------------------------ rmsnorm
+
+@pytest.mark.parametrize("shape", [(8, 128), (2, 16, 256)])
+def test_fused_rmsnorm_accuracy(shape):
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.normal(0, 2, shape), jnp.float32)
+    gamma = jnp.asarray(rng.normal(1, 0.1, shape[-1]), jnp.float32)
+    out = approx_rmsnorm_fused(x, gamma)
+    xf = np.asarray(x, np.float32)
+    rs = 1.0 / np.sqrt((xf**2).mean(-1, keepdims=True) + 1e-6)
+    ref = xf * rs * np.asarray(gamma)
+    np.testing.assert_allclose(np.asarray(out), ref, rtol=2e-3, atol=2e-3)
+
+
+def test_fused_rmsnorm_matches_its_ref_exactly():
+    rng = np.random.default_rng(6)
+    x = jnp.asarray(rng.normal(0, 2, (8, 128)), jnp.float32)
+    gamma = jnp.ones(128, jnp.float32)
+    out_k = approx_rmsnorm_fused(x, gamma, use_kernel=True)
+    out_r = approx_rmsnorm_fused(x, gamma, use_kernel=False)
+    np.testing.assert_allclose(np.asarray(out_k), np.asarray(out_r), rtol=1e-6)
+
+
+def test_fused_rmsnorm_close_to_jnp_numerics_path():
+    rng = np.random.default_rng(8)
+    x = jnp.asarray(rng.normal(0, 2, (8, 128)), jnp.float32)
+    gamma = jnp.ones(128, jnp.float32)
+    fused = approx_rmsnorm_fused(x, gamma)
+    unfused = approx_rmsnorm(x, gamma)
+    np.testing.assert_allclose(np.asarray(fused), np.asarray(unfused),
+                               rtol=3e-3, atol=3e-3)

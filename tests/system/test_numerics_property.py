@@ -1,0 +1,89 @@
+"""Property-based tests (hypothesis) on the numerics layer invariants:
+every table-backed op must respect its certified bound on arbitrary inputs,
+softmax must stay a probability distribution, and the fused kernels must
+match their jnp references bit-for-bit on integer paths."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.numerics import ops as nops
+from repro.numerics.registry import get_table
+
+f32 = np.float32
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(-80.0, 0.0, width=32), min_size=1, max_size=64))
+def test_exp_neg_certified_bound(xs):
+    x = jnp.asarray(np.array(xs, f32))
+    got = np.asarray(nops.approx_exp_neg(x), np.float64)
+    want = np.exp(np.array(xs, np.float64))
+    d = get_table("exp2neg")
+    # table ULP + input quantization of the fractional exponent
+    bound = 2.0 ** -d.out_bits * 4 + np.log(2) * 2.0 ** -d.in_bits
+    assert np.all(np.abs(got - want) <= bound * np.maximum(want, 1e-300) + 1e-38)
+    assert np.all(got >= 0.0)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(np.float32(1e-8), np.float32(1e30), width=32), min_size=1, max_size=64))
+def test_recip_certified_bound(xs):
+    x = jnp.asarray(np.array(xs, f32))
+    got = np.asarray(nops.approx_recip_pos(x), np.float64)
+    want = 1.0 / np.array(xs, np.float64)
+    d = get_table("recip")
+    bound = 2.0 ** -d.in_bits * 2  # quantization + 1 ULP table error
+    assert np.all(np.abs(got - want) <= bound * want)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.floats(np.float32(1e-8), np.float32(1e30), width=32), min_size=1, max_size=64))
+def test_rsqrt_certified_bound(xs):
+    x = jnp.asarray(np.array(xs, f32))
+    got = np.asarray(nops.approx_rsqrt_pos(x), np.float64)
+    want = 1.0 / np.sqrt(np.array(xs, np.float64))
+    d = get_table("rsqrt")
+    bound = 2.0 ** -(d.in_bits - 2)
+    assert np.all(np.abs(got - want) <= bound * want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 7), st.integers(2, 33), st.integers(0, 2**31 - 1))
+def test_softmax_is_distribution(rows, cols, seed):
+    x = jax.random.normal(jax.random.key(seed), (rows, cols)) * 8
+    p = np.asarray(nops.approx_softmax(x), np.float64)
+    assert np.all(p >= 0)
+    np.testing.assert_allclose(p.sum(-1), 1.0, atol=5e-3)
+    # argmax preserved whenever the margin exceeds the certified bound
+    xf = np.asarray(x, np.float64)
+    top2 = np.sort(xf, -1)[:, -2:]
+    margin_ok = (top2[:, 1] - top2[:, 0]) > 0.01
+    exact_arg = xf.argmax(-1)
+    assert np.all(p.argmax(-1)[margin_ok] == exact_arg[margin_ok])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 200))
+def test_interp_kernel_matches_int_oracle(seed, n):
+    """Pallas interp kernel (interpret) == pure-int64 table evaluation."""
+    from repro.kernels.interp.ops import table_eval
+    d = get_table("silu")
+    codes = jax.random.randint(jax.random.key(seed), (n,), 0,
+                               1 << d.in_bits, jnp.int32)
+    a = np.asarray(table_eval(codes, d, use_kernel=True, interpret=True))
+    b = np.asarray(table_eval(codes, d, use_kernel=False))
+    np.testing.assert_array_equal(a, b)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_silu_gelu_softplus_pointwise(seed):
+    x = jax.random.uniform(jax.random.key(seed), (256,), jnp.float32, -12, 12)
+    for approx, exact in ((nops.approx_silu, jax.nn.silu),
+                          (nops.approx_softplus, jax.nn.softplus)):
+        got = np.asarray(approx(x), np.float64)
+        want = np.asarray(exact(x), np.float64)
+        assert np.max(np.abs(got - want)) < 2e-2, approx.__name__

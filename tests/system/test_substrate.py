@@ -1,0 +1,183 @@
+"""Substrate tests: data determinism, AdamW, compression, checkpointing,
+trainer resume-after-crash, straggler telemetry, serving engine."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, latest_step, restore, save
+from repro.configs.base import get_smoke_config
+from repro.data.synthetic import dataset_for
+from repro.optim.adamw import adamw_init, adamw_update, global_norm
+from repro.optim.compress import compress_grads, compress_init, decompress_grads
+from repro.optim.schedule import cosine_schedule
+from repro.serve import ServeEngine
+from repro.serve.engine import Request
+from repro.train.step import StepConfig, make_train_step, train_state_init
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+# ----------------------------------------------------------------- data
+
+def test_data_deterministic_skip_ahead():
+    cfg = get_smoke_config("yi_6b")
+    ds = dataset_for(cfg, 32, 8, seed=3)
+    b1 = ds.batch_at(17)
+    b2 = ds.batch_at(17)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(ds.batch_at(18)["tokens"], b1["tokens"])
+    # host slicing: rows [2,6) of the global batch match the full batch rows
+    sl = ds.batch_at(17, 2, 6)
+    np.testing.assert_array_equal(sl["tokens"], b1["tokens"][2:6])
+    # labels are next-token of the same stream
+    np.testing.assert_array_equal(b1["labels"][:, :-1], b1["tokens"][:, 1:])
+
+
+def test_data_vocab_range():
+    cfg = get_smoke_config("mamba2_130m")
+    b = dataset_for(cfg, 64, 4).batch_at(0)
+    assert b["tokens"].min() >= 0 and b["tokens"].max() < cfg.vocab_size
+
+
+# ------------------------------------------------------------ optimizer
+
+def test_adamw_descends_quadratic():
+    w = {"w": jnp.array([3.0, -2.0])}
+    st = adamw_init(w)
+    params = w
+    for i in range(200):
+        g = {"w": 2 * st.master["w"]}  # d/dw of ||w||^2
+        params, st, _ = adamw_update(g, st, jnp.asarray(0.05), weight_decay=0.0,
+                                     param_dtype=jnp.float32)
+    assert float(global_norm(params)) < 0.05
+
+
+def test_adamw_master_weights_fp32():
+    w = {"w": jnp.ones((4,), jnp.bfloat16)}
+    st = adamw_init(w)
+    assert st.master["w"].dtype == jnp.float32
+    p, st2, _ = adamw_update({"w": jnp.ones((4,), jnp.bfloat16)}, st,
+                             jnp.asarray(1e-3))
+    assert p["w"].dtype == jnp.bfloat16 and st2.master["w"].dtype == jnp.float32
+
+
+def test_schedule_warmup_and_decay():
+    lr0 = float(cosine_schedule(0, peak_lr=1.0, warmup=10, total=100))
+    lrw = float(cosine_schedule(10, peak_lr=1.0, warmup=10, total=100))
+    lre = float(cosine_schedule(100, peak_lr=1.0, warmup=10, total=100))
+    assert lr0 == 0.0 and abs(lrw - 1.0) < 1e-6 and abs(lre - 0.1) < 1e-6
+
+
+def test_compression_error_feedback_telescopes():
+    """Sum of dequantized grads over T steps ~= sum of true grads (EF)."""
+    key = jax.random.key(0)
+    g_true = [{"w": jax.random.normal(jax.random.fold_in(key, i), (64,))}
+              for i in range(20)]
+    res = compress_init(g_true[0])
+    acc_q = jnp.zeros((64,))
+    acc_t = jnp.zeros((64,))
+    for g in g_true:
+        payload, scales, res = compress_grads(g, res)
+        acc_q = acc_q + decompress_grads(payload, scales)["w"]
+        acc_t = acc_t + g["w"]
+    # residual carries the outstanding error; totals match to within it
+    err = float(jnp.max(jnp.abs(acc_q + res["w"] - acc_t)))
+    assert err < 1e-4, err
+
+
+# ----------------------------------------------------------- checkpoint
+
+def test_checkpoint_roundtrip_and_atomicity(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3), "b": {"c": jnp.ones(4, jnp.bfloat16) * 1.5}}
+    save(tmp_path, 7, tree, {"note": "x"})
+    assert latest_step(tmp_path) == 7
+    got, extra = restore(tmp_path, 7, tree)
+    np.testing.assert_array_equal(got["a"], np.arange(6).reshape(2, 3))
+    # bf16 must round-trip through npy (stored as uint16 view) and be
+    # jnp-convertible again — regression for the |V2 dtype bug
+    back = jnp.asarray(got["b"]["c"])
+    assert back.dtype == jnp.bfloat16
+    np.testing.assert_array_equal(np.asarray(back, np.float32), 1.5)
+    assert extra == {"note": "x"}
+    # corrupt leaf detection
+    import glob
+    f = sorted(glob.glob(str(tmp_path / "step_*" / "arr_00000.npy")))[0]
+    a = np.load(f)
+    np.save(f, a + 1)
+    with pytest.raises(AssertionError, match="corrupt"):
+        restore(tmp_path, 7, tree)
+
+
+def test_checkpoint_keep_k(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), every=1, keep=2)
+    tree = {"w": jnp.zeros(3)}
+    for s in range(5):
+        mgr.maybe_save(s, tree)
+    import os
+    kept = sorted(p for p in os.listdir(tmp_path) if p.startswith("step_"))
+    assert len(kept) == 2 and kept[-1] == "step_000000004"
+
+
+# ------------------------------------------------------ trainer + resume
+
+def _tc(tmp_path, steps, every=2):
+    return TrainerConfig(steps=steps, ckpt_dir=str(tmp_path), ckpt_every=every,
+                         log_every=100, seq_len=32, global_batch=4,
+                         step=StepConfig(total_steps=steps, warmup=2, peak_lr=1e-3))
+
+
+def test_trainer_loss_decreases(tmp_path):
+    cfg = get_smoke_config("yi_6b").replace(n_layers=2)
+    hist = Trainer(cfg, _tc(tmp_path, 8)).run()
+    assert len(hist) == 8
+    assert hist[-1]["loss"] < hist[0]["loss"] + 0.5  # descending-ish, no blowup
+    assert np.isfinite([h["loss"] for h in hist]).all()
+
+
+def test_trainer_crash_resume_bitexact(tmp_path):
+    """Train 6 steps straight vs. crash-at-4 + resume: identical final loss."""
+    cfg = get_smoke_config("mamba2_130m").replace(n_layers=2)
+    t1 = Trainer(cfg, _tc(tmp_path / "a", 6, every=2))
+    h_straight = t1.run()
+
+    t2 = Trainer(cfg, _tc(tmp_path / "b", 4, every=2))
+    t2.run()  # "crash" after step 3 (ckpt at step 2)
+    t3 = Trainer(cfg, _tc(tmp_path / "b", 6, every=2))
+    assert t3.start_step == 3  # resumed from the step-2 checkpoint? no: latest is 2
+    h_resumed = t3.run()
+    np.testing.assert_allclose(h_straight[-1]["loss"], h_resumed[-1]["loss"],
+                               rtol=1e-5)
+
+
+def test_microbatching_matches_full_batch():
+    cfg = get_smoke_config("yi_6b").replace(n_layers=2, remat="none")
+    from repro.data import make_batch
+    batch = {k: jnp.asarray(v) for k, v in make_batch(cfg, 32, 4).items()}
+    s0 = train_state_init(jax.random.key(0), cfg)
+    step1 = make_train_step(cfg, StepConfig(microbatches=1, peak_lr=1e-3, warmup=0))
+    step2 = make_train_step(cfg, StepConfig(microbatches=2, peak_lr=1e-3, warmup=0))
+    _, m1 = step1(s0, batch, jnp.asarray(0))
+    _, m2 = step2(s0, batch, jnp.asarray(0))
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]), rtol=1e-5)
+    np.testing.assert_allclose(float(m1["grad_norm"]), float(m2["grad_norm"]),
+                               rtol=1e-3)
+
+
+# -------------------------------------------------------------- serving
+
+def test_serve_engine_continuous_batching():
+    cfg = get_smoke_config("yi_6b")
+    from repro.models import transformer as tf
+    params = tf.init_params(jax.random.key(0), cfg)
+    eng = ServeEngine(cfg, params, slots=2, cache_len=64)
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, rng.integers(0, cfg.vocab_size, 8).astype(np.int32), 4)
+            for i in range(5)]  # 5 requests > 2 slots: forces slot reuse
+    for r in reqs:
+        eng.submit(r)
+    done = eng.run()
+    assert len(done) == 5
+    assert all(len(r.out) >= r.max_new for r in done)
+    assert all(0 <= t < cfg.vocab_size for r in done for t in r.out)
