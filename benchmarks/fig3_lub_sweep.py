@@ -8,8 +8,7 @@ is reproduced by reporting both the min-area and min-delay choices.
 from __future__ import annotations
 
 from benchmarks.common import QUICK, emit
-from repro.core.funcspec import get_spec
-from repro.core.generate import sweep_lub
+from repro.api import Explorer, get_spec
 
 CASES_FULL = [("log2", 10, {"out_bits": 11}), ("log2", 16, {"out_bits": 17}),
               ("recip", 12, {})]
@@ -18,9 +17,10 @@ CASES_QUICK = [("log2", 10, {"out_bits": 11}), ("recip", 10, {})]
 
 def run() -> list[dict]:
     rows = []
+    ex = Explorer()
     for kind, bits, kw in (CASES_QUICK if QUICK else CASES_FULL):
         spec = get_spec(kind, bits, **kw)
-        results = sweep_lub(spec)
+        results = ex.explore(spec).entries
         for g in results:
             d = g.design
             rows.append({

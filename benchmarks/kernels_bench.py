@@ -14,7 +14,7 @@ import numpy as np
 
 from benchmarks.common import QUICK, emit, timed
 from repro.numerics import ops as nops
-from repro.numerics.registry import get_table
+from repro.api import get_table
 
 
 def run() -> list[dict]:

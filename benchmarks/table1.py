@@ -13,8 +13,7 @@ from __future__ import annotations
 import time
 
 from benchmarks.common import QUICK, emit
-from repro.core.funcspec import get_spec
-from repro.core.generate import min_feasible_r, sweep_lub
+from repro.api import Explorer, get_spec
 from repro.core.remez import generate_remez_table
 from repro.core import area as area_model
 
@@ -31,15 +30,16 @@ CASES_QUICK = [
 
 def run() -> list[dict]:
     rows = []
+    ex = Explorer()
     for kind, bits, kw in (CASES_QUICK if QUICK else CASES_FULL):
         spec = get_spec(kind, bits, **kw)
         t0 = time.perf_counter()
-        results = sweep_lub(spec)
+        res = ex.explore(spec)
         runtime = time.perf_counter() - t0
-        if not results:
+        if not res:
             rows.append({"function": kind, "bits": bits, "status": "infeasible"})
             continue
-        best = min(results, key=lambda g: g.area_delay)
+        best = res.best
         d = best.design
         # Remez comparison point at the same LUT height (our DesignWare stand-in)
         try:
@@ -57,7 +57,7 @@ def run() -> list[dict]:
             "area_x_delay": round(best.area_delay, 0),
             "remez_area": round(rz_area, 0), "remez_delay": round(rz_delay, 2),
             "remez_axd": round(rz_area * rz_delay, 0),
-            "min_feasible_R": min_feasible_r(spec),
+            "min_feasible_R": res.min_regions_r,
         })
     emit("table1", rows)
     return rows

@@ -7,8 +7,7 @@ more bits on `c` (cheap ROM) — total multiplier area favours the proposal.
 from __future__ import annotations
 
 from benchmarks.common import QUICK, emit
-from repro.core.funcspec import get_spec
-from repro.core.generate import generate_for_r
+from repro.api import Explorer, get_spec
 from repro.core.remez import generate_remez_table
 
 # (kind, bits, kwargs, R, degree) — paper rows are (recip,23,R7), (log2,16,R8),
@@ -26,9 +25,10 @@ CASES_QUICK = [
 
 def run() -> list[dict]:
     rows = []
+    ex = Explorer()
     for kind, bits, kw, r, degree in (CASES_QUICK if QUICK else CASES_FULL):
         spec = get_spec(kind, bits, **kw)
-        res = generate_for_r(spec, r, degree=degree)
+        res = ex.explore_r(spec, r, degree=degree)
         if res is None:
             rows.append({"function": kind, "bits": bits, "R": r,
                          "status": "infeasible"})

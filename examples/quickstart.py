@@ -2,7 +2,7 @@
 
     PYTHONPATH=src python examples/quickstart.py [--bits 12] [--kind recip]
 
-1. Build the fixed-point spec (integer upper/lower bounds, §II).
+1. Open an ``Explorer`` session (the single public entry point, repro.api).
 2. Find the minimum feasible number of lookup bits (Eqns 9-10).
 3. Sweep LUT heights, run the §III decision procedure per R.
 4. Pick best area-delay, verify exhaustively (every input code, int64).
@@ -16,9 +16,8 @@ import argparse
 import jax
 import numpy as np
 
+from repro.api import ExploreConfig, Explorer
 from repro.core import area as area_model
-from repro.core.funcspec import get_spec
-from repro.core.generate import generate_for_r, min_feasible_r, sweep_lub
 from repro.core.remez import generate_remez_table
 from repro.kernels.interp.ops import table_eval
 
@@ -31,23 +30,24 @@ def main():
     ap.add_argument("--bits", type=int, default=12)
     args = ap.parse_args()
 
-    spec = get_spec(args.kind, args.bits)
+    ex = Explorer(ExploreConfig(kind=args.kind, bits=args.bits))
+    spec = ex.config.spec()
     print(f"target: {spec.name}  ({spec.in_bits} -> {spec.out_bits} bits, "
           f"±{spec.ulp} ULP)")
 
-    r_min = min_feasible_r(spec)
+    r_min = ex.min_regions(spec)
     print(f"minimum feasible lookup bits (Eqns 9-10 over all regions): R = {r_min}")
 
-    results = sweep_lub(spec)
-    print(f"\nLUB sweep ({len(results)} feasible heights):")
-    for g in results:
+    res = ex.explore(spec)
+    print(f"\nLUB sweep ({len(res)} feasible heights):")
+    for g in res:
         d = g.design
         print(f"  R={d.lookup_bits}  {'lin ' if d.degree == 1 else 'quad'}"
               f"  k={d.k}  widths={d.lut_widths}  area={g.area:7.0f}"
               f"  delay={g.delay:5.2f}  AxD={g.area_delay:9.0f}"
               f"  gen={g.runtime_s:6.2f}s")
 
-    best = min(results, key=lambda g: g.area_delay)
+    best = res.best
     d = best.design
     ok, worst = d.verify(spec)
     print(f"\nbest area-delay: R={d.lookup_bits}, exhaustively verified over "

@@ -15,6 +15,7 @@ import argparse
 import jax
 import numpy as np
 
+from repro.api import Explorer, set_default_explorer
 from repro.configs.base import get_smoke_config
 from repro.models import transformer as tf
 from repro.numerics.ops import softmax_ulp_bound
@@ -37,6 +38,10 @@ def main():
     prompts = [rng.integers(0, base.vocab_size, args.prompt_len).astype(np.int32)
                for _ in range(args.requests)]
 
+    # one Explorer session supplies (and, on first run, generates + verifies)
+    # every table the interp numerics touch; the engines and the jitted
+    # decode paths all resolve through it once it is the process default
+    set_default_explorer(Explorer())
     outs = {}
     for numerics in ("exact", "interp"):
         cfg = base.replace(numerics=numerics)

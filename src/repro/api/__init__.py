@@ -1,0 +1,35 @@
+"""repro.api — the single public entry point to the design-space pipeline.
+
+The paper computes the complete design space once; everything downstream is
+"a modified decision procedure". This package makes that literal:
+
+    ExploreConfig       frozen session configuration (spec, sweep, workers,
+                        cache dir) — replaces the per-function keyword soup
+    Target              protocol: decision-procedure ordering + area/delay
+                        estimator; @register_target adds a technology
+                        (built-ins: asic, fpga-lut, pallas-tpu)
+    Explorer            session object owning the worker pool, the
+                        (spec, R) -> RegionSpace envelope cache and the
+                        table persistence layer
+    DesignSpaceResult   full per-R frontier + Pareto / best / min-regions
+
+Legacy entry points (``repro.core.generate.generate_table`` / ``sweep_lub``,
+``repro.numerics.registry.get_table``) are deprecation shims over
+``default_explorer()``. See DESIGN.md §6.
+"""
+from repro.api.config import DEFAULTS, ExploreConfig, spec_for  # noqa: F401
+from repro.api.explorer import (Explorer, default_explorer, explore,  # noqa: F401
+                                get_table, set_default_explorer)
+from repro.api.result import DesignSpaceResult, ExploreEntry  # noqa: F401
+from repro.api.target import (Target, get_target, list_targets,  # noqa: F401
+                              register_target)
+from repro.core.decision import DecisionPolicy  # noqa: F401
+from repro.core.funcspec import FunctionSpec, get_spec  # noqa: F401
+from repro.core.table import TableDesign  # noqa: F401
+
+__all__ = [
+    "DEFAULTS", "DecisionPolicy", "DesignSpaceResult", "ExploreConfig",
+    "ExploreEntry", "Explorer", "FunctionSpec", "TableDesign", "Target",
+    "default_explorer", "explore", "get_spec", "get_table", "get_target",
+    "list_targets", "register_target", "set_default_explorer", "spec_for",
+]

@@ -1,0 +1,96 @@
+"""Frozen exploration configuration + the per-kind default table.
+
+``ExploreConfig`` replaces the per-function keyword soup (``impl`` /
+``degree`` / ``processes`` / ``lookup_bits`` threaded through every call in
+the seed) with one frozen, hashable session configuration. ``DEFAULTS`` is
+the single source of truth for the ML-numerics kinds' widths and lookup
+bits — ``repro.numerics.registry`` re-exports it instead of carrying its own
+copy (DESIGN.md §7.5).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import pathlib
+
+from repro.core.funcspec import FunctionSpec, get_spec
+
+# kind -> (in_bits, spec kwargs, lookup_bits). Widths are chosen so every
+# coefficient fits int32 and the one-hot LUT contraction is exact in fp32.
+DEFAULTS: dict[str, tuple[int, dict, int]] = {
+    "exp2neg": (12, {"out_bits": 13}, 6),
+    "recip": (12, {}, 6),
+    "rsqrt": (12, {"out_bits": 13}, 6),
+    "silu": (12, {"out_bits": 12}, 6),
+    "sigmoid": (12, {"out_bits": 12}, 6),
+    "softplus": (12, {"out_bits": 12}, 6),
+    "gelu": (12, {"out_bits": 12}, 6),
+    "log2": (12, {"out_bits": 13}, 6),
+    "exp2": (12, {"out_bits": 12}, 6),
+}
+
+
+def default_cache_dir() -> pathlib.Path:
+    return pathlib.Path(
+        os.environ.get(
+            "REPRO_TABLE_CACHE",
+            pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "tables",
+        )
+    )
+
+
+def spec_for(kind: str, bits: int | None = None, **kw) -> FunctionSpec:
+    """Build a FunctionSpec for ``kind`` with the registry defaults merged in."""
+    d_bits, d_kw, _ = DEFAULTS[kind]
+    merged = dict(d_kw)
+    merged.update(kw)
+    return get_spec(kind, bits if bits is not None else d_bits, **merged)
+
+
+@dataclasses.dataclass(frozen=True)
+class ExploreConfig:
+    """Session-wide exploration parameters (all optional, all overridable
+    per-call on :class:`repro.api.Explorer` methods).
+
+    Attributes:
+      kind/bits/out_bits/ulp: the function spec, resolved through
+        :data:`DEFAULTS` (``spec()`` builds the FunctionSpec).
+      degree: force degree 1/2; None = the target policy's lin-vs-quad rule.
+      lookup_bits: fixed R; None = sweep ``[r_lo, r_hi]``.
+      r_lo/r_hi: sweep range; None = minimum feasible R and ``r_lo + 6``.
+      impl: divided-difference search implementation (core.searches.IMPLS).
+      k_max: precision-slack search cap of decision step 1; None defers to
+        the target policy's cap.
+      workers: RegionPool process count (None/1 = in-process).
+      cache_dir: table persistence directory; None = $REPRO_TABLE_CACHE or
+        ``artifacts/tables``.
+    """
+
+    kind: str = "recip"
+    bits: int | None = None
+    out_bits: int | None = None
+    ulp: float = 1.0
+    degree: int | None = None
+    lookup_bits: int | None = None
+    r_lo: int | None = None
+    r_hi: int | None = None
+    impl: str = "hull"
+    k_max: int | None = None
+    workers: int | None = None
+    cache_dir: str | None = None
+
+    def spec(self) -> FunctionSpec:
+        kw: dict = {"ulp": self.ulp}
+        if self.out_bits is not None:
+            kw["out_bits"] = self.out_bits
+        if self.bits is None:
+            # default width: the ML-table defaults (out_bits etc.) apply
+            return spec_for(self.kind, None, **kw)
+        # explicit width: DEFAULTS kwargs are tuned for the default width
+        # only — use the maker's own defaults, as the seed's get_spec did
+        return get_spec(self.kind, self.bits, **kw)
+
+    def resolved_cache_dir(self) -> pathlib.Path:
+        if self.cache_dir is not None:
+            return pathlib.Path(self.cache_dir)
+        return default_cache_dir()

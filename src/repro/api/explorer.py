@@ -1,0 +1,300 @@
+"""The Explorer session: one object that owns the pool, the envelope cache
+and the table persistence layer.
+
+Seed pain points this replaces (ISSUE 1):
+
+  * ``run_decision`` forked a fresh process pool per call — the session owns
+    one ``RegionPool`` for its whole lifetime.
+  * ``RegionSpace`` envelopes (§II Eqns 9-10) were recomputed per call even
+    though they are target-independent — the session computes them at most
+    once per (spec, R) and every target / k-value / degree reuses them
+    (``envelope_stats`` exposes the compute/hit counters).
+  * ``numerics/registry.py`` kept its own disk+memory cache — that cache is
+    now the Explorer's persistence layer (``get_table``).
+
+Typical use::
+
+    with Explorer(ExploreConfig(kind="recip", bits=12)) as ex:
+        asic = ex.explore(target="asic").best
+        tpu = ex.explore(target="pallas-tpu").best   # same envelopes, re-decided
+
+See DESIGN.md §6 for the architecture.
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import re
+import threading
+import time
+
+from repro.api.config import DEFAULTS, ExploreConfig, spec_for
+from repro.api.result import DesignSpaceResult, ExploreEntry
+from repro.api.target import Target, get_target
+from repro.core.decision import _run_decision_pooled
+from repro.core.designspace import RegionSpace, _space_worker
+from repro.core.funcspec import FunctionSpec
+from repro.core.pmap import RegionPool
+from repro.core.table import TableDesign
+
+
+class Explorer:
+    """A design-space exploration session.
+
+    Cheap to construct; the worker pool (when ``config.workers > 1``) starts
+    lazily on first use and is released by ``close()`` / context exit. All
+    caches are per-session except the table disk cache, which is shared
+    through ``config.cache_dir``. Table fetches, the envelope cache and the
+    pool lifecycle are lock-guarded, so concurrent threads can share one
+    session (envelope computation serializes; decision runs don't).
+    """
+
+    def __init__(self, config: ExploreConfig | None = None,
+                 *, target: str | Target = "asic"):
+        self.config = config or ExploreConfig()
+        self.default_target = target
+        self._pool: RegionPool | None = None
+        self._spaces: dict[tuple, list[RegionSpace]] = {}
+        self._space_computes = 0
+        self._space_hits = 0
+        self._spec_keys: dict[int, tuple] = {}
+        self._spec_refs: dict[int, FunctionSpec] = {}
+        self._tables: dict[str, TableDesign] = {}
+        self._lock = threading.Lock()  # table cache
+        # envelope cache / pool lifecycle / spec-key memo; RLock because
+        # envelopes() -> _get_pool() nests (lock order: _lock before _l)
+        self._state_lock = threading.RLock()
+
+    # -- lifecycle ---------------------------------------------------------
+    def __enter__(self) -> "Explorer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def close(self) -> None:
+        with self._state_lock:
+            if self._pool is not None:
+                self._pool.__exit__()
+                self._pool = None
+
+    def _get_pool(self) -> RegionPool:
+        with self._state_lock:
+            if self._pool is None:
+                self._pool = RegionPool(self.config.workers)
+                self._pool.__enter__()
+            return self._pool
+
+    # -- envelope cache ----------------------------------------------------
+    @property
+    def envelope_stats(self) -> dict[str, int]:
+        """{'computed': n, 'hits': m} — asserts the once-per-(spec, R)
+        contract in tests."""
+        return {"computed": self._space_computes, "hits": self._space_hits}
+
+    _SPEC_MEMO_CAP = 1024  # id-keyed memo entries before a wholesale reset
+
+    def _spec_key(self, spec: FunctionSpec) -> tuple:
+        """Value-identity for a spec: name/widths/ulp + bound fingerprint
+        (names don't capture kwargs like sigmoid's input range).
+
+        The id-keyed memo avoids re-hashing bounds for a spec object used
+        across many calls; it pins the spec (id() must stay unique) and is
+        reset at a size cap so a long-lived session fed a fresh spec object
+        per request cannot grow without bound — the value key, and thus the
+        envelope cache, is unaffected by a reset."""
+        key = self._spec_keys.get(id(spec))
+        if key is None:
+            lo, hi = spec.bound_arrays()
+            digest = hashlib.sha1(lo.tobytes() + hi.tobytes()).hexdigest()[:16]
+            key = (spec.name, spec.in_bits, spec.out_bits, spec.ulp, digest)
+            if len(self._spec_keys) >= self._SPEC_MEMO_CAP:
+                self._spec_keys.clear()
+                self._spec_refs.clear()
+            self._spec_keys[id(spec)] = key
+            self._spec_refs[id(spec)] = spec
+        return key
+
+    def envelopes(self, spec: FunctionSpec, lookup_bits: int,
+                  impl: str | None = None) -> list[RegionSpace]:
+        """Per-region §II envelopes — computed at most once per (spec, R)."""
+        impl = impl or self.config.impl
+        with self._state_lock:
+            key = (*self._spec_key(spec), lookup_bits, impl)
+            spaces = self._spaces.get(key)
+            if spaces is not None:
+                self._space_hits += 1
+                return spaces
+            L, U = spec.region_bounds(lookup_bits)
+            spaces = self._get_pool().map(
+                _space_worker, [(L[r], U[r], impl) for r in range(L.shape[0])])
+            self._spaces[key] = spaces
+            self._space_computes += 1
+            return spaces
+
+    def feasible(self, spec: FunctionSpec, lookup_bits: int,
+                 impl: str | None = None) -> bool:
+        """Eqns 9-10 over every region: does ANY piecewise quadratic exist?"""
+        return all(s.feasible for s in self.envelopes(spec, lookup_bits, impl))
+
+    def min_regions(self, spec: FunctionSpec, r_max: int | None = None,
+                    impl: str | None = None) -> int | None:
+        """Smallest feasible R — the paper's 'minimum number of regions'."""
+        r_max = spec.in_bits if r_max is None else r_max
+        for r in range(0, r_max + 1):
+            if self.feasible(spec, r, impl):
+                return r
+        return None
+
+    # -- exploration -------------------------------------------------------
+    def explore_r(self, spec: FunctionSpec, lookup_bits: int,
+                  target: str | Target | None = None,
+                  degree: int | None = None, impl: str | None = None
+                  ) -> ExploreEntry | None:
+        """Run one target's decision procedure at a fixed LUT height."""
+        tgt = get_target(target if target is not None else self.default_target)
+        impl = impl or self.config.impl
+        degree = degree if degree is not None else self.config.degree
+        t0 = time.perf_counter()
+        spaces = self.envelopes(spec, lookup_bits, impl)
+        if not all(s.feasible for s in spaces):
+            return None
+        k_max = (self.config.k_max if self.config.k_max is not None
+                 else tgt.policy.k_max)
+        out = _run_decision_pooled(
+            spec, lookup_bits, degree, impl, k_max,
+            self._get_pool(), spaces=spaces, policy=tgt.policy)
+        if out is None:
+            return None
+        design, report = out
+        ad = tgt.estimate(design)
+        return ExploreEntry(design, report, ad.area, ad.delay,
+                            time.perf_counter() - t0,
+                            tgt.objective(design, ad))
+
+    def explore(self, spec: FunctionSpec | None = None,
+                *, target: str | Target | None = None,
+                lookup_bits: int | None = None,
+                r_lo: int | None = None, r_hi: int | None = None,
+                degree: int | None = None, impl: str | None = None
+                ) -> DesignSpaceResult:
+        """Sweep LUT heights under one target; returns the full frontier.
+
+        Defaults come from the session config: a fixed ``lookup_bits`` if
+        set, else ``[r_lo, r_hi]``, else [minimum feasible R, +6]. Swapping
+        ``target`` re-decides over the *cached* envelopes — no regeneration.
+        """
+        spec = spec if spec is not None else self.config.spec()
+        tgt = get_target(target if target is not None else self.default_target)
+        degree = degree if degree is not None else self.config.degree
+        if lookup_bits is None:
+            lookup_bits = self.config.lookup_bits
+        min_r: int | None = None
+        if lookup_bits is not None:
+            heights = [lookup_bits]
+        else:
+            r_lo = r_lo if r_lo is not None else self.config.r_lo
+            if r_lo is None:
+                r_lo = min_r = self.min_regions(spec, impl=impl)
+                if r_lo is None:
+                    return DesignSpaceResult(spec.name, tgt.name, [], None)
+            r_hi = r_hi if r_hi is not None else self.config.r_hi
+            if r_hi is None:
+                r_hi = min(spec.in_bits, r_lo + 6)
+            heights = list(range(r_lo, r_hi + 1))
+        entries = []
+        for r in heights:
+            e = self.explore_r(spec, r, tgt, degree, impl)
+            if e is not None:
+                entries.append(e)
+        return DesignSpaceResult(spec.name, tgt.name, entries, min_r)
+
+    # -- table persistence (absorbed from numerics/registry) ---------------
+    def get_table(self, kind: str, bits: int | None = None,
+                  lookup_bits: int | None = None, degree: int | None = None,
+                  target: str | Target | None = None, **kw) -> TableDesign:
+        """Fetch (generating + verifying if needed) a cached table artifact.
+
+        Disk layout and key format are the seed registry's, so existing
+        ``artifacts/tables`` caches stay valid; non-default targets get a
+        suffixed key.
+        """
+        tgt = get_target(target if target is not None else self.default_target)
+        d_bits, _, d_r = DEFAULTS[kind]
+        bits = bits if bits is not None else d_bits
+        r = lookup_bits if lookup_bits is not None else d_r
+        # resolve the session default now so the cache key names the degree
+        # the design is actually generated with
+        degree = degree if degree is not None else self.config.degree
+        key = f"{kind}_{bits}b_R{r}_d{degree or 0}"
+        if tgt.name != "asic":
+            key += f"_{tgt.name}"
+        if kw:  # spec overrides (ulp, out_bits, ...) change the artifact
+            raw = "_".join(f"{k}{kw[k]}" for k in sorted(kw))
+            key += "_" + re.sub(r"[^\w.\-]", "", raw)
+        with self._lock:
+            if key in self._tables:
+                return self._tables[key]
+            cache_dir = self.config.resolved_cache_dir()
+            path = cache_dir / f"{key}.json"
+            if path.exists():
+                design = TableDesign.from_dict(json.loads(path.read_text()))
+                self._tables[key] = design
+                return design
+            spec = spec_for(kind, bits, **kw)
+            entry = None
+            for r_try in range(r, min(bits, r + 4) + 1):
+                entry = self.explore_r(spec, r_try, tgt, degree)
+                if entry is not None:
+                    break
+            if entry is None:
+                raise ValueError(f"no feasible table for {key}")
+            ok, worst = entry.design.verify(spec)
+            assert ok, f"unverified table {key}: worst={worst}"
+            cache_dir.mkdir(parents=True, exist_ok=True)
+            tmp = path.with_suffix(".tmp")
+            tmp.write_text(entry.design.to_json())
+            tmp.replace(path)
+            self._tables[key] = entry.design
+            return entry.design
+
+
+# ---------------------------------------------------------------------------
+# Default session: what the deprecation shims and the serving stack use
+# ---------------------------------------------------------------------------
+
+_default: Explorer | None = None
+_default_lock = threading.Lock()
+
+
+def default_explorer() -> Explorer:
+    """Process-wide Explorer used by ``repro.api.get_table`` and the legacy
+    ``generate_table`` / ``sweep_lub`` / ``registry.get_table`` shims."""
+    global _default
+    with _default_lock:
+        if _default is None:
+            _default = Explorer()
+        return _default
+
+
+def set_default_explorer(explorer: Explorer) -> None:
+    """Install ``explorer`` as the process-wide default session.
+
+    Everything that resolves tables lazily (the numerics backends inside
+    jitted model code, the legacy shims) goes through ``default_explorer()``;
+    installing a configured session here is how a caller points all of it at
+    one cache dir / worker pool."""
+    global _default
+    with _default_lock:
+        _default = explorer
+
+
+def get_table(kind: str, bits: int | None = None, lookup_bits: int | None = None,
+              degree: int | None = None, **kw) -> TableDesign:
+    """Module-level convenience: ``default_explorer().get_table(...)``."""
+    return default_explorer().get_table(kind, bits, lookup_bits, degree, **kw)
+
+
+def explore(spec: FunctionSpec | None = None, **kw) -> DesignSpaceResult:
+    """Module-level convenience: ``default_explorer().explore(...)``."""
+    return default_explorer().explore(spec, **kw)

@@ -32,7 +32,7 @@ import numpy as np
 
 
 def _leaf_paths(tree) -> list[tuple[str, object]]:
-    flat = jax.tree.flatten_with_path(tree)[0]
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     out = []
     for path, leaf in flat:
         name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)

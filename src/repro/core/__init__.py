@@ -1,12 +1,13 @@
 """Core library: the paper's complete polynomial-interpolation design space.
 
-Public API:
+The public entry point is ``repro.api`` (Explorer sessions, Target registry,
+ExploreConfig); this package holds the underlying machinery:
     get_spec            — fixed-point function specifications (funcspec)
-    generate_table      — spec -> verified TableDesign (generate)
-    sweep_lub           — LUT-height sweep (generate)
-    run_decision        — §III decision procedure (decision)
+    run_decision        — §III decision procedure, policy-driven (decision)
     regions_feasible    — Eqns 9-10 feasibility (designspace)
     generate_remez_table— FloPoCo-style Remez baseline (remez)
+Legacy shims (generate_table, sweep_lub, generate_for_r, min_feasible_r)
+delegate to the default Explorer and stay importable from here.
 """
 from repro.core.decision import run_decision  # noqa: F401
 from repro.core.designspace import build_design_space, minimal_k, regions_feasible  # noqa: F401

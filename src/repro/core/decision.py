@@ -239,6 +239,25 @@ def alg1_interval_precision(sets: list[IntervalSet]) -> CoeffMeta:
 # Full decision procedure
 # --------------------------------------------------------------------------
 
+@dataclasses.dataclass(frozen=True)
+class DecisionPolicy:
+    """Ordering knobs of the §III procedure — the part of a hardware target
+    that is a *decision procedure* rather than a cost model.
+
+    The paper's ASIC ordering maximizes both input truncations because the
+    square path dominates the critical path. Other technologies weigh the
+    steps differently: an FPGA soft-multiplier target still wants truncation
+    (fewer logic LUTs), while a vector-unit target (Pallas/TPU) gains nothing
+    from truncating — lane width is fixed — and skips straight to Algorithm 1
+    width minimization. See DESIGN.md §6.
+    """
+
+    prefer_linear: bool = True  # paper rule: linear iff feasible
+    maximize_sq_trunc: bool = True  # §III step 2
+    maximize_lin_trunc: bool = True  # §III step 3
+    k_max: int = 24
+
+
 @dataclasses.dataclass
 class DecisionReport:
     lookup_bits: int
@@ -256,31 +275,48 @@ def _trunc_worker(args):
 
 
 def run_decision(spec: FunctionSpec, lookup_bits: int, degree: int | None = None,
-                 impl: str = "vectorized", k_max: int = 24,
-                 processes: int | None = None
+                 impl: str = "vectorized", k_max: int | None = None,
+                 processes: int | None = None, pool=None, spaces=None,
+                 policy: DecisionPolicy | None = None
                  ) -> tuple[TableDesign, DecisionReport] | None:
     """Run the full §III procedure; returns a verified TableDesign or None if
     no piecewise polynomial of the requested degree exists at this R.
-    ``processes > 1`` parallelizes the per-region work (paper §V future work)."""
+
+    ``processes > 1`` parallelizes the per-region work (paper §V future work);
+    an externally-owned ``pool`` takes precedence (the Explorer session keeps
+    one alive across the whole R-sweep instead of forking per call).
+    ``spaces`` injects precomputed per-region envelopes; ``policy`` swaps the
+    step ordering — together they are what makes "retargeting = a modified
+    decision procedure" cheap.
+    """
     from repro.core.pmap import RegionPool
 
-    with RegionPool(processes) as pool:
-        return _run_decision_pooled(spec, lookup_bits, degree, impl, k_max, pool)
+    policy = policy or DecisionPolicy()
+    if k_max is None:
+        k_max = policy.k_max
+    if pool is not None:
+        return _run_decision_pooled(spec, lookup_bits, degree, impl, k_max, pool,
+                                    spaces=spaces, policy=policy)
+    with RegionPool(processes) as owned:
+        return _run_decision_pooled(spec, lookup_bits, degree, impl, k_max, owned,
+                                    spaces=spaces, policy=policy)
 
 
-def _run_decision_pooled(spec, lookup_bits, degree, impl, k_max, pool
+def _run_decision_pooled(spec, lookup_bits, degree, impl, k_max, pool,
+                         spaces=None, policy: DecisionPolicy | None = None
                          ) -> tuple[TableDesign, DecisionReport] | None:
+    policy = policy or DecisionPolicy()
     # -- step 1: minimal k, and lin-vs-quad choice (paper: linear iff 0 is in
     # every region's a-interval — smaller, faster hardware) ----------------
     lin_ds = minimal_k(spec, lookup_bits, force_linear=True, impl=impl, k_max=k_max,
-                       pool=pool)
+                       pool=pool, spaces=spaces)
     linear_possible = lin_ds is not None and lin_ds.feasible
-    if degree == 1 or (degree is None and linear_possible):
+    if degree == 1 or (degree is None and policy.prefer_linear and linear_possible):
         ds = lin_ds
         deg = 1
     else:
         ds = minimal_k(spec, lookup_bits, force_linear=False, impl=impl, k_max=k_max,
-                       pool=pool)
+                       pool=pool, spaces=spaces)
         deg = 2
     if ds is None or not ds.feasible:
         return None
@@ -292,7 +328,7 @@ def _run_decision_pooled(spec, lookup_bits, degree, impl, k_max, pool
 
     # -- step 2: maximize square truncation i (quadratic only) -------------
     sq_t = 0
-    if deg == 2 and w > 0:
+    if policy.maximize_sq_trunc and deg == 2 and w > 0:
         for i in range(1, w + 1):
             rows = pool.map(_trunc_worker,
                             [(ds.L[r], ds.U[r], k, a_sets[r], i, 0, impl)
@@ -308,7 +344,7 @@ def _run_decision_pooled(spec, lookup_bits, degree, impl, k_max, pool
                         for r in range(n_regions)])
     if any(not c for c in region_cands):
         return None  # should not happen: step-2 kept feasibility
-    for j in range(1, w + 1):
+    for j in range(1, (w if policy.maximize_lin_trunc else 0) + 1):
         trial = pool.map(
             _trunc_worker,
             [(ds.L[r], ds.U[r], k, [c.a for c in region_cands[r]], sq_t, j, impl)

@@ -250,14 +250,21 @@ def regions_feasible(spec: FunctionSpec, lookup_bits: int, impl: str = "vectoriz
 
 def minimal_k(spec: FunctionSpec, lookup_bits: int, force_linear: bool = False,
               impl: str = "vectorized", k_max: int = 24,
-              pool=None) -> DesignSpace | None:
+              pool=None, spaces: list[RegionSpace] | None = None
+              ) -> DesignSpace | None:
     """Decision step 1: smallest k giving >=1 integer candidate per region.
 
     "k can be increased until the intervals contain an integer" (paper §II);
-    across all regions k is constant.
+    across all regions k is constant. ``spaces`` short-circuits the envelope
+    computation — RegionSpace is target-independent, so callers (the
+    ``repro.api.Explorer`` session) compute it once per (spec, R) and reuse
+    it across k values, targets, and decision policies.
     """
-    ok, spaces = regions_feasible(spec, lookup_bits, impl, pool=pool)
-    if not ok:
+    if spaces is None:
+        ok, spaces = regions_feasible(spec, lookup_bits, impl, pool=pool)
+        if not ok:
+            return None
+    elif not all(s.feasible for s in spaces):
         return None
     for k in range(k_max + 1):
         ds = build_design_space(spec, lookup_bits, k, force_linear, impl, spaces,

@@ -1,18 +1,24 @@
-"""Top-level table generation: the public entry point of the core library.
+"""Legacy table-generation entry points — thin shims over ``repro.api``.
 
-``generate_table(spec)`` reproduces the paper's flow end to end: find the
-feasible lookup-bit range, run the §III decision procedure per R, rank by the
-area-delay proxy (paper: "We select the number of lookup bits based on the
-best area-delay product") and return a verified artifact.
+.. deprecated::
+    ``generate_table`` / ``sweep_lub`` / ``generate_for_r`` /
+    ``min_feasible_r`` predate the :class:`repro.api.Explorer` session and
+    are kept for callers of the seed API. They delegate to the process-wide
+    default Explorer (so they now share its envelope cache and worker pool)
+    and preserve the seed's exact semantics: sweep from the minimum feasible
+    R over 7 heights, rank by the ASIC area-delay product.
+
+New code should use::
+
+    from repro.api import Explorer, ExploreConfig
+    with Explorer(ExploreConfig(...)) as ex:
+        best = ex.explore(spec).best
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 
-from repro.core import area as area_model
-from repro.core.decision import DecisionReport, run_decision
-from repro.core.designspace import regions_feasible
+from repro.core.decision import DecisionReport
 from repro.core.funcspec import FunctionSpec
 from repro.core.table import TableDesign
 
@@ -30,56 +36,52 @@ class GenResult:
         return self.area * self.delay
 
 
+def _as_genresult(entry) -> GenResult:
+    return GenResult(entry.design, entry.report, entry.runtime_s,
+                     entry.area, entry.delay)
+
+
 def generate_for_r(spec: FunctionSpec, lookup_bits: int, degree: int | None = None,
                    impl: str = "hull", processes: int | None = None
                    ) -> GenResult | None:
-    t0 = time.perf_counter()
-    out = run_decision(spec, lookup_bits, degree=degree, impl=impl,
-                       processes=processes)
-    if out is None:
-        return None
-    design, report = out
-    ad = area_model.estimate(design)
-    return GenResult(design, report, time.perf_counter() - t0, ad.area, ad.delay)
+    """Deprecated shim: one fixed-R decision run on the default Explorer
+    (``processes`` is ignored — configure ``ExploreConfig.workers`` instead)."""
+    from repro.api import default_explorer
+
+    entry = default_explorer().explore_r(spec, lookup_bits, target="asic",
+                                         degree=degree, impl=impl)
+    return None if entry is None else _as_genresult(entry)
 
 
 def min_feasible_r(spec: FunctionSpec, impl: str = "hull",
                    r_max: int | None = None) -> int | None:
-    """Smallest R whose every region passes Eqns 9-10 (min #regions needed —
-    the 'minimum number of regions' knowledge the abstract advertises)."""
-    r_max = spec.in_bits if r_max is None else r_max
-    for r in range(0, r_max + 1):
-        ok, _ = regions_feasible(spec, r, impl)
-        if ok:
-            return r
-    return None
+    """Deprecated shim: smallest R whose every region passes Eqns 9-10
+    (min #regions needed — the 'minimum number of regions' knowledge the
+    abstract advertises)."""
+    from repro.api import default_explorer
+
+    return default_explorer().min_regions(spec, r_max=r_max, impl=impl)
 
 
 def sweep_lub(spec: FunctionSpec, r_lo: int | None = None, r_hi: int | None = None,
               degree: int | None = None, impl: str = "hull") -> list[GenResult]:
-    """Generate designs across LUT heights (Fig 3's x-axis)."""
-    if r_lo is None:
-        r_lo = min_feasible_r(spec, impl)
-        if r_lo is None:
-            return []
-    r_hi = min(spec.in_bits, r_lo + 6) if r_hi is None else r_hi
-    out = []
-    for r in range(r_lo, r_hi + 1):
-        res = generate_for_r(spec, r, degree=degree, impl=impl)
-        if res is not None:
-            out.append(res)
-    return out
+    """Deprecated shim: designs across LUT heights (Fig 3's x-axis)."""
+    from repro.api import default_explorer
+
+    res = default_explorer().explore(spec, target="asic", r_lo=r_lo, r_hi=r_hi,
+                                     degree=degree, impl=impl)
+    return [_as_genresult(e) for e in res.entries]
 
 
 def generate_table(spec: FunctionSpec, lookup_bits: int | None = None,
                    degree: int | None = None, impl: str = "hull") -> GenResult:
-    """Best-area-delay design; fixed R if given, else swept."""
-    if lookup_bits is not None:
-        res = generate_for_r(spec, lookup_bits, degree=degree, impl=impl)
-        if res is None:
+    """Deprecated shim: best-area-delay design; fixed R if given, else swept."""
+    from repro.api import default_explorer
+
+    res = default_explorer().explore(spec, target="asic", lookup_bits=lookup_bits,
+                                     degree=degree, impl=impl)
+    if not res.entries:
+        if lookup_bits is not None:
             raise ValueError(f"no feasible design: {spec.name} R={lookup_bits}")
-        return res
-    results = sweep_lub(spec, degree=degree, impl=impl)
-    if not results:
         raise ValueError(f"no feasible design for {spec.name}")
-    return min(results, key=lambda g: g.area_delay)
+    return _as_genresult(res.best)

@@ -8,7 +8,7 @@ from repro.core.table import TableDesign
 from repro.kernels.flashattn.kernel import flash_attention
 from repro.kernels.flashattn.ref import flash_attention_ref
 from repro.kernels.softmax.ops import _meta
-from repro.numerics.registry import get_table
+from repro.api import get_table
 
 
 def attention_fused(q: jax.Array, k: jax.Array, v: jax.Array, *,

@@ -8,7 +8,7 @@ from repro.core.table import TableDesign
 from repro.kernels.rmsnorm.kernel import BLOCK_ROWS, fused_rmsnorm
 from repro.kernels.rmsnorm.ref import fused_rmsnorm_ref
 from repro.kernels.softmax.ops import _meta
-from repro.numerics.registry import get_table
+from repro.api import get_table
 
 
 def approx_rmsnorm_fused(x: jax.Array, gamma: jax.Array,

@@ -7,7 +7,7 @@ import jax.numpy as jnp
 from repro.core.table import TableDesign
 from repro.kernels.softmax.kernel import BLOCK_ROWS, fused_softmax
 from repro.kernels.softmax.ref import fused_softmax_ref
-from repro.numerics.registry import get_table
+from repro.api import get_table
 
 
 def _meta(design: TableDesign) -> dict:

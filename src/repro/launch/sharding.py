@@ -156,7 +156,7 @@ def param_logical_axes(name: str, ndim: int, shape: tuple = (),
 def param_specs(shapes: dict, mesh: Mesh, rules: dict | None = None) -> dict:
     """ShapeDtypeStruct tree -> NamedSharding tree (same structure)."""
     rules = rules or PARAM_RULES
-    flat, treedef = jax.tree.flatten_with_path(shapes)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
     out = []
     for path, leaf in flat:
         name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
@@ -208,7 +208,7 @@ def cache_specs_sharding(cache_shapes: dict, cfg, mesh: Mesh) -> dict:
         rules["tp"] = (("model",),)
         return NamedSharding(mesh, logical_spec(names, s.shape, mesh, rules))
 
-    flat, treedef = jax.tree.flatten_with_path(cache_shapes)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
     return jax.tree.unflatten(treedef, [one_leaf(p, s) for p, s in flat])
 
 

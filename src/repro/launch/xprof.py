@@ -140,7 +140,9 @@ def _split_computations(hlo_text: str) -> tuple[dict[str, list[str]], str | None
 
 
 _DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=")
-_OPERAND_RE = re.compile(r"\(\s*%([\w\.\-]+)")
+# first operand of a call site; the operand's element type may or may not be
+# spelled inline depending on jaxlib's HLO printer version
+_OPERAND_RE = re.compile(r"\(\s*(?:\w+\[[^\]]*\](?:\{[^}]*\})?\s+)?%([\w\.\-]+)")
 
 
 def _build_symtab(comps: dict[str, list[str]]) -> dict[str, list[int]]:

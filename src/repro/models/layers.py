@@ -36,7 +36,7 @@ def stack_specs(tree: ShapeTree, n: int) -> ShapeTree:
 def init_tree(key: jax.Array, shapes: ShapeTree, scale_rules: Callable[[str, Any], float] | None = None) -> Params:
     """Materialize a shape tree: truncated-normal fan-in init, zeros for
     biases/norm offsets, ones for norm scales."""
-    flat, treedef = jax.tree.flatten_with_path(shapes)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
     keys = jax.random.split(key, len(flat))
 
     def one(path, s, k):

@@ -21,7 +21,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.table import TableDesign
-from repro.numerics.registry import get_table
+from repro.api import get_table
 
 LOG2E = 1.4426950408889634
 

@@ -1,78 +1,24 @@
-"""Table registry: generated-once, disk-cached interpolation artifacts.
+"""Table registry — deprecation shim over the ``repro.api`` Explorer.
 
-The ML-numerics tables (softmax exponential, reciprocal, rsqrt, SiLU, ...)
-are generated by the paper's pipeline at fixed default precisions and cached
-as JSON under ``artifacts/tables/`` so tests/benchmarks/models never pay
-generation twice. Widths are chosen so every coefficient fits int32 and the
-one-hot LUT contraction is exact in fp32 (DESIGN.md §7.5).
+.. deprecated::
+    The disk/memory cache that lived here is now the Explorer session's
+    persistence layer (:meth:`repro.api.Explorer.get_table`), and the
+    per-kind defaults table moved to :data:`repro.api.config.DEFAULTS` so
+    widths/lookup-bits live in exactly one place. This module re-exports
+    both so seed-era imports (``from repro.numerics.registry import
+    get_table``) keep working; key format and the ``artifacts/tables``
+    layout are unchanged (DESIGN.md §7.5).
 """
 from __future__ import annotations
 
-import json
-import os
-import pathlib
-import threading
-
-from repro.core.funcspec import FunctionSpec, get_spec
-from repro.core.generate import generate_for_r
+from repro.api.config import DEFAULTS, spec_for  # noqa: F401
 from repro.core.table import TableDesign
-
-_CACHE_DIR = pathlib.Path(
-    os.environ.get("REPRO_TABLE_CACHE", pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "tables")
-)
-
-# kind -> (in_bits, spec kwargs, lookup_bits)
-DEFAULTS: dict[str, tuple[int, dict, int]] = {
-    "exp2neg": (12, {"out_bits": 13}, 6),
-    "recip": (12, {}, 6),
-    "rsqrt": (12, {"out_bits": 13}, 6),
-    "silu": (12, {"out_bits": 12}, 6),
-    "sigmoid": (12, {"out_bits": 12}, 6),
-    "softplus": (12, {"out_bits": 12}, 6),
-    "gelu": (12, {"out_bits": 12}, 6),
-    "log2": (12, {"out_bits": 13}, 6),
-    "exp2": (12, {"out_bits": 12}, 6),
-}
-
-_mem_cache: dict[str, TableDesign] = {}
-_lock = threading.Lock()
-
-
-def spec_for(kind: str, bits: int | None = None, **kw) -> FunctionSpec:
-    d_bits, d_kw, _ = DEFAULTS[kind]
-    merged = dict(d_kw)
-    merged.update(kw)
-    return get_spec(kind, bits if bits is not None else d_bits, **merged)
 
 
 def get_table(kind: str, bits: int | None = None, lookup_bits: int | None = None,
               degree: int | None = None, **kw) -> TableDesign:
-    """Fetch (generating + verifying if needed) the table for ``kind``."""
-    d_bits, _, d_r = DEFAULTS[kind]
-    bits = bits if bits is not None else d_bits
-    r = lookup_bits if lookup_bits is not None else d_r
-    key = f"{kind}_{bits}b_R{r}_d{degree or 0}"
-    with _lock:
-        if key in _mem_cache:
-            return _mem_cache[key]
-        path = _CACHE_DIR / f"{key}.json"
-        if path.exists():
-            design = TableDesign.from_dict(json.loads(path.read_text()))
-            _mem_cache[key] = design
-            return design
-        spec = spec_for(kind, bits, **kw)
-        res = None
-        for r_try in range(r, min(bits, r + 4) + 1):
-            res = generate_for_r(spec, r_try, degree=degree)
-            if res is not None:
-                break
-        if res is None:
-            raise ValueError(f"no feasible table for {key}")
-        ok, worst = res.design.verify(spec)
-        assert ok, f"unverified table {key}: worst={worst}"
-        _CACHE_DIR.mkdir(parents=True, exist_ok=True)
-        tmp = path.with_suffix(".tmp")
-        tmp.write_text(res.design.to_json())
-        tmp.replace(path)
-        _mem_cache[key] = res.design
-        return res.design
+    """Deprecated shim: fetch (generating + verifying if needed) the table
+    for ``kind`` from the process-wide default Explorer."""
+    from repro.api import default_explorer
+
+    return default_explorer().get_table(kind, bits, lookup_bits, degree, **kw)

@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import DEFAULTS, default_explorer
 from repro.models import transformer as tf
 from repro.numerics.ops import get_numerics
 
@@ -60,6 +61,22 @@ class ServeEngine:
         self.slots, self.cache_len = slots, cache_len
         numerics = get_numerics(cfg.numerics)
         self.numerics = numerics
+        if cfg.numerics == "interp":
+            # Warm every table the decode path can touch, so generation (if
+            # not disk-cached yet) happens at engine construction rather than
+            # inside the first jitted step. The jitted numerics resolve
+            # tables through the process default session, so warm-up must use
+            # the same one; to serve from a custom session (cache dir, worker
+            # pool), install it with repro.api.set_default_explorer() before
+            # constructing the engine.
+            ex = default_explorer()
+            # silu/gelu are hardcoded by MoE/SSM layers and the vision-stub
+            # projector regardless of cfg.act, so always warm them too.
+            kinds = {"exp2neg", "recip", "rsqrt", "silu", "gelu"}
+            if getattr(cfg, "act", None) in DEFAULTS:
+                kinds.add(cfg.act)
+            for kind in sorted(kinds):
+                ex.get_table(kind)
         self.caches = tf.init_cache(cfg, slots, cache_len)
         self.pos = np.zeros(slots, np.int32)  # next position per slot
         self.cur = np.full(slots, -1, np.int32)  # current token per slot

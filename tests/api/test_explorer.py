@@ -1,0 +1,199 @@
+"""Unified Explorer/Target API: back-compat, registry, envelope reuse."""
+import numpy as np
+import pytest
+
+from repro.api import (DecisionPolicy, ExploreConfig, Explorer, get_spec,
+                       get_target, list_targets, register_target)
+from repro.api.target import _REGISTRY
+from repro.core.generate import generate_table
+
+
+def _same_design(a, b):
+    return (a.lookup_bits == b.lookup_bits and a.degree == b.degree
+            and a.k == b.k and a.sq_trunc == b.sq_trunc
+            and a.lin_trunc == b.lin_trunc
+            and np.array_equal(a.a, b.a) and np.array_equal(a.b, b.b)
+            and np.array_equal(a.c, b.c))
+
+
+# ------------------------------------------------------------- back-compat
+
+@pytest.mark.parametrize("kind,bits", [("recip", 8), ("exp2", 8)])
+def test_generate_table_shim_matches_explorer_best(kind, bits):
+    """Golden: the legacy entry point and the session API agree exactly."""
+    spec = get_spec(kind, bits)
+    legacy = generate_table(spec)
+    with Explorer() as ex:
+        best = ex.explore(spec, target="asic").best
+    assert _same_design(legacy.design, best.design)
+    assert legacy.area == best.area and legacy.delay == best.delay
+
+
+def test_explore_fixed_r_matches_legacy_error():
+    spec = get_spec("recip", 8)
+    with pytest.raises(ValueError, match="no feasible design"):
+        generate_table(spec, lookup_bits=0)
+
+
+def test_config_spec_with_explicit_bits_matches_get_spec():
+    """Explicit widths must NOT inherit DEFAULTS kwargs tuned for the
+    default width (seed semantics: quickstart --kind log2 --bits 16
+    means 16 -> 17 bits)."""
+    assert ExploreConfig(kind="log2", bits=16).spec().out_bits == \
+        get_spec("log2", 16).out_bits == 17
+    # default width still picks up the ML-table defaults
+    assert ExploreConfig(kind="log2").spec().out_bits == 13
+
+
+def test_config_degree_consistent_across_entry_points():
+    """explore_r and explore honor ExploreConfig.degree identically."""
+    spec = get_spec("recip", 8)
+    with Explorer(ExploreConfig(degree=1)) as ex:
+        # linear is infeasible at R=2 (needs a quadratic): both paths agree
+        assert ex.explore_r(spec, 2) is None
+        assert not ex.explore(spec, lookup_bits=2).entries
+        assert ex.explore_r(spec, 4).design.degree == 1
+
+
+def test_target_policy_k_max_respected():
+    """ExploreConfig.k_max=None defers to the target policy's cap."""
+    @register_target("test-kmax")
+    class TinyK:
+        policy = DecisionPolicy(k_max=3)
+
+        def estimate(self, design):
+            from repro.core.area import AreaDelay
+            return AreaDelay(1.0, 1.0)
+
+        def objective(self, design, ad):
+            return 0.0
+
+    try:
+        spec = get_spec("recip", 8)
+        with Explorer() as ex:
+            # R=2 needs k~9: a k cap of 3 must make the decision fail ...
+            assert ex.explore_r(spec, 2, target="test-kmax") is None
+        # ... unless the session config explicitly overrides the cap
+        with Explorer(ExploreConfig(k_max=24)) as ex:
+            assert ex.explore_r(spec, 2, target="test-kmax") is not None
+    finally:
+        _REGISTRY.pop("test-kmax", None)
+
+
+# --------------------------------------------------------- target registry
+
+def test_builtin_targets_registered():
+    assert {"asic", "fpga-lut", "pallas-tpu"} <= set(list_targets())
+
+
+def test_register_target_roundtrip():
+    @register_target("test-rt")
+    class TestTarget:
+        policy = DecisionPolicy(maximize_sq_trunc=False)
+
+        def estimate(self, design):
+            from repro.core.area import AreaDelay
+            return AreaDelay(1.0, 1.0)
+
+        def objective(self, design, ad):
+            return design.lookup_bits
+
+    try:
+        tgt = get_target("test-rt")
+        assert tgt.name == "test-rt"
+        assert not tgt.policy.maximize_sq_trunc
+        assert "test-rt" in list_targets()
+        # a Target instance passes through get_target unchanged, and the
+        # decorator rebinds the symbol to that same registered instance
+        assert get_target(tgt) is tgt
+        assert TestTarget is tgt
+        assert callable(get_target(tgt).estimate)
+    finally:
+        _REGISTRY.pop("test-rt", None)
+
+
+def test_unknown_target_raises():
+    with pytest.raises(KeyError, match="unknown target"):
+        get_target("not-a-technology")
+
+
+# ---------------------------------------------- all targets produce valid HW
+
+def test_all_builtin_targets_best_designs_verify():
+    spec = get_spec("recip", 8)
+    with Explorer() as ex:
+        for name in ("asic", "fpga-lut", "pallas-tpu"):
+            res = ex.explore(spec, target=name)
+            assert res, f"target {name}: no feasible design"
+            ok, worst = res.best.design.verify(spec)
+            assert ok, f"target {name}: best design invalid (worst={worst})"
+            assert res.target == name
+
+
+def test_pallas_policy_skips_truncation_steps():
+    spec = get_spec("recip", 8)
+    with Explorer() as ex:
+        e = ex.explore_r(spec, 2, target="pallas-tpu", degree=2)
+    assert e is not None
+    assert e.report.sq_trunc == 0 and e.report.lin_trunc == 0
+
+
+# ------------------------------------------------------------ envelope reuse
+
+def test_envelopes_computed_once_per_spec_r():
+    """RegionSpace envelopes are target-independent: exploring the same spec
+    under every registered target computes each (spec, R) at most once."""
+    spec = get_spec("recip", 8)
+    with Explorer() as ex:
+        ex.explore(spec, target="asic")
+        computed_after_first = ex.envelope_stats["computed"]
+        base = {k: v for k, v in ex._spaces.items()}
+        for name in ("fpga-lut", "pallas-tpu", "asic"):
+            ex.explore(spec, target=name)
+        stats = ex.envelope_stats
+        assert stats["computed"] == computed_after_first, (
+            "retargeting recomputed envelopes")
+        assert stats["hits"] > 0
+        # identical RegionSpace objects are served to every target
+        for key, spaces in base.items():
+            assert ex._spaces[key] is spaces
+
+
+def test_envelope_reuse_returns_identical_bounds():
+    spec = get_spec("exp2", 8)
+    with Explorer() as ex:
+        first = ex.envelopes(spec, 3)
+        second = ex.envelopes(spec, 3)
+        assert first is second
+        assert ex.envelope_stats == {"computed": 1, "hits": 1}
+
+
+# ------------------------------------------------------------ result object
+
+def test_result_frontier_pareto_and_min_regions():
+    spec = get_spec("recip", 8)
+    with Explorer() as ex:
+        res = ex.explore(spec)
+    assert res.min_regions_r == 2
+    assert res.minimal_regions.lookup_bits == 2
+    heights = [e.lookup_bits for e in res]
+    assert heights == sorted(heights)
+    front = res.pareto()
+    assert front, "empty Pareto front"
+    # no front point dominates another
+    for i, e in enumerate(front):
+        for f in front[i + 1:]:
+            assert not (f.area <= e.area and f.delay <= e.delay)
+    assert res.best in res.entries
+
+
+def test_explorer_get_table_caches(tmp_path):
+    cfg = ExploreConfig(cache_dir=str(tmp_path))
+    with Explorer(cfg) as ex:
+        t1 = ex.get_table("recip", bits=8, lookup_bits=4)
+        assert (tmp_path / "recip_8b_R4_d0.json").exists()
+        t2 = ex.get_table("recip", bits=8, lookup_bits=4)
+        assert t1 is t2  # memory cache hit
+    with Explorer(cfg) as ex2:
+        t3 = ex2.get_table("recip", bits=8, lookup_bits=4)
+        assert _same_design(t1, t3)  # disk round-trip
