@@ -1,0 +1,89 @@
+"""Batched region engine vs the pooled per-region path (ISSUE 2 tentpole).
+
+Two measurements, both on the reciprocal spec (the paper's headline design):
+
+* ``batched_vs_pooled`` — the §II generation front half (envelopes + Eqn
+  9-10 feasibility for every region) swept over the complete feasible range
+  ``[min_R, in_bits]``, per engine, with speedup vs the pooled seed path.
+* ``min_regions_search`` — the min-R query: the seed's linear scan from
+  R=0 (which probes the most expensive heights first: a probe at R costs
+  O(4^bits / 2^R)) vs the monotonicity-exploiting exponential-descent +
+  binary search.
+
+These rows feed artifacts/bench/BENCH_2.json (see benchmarks/run.py).
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import QUICK, emit
+from repro.api import ExploreConfig, Explorer
+from repro.core.funcspec import get_spec
+
+
+def _sweep_time(spec, engine: str, heights, repeat: int = 2) -> float:
+    """Best-of-``repeat`` wall-clock (fresh session each run: every probe
+    recomputes envelopes + feasibility, nothing is served from cache)."""
+    best = float("inf")
+    for _ in range(repeat):
+        with Explorer(ExploreConfig(engine=engine)) as ex:
+            t0 = time.perf_counter()
+            for r in heights:
+                ex.feasible(spec, r)
+            best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run() -> list[dict]:
+    bits = 12 if QUICK else 16
+    spec = get_spec("recip", bits)
+    with Explorer() as ex:
+        min_r = ex.min_regions(spec)
+    # the complete feasible range: every LUT height the design space exists at
+    heights = list(range(min_r, spec.in_bits + 1))
+    engines = ["pooled", "batched"]
+    import jax
+
+    if jax.default_backend() == "tpu":
+        engines.append("pallas")  # interpret mode would swamp the timing
+    rows = []
+    base = None
+    for engine in engines:
+        dt = _sweep_time(spec, engine, heights)
+        if engine == "pooled":
+            base = dt
+        rows.append({
+            "engine": engine, "bits": bits,
+            "R_sweep": f"{heights[0]}..{heights[-1]}",
+            "regions_total": sum(1 << r for r in heights),
+            "time_s": round(dt, 3),
+            "speedup_vs_pooled": round(base / dt, 2) if base else 1.0,
+        })
+    emit("batched_vs_pooled", rows)
+
+    # min-R search: seed linear scan vs exponential-descent + binary
+    mr_bits = 10 if QUICK else 14
+    mr_spec = get_spec("recip", mr_bits)
+    with Explorer() as ex:
+        t0 = time.perf_counter()
+        linear = next((r for r in range(mr_spec.in_bits + 1)
+                       if ex.feasible(mr_spec, r)), None)
+        t_linear = time.perf_counter() - t0
+    with Explorer() as ex:
+        t0 = time.perf_counter()
+        fast = ex.min_regions(mr_spec)
+        t_fast = time.perf_counter() - t0
+    assert fast == linear, (fast, linear)
+    rows2 = [
+        {"search": "linear-scan (seed)", "bits": mr_bits, "min_R": linear,
+         "time_s": round(t_linear, 3), "speedup": 1.0},
+        {"search": "exp-descent + binary", "bits": mr_bits, "min_R": fast,
+         "time_s": round(t_fast, 3),
+         "speedup": round(t_linear / t_fast, 2) if t_fast else float("inf")},
+    ]
+    emit("min_regions_search", rows2)
+    return rows + rows2
+
+
+if __name__ == "__main__":
+    run()

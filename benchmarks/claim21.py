@@ -1,10 +1,12 @@
-"""Paper §II-A: Claim II.1 pruning speedup.
+"""Paper §II-A: Claim II.1 pruning speedup, plus the batched engine.
 
 The paper reports the pruned scalar search makes 16-bit reciprocal design
 space generation ~5x faster single-threaded. We time the four search
-implementations on the exact searches the generator performs (the M/m
-envelope divided-difference sweeps of the largest region) and on the
-end-to-end feasibility pass.
+implementations on the exact searches the generator performs — the Eqn 7-8
+a-interval divided-difference searches over every region's M/m envelopes —
+and report the batched region engine (one array program over all regions)
+alongside them, with a speedup-vs-seed column (seed = the paper's naive
+scalar baseline). A second table times end-to-end generation per backend.
 """
 from __future__ import annotations
 
@@ -13,8 +15,8 @@ import time
 import numpy as np
 
 from benchmarks.common import QUICK, emit
-from repro.core import searches
-from repro.core.designspace import envelopes
+from repro.api import ExploreConfig, Explorer
+from repro.core import batched, searches
 from repro.core.funcspec import get_spec
 
 IMPLS = ["naive", "claim21", "vectorized", "hull"]
@@ -25,50 +27,76 @@ def run() -> list[dict]:
     r = 6 if QUICK else 8
     spec = get_spec("recip", bits)
     lo, hi = spec.region_bounds(r)
-    # the generator's hot search: max/min divided differences over M/m
-    # envelopes of each region; region 0 has the steepest curvature
-    m_env, m_env2 = envelopes(lo[0], hi[0])
-    m_env, m_env2 = m_env[1:], m_env2[1:]  # drop the t=0 placeholder
+    # the generator's hot search: max/min divided differences over the M/m
+    # envelopes of EVERY region (exactly what feasibility runs per R)
+    big_m, small_m = batched.batched_envelopes(lo, hi)
+    mt, st = big_m[:, 1:], small_m[:, 1:]
+    n_regions, t_len = mt.shape
     rows = []
     base = None
+    ref_vals = None
     for impl in IMPLS:
         t0 = time.perf_counter()
-        v1 = searches.max_dd(m_env, m_env2, impl)
-        v2 = searches.min_dd(m_env2, m_env, impl)
+        v_lo = np.array([searches.max_dd(mt[i], st[i], impl)[0]
+                         for i in range(n_regions)])
+        v_hi = np.array([searches.min_dd(st[i], mt[i], impl)[0]
+                         for i in range(n_regions)])
         dt = time.perf_counter() - t0
         if impl == "naive":
             base = dt
-            ref = (v1[0], v2[0])
+            ref_vals = (v_lo, v_hi)
+        assert np.array_equal(v_lo, ref_vals[0]), impl
+        assert np.array_equal(v_hi, ref_vals[1]), impl
         rows.append({
-            "impl": impl, "n": len(m_env),
+            "impl": impl, "regions": n_regions, "t_len": t_len,
             "time_ms": round(dt * 1e3, 2),
-            "speedup_vs_naive": round(base / dt, 2) if base else 1.0,
-            "max_dd": f"{v1[0]:.6g}", "min_dd": f"{v2[0]:.6g}",
+            "speedup_vs_seed": round(base / dt, 2) if base else 1.0,
         })
-    # agreement check
-    vals = {(r["max_dd"], r["min_dd"]) for r in rows}
-    assert len(vals) == 1, f"impl disagreement: {vals}"
+    t0 = time.perf_counter()
+    b_lo = batched.batched_max_dd(mt, st)
+    b_hi = batched.batched_min_dd(st, mt)
+    dt = time.perf_counter() - t0
+    assert np.array_equal(b_lo, ref_vals[0]) and np.array_equal(b_hi, ref_vals[1])
+    rows.append({
+        "impl": "batched-engine", "regions": n_regions, "t_len": t_len,
+        "time_ms": round(dt * 1e3, 2),
+        "speedup_vs_seed": round(base / dt, 2),
+    })
     emit("claim21_search", rows)
 
-    # end-to-end §II-A reproduction: full generation under each search impl
-    from repro.core.generate import generate_for_r
+    # end-to-end §II-A reproduction: full generation per backend. The scalar
+    # impls run under the pooled engine (the batched engines bypass `impl`).
     e2e_bits, e2e_r = (10, 5) if QUICK else (14, 7)
     spec2 = get_spec("recip", e2e_bits)
     rows2 = []
     base = None
+    widths = set()
     for impl in IMPLS:
-        t0 = time.perf_counter()
-        res = generate_for_r(spec2, e2e_r, impl=impl)
-        dt = time.perf_counter() - t0
+        with Explorer(ExploreConfig(engine="pooled", impl=impl)) as ex:
+            t0 = time.perf_counter()
+            res = ex.explore_r(spec2, e2e_r)
+            dt = time.perf_counter() - t0
         if impl == "naive":
             base = dt
+        widths.add(str(res.design.lut_widths))
         rows2.append({
-            "impl": impl, "bits": e2e_bits, "R": e2e_r,
+            "backend": f"pooled/{impl}", "bits": e2e_bits, "R": e2e_r,
             "gen_time_s": round(dt, 3),
-            "speedup_vs_naive": round(base / dt, 2) if base else 1.0,
+            "speedup_vs_seed": round(base / dt, 2) if base else 1.0,
             "k": res.design.k, "widths": str(res.design.lut_widths),
         })
-    assert len({r["widths"] for r in rows2}) == 1, "impl changed the design"
+    with Explorer(ExploreConfig(engine="batched")) as ex:
+        t0 = time.perf_counter()
+        res = ex.explore_r(spec2, e2e_r)
+        dt = time.perf_counter() - t0
+    widths.add(str(res.design.lut_widths))
+    rows2.append({
+        "backend": "batched", "bits": e2e_bits, "R": e2e_r,
+        "gen_time_s": round(dt, 3),
+        "speedup_vs_seed": round(base / dt, 2),
+        "k": res.design.k, "widths": str(res.design.lut_widths),
+    })
+    assert len(widths) == 1, f"backend changed the design: {widths}"
     emit("claim21_endtoend", rows2)
     return rows + rows2
 

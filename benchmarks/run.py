@@ -1,53 +1,98 @@
 """Benchmark suite entry point: one module per paper table/figure.
 
-    PYTHONPATH=src python -m benchmarks.run [--quick]
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only a,b,c]
 
 | module            | paper artifact                         |
 |-------------------|----------------------------------------|
 | table1            | Table I (proposed cols, runtime, LUB)  |
 | table2            | Table II (LUT widths vs Remez)         |
-| claim21           | SII-A Claim II.1 speedup               |
+| claim21           | SII-A Claim II.1 speedup + engines     |
 | scaling           | SII-A O(R^-3) + exponential-in-bits    |
+| batched_engine    | batched vs pooled generation, min-R    |
 | fig3_lub_sweep    | Figs 2-3 area-delay vs LUT height      |
 | kernels_bench     | TPU adaptation: kernels + table accuracy |
 | roofline_report   | SRoofline table from the dry-run sweep |
+
+After a run that produced them, the claim21 + batched_engine rows are
+folded into ``artifacts/bench/BENCH_2.json`` — the per-PR perf snapshot
+tracked by the CI bench-smoke job.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import os
+import pathlib
 import sys
 import time
+
+ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "bench"
+
+# module -> tables folded into the BENCH_2.json perf snapshot
+_BENCH2_TABLES = {
+    "claim21": ("claim21_search", "claim21_endtoend"),
+    "batched_engine": ("batched_vs_pooled", "min_regions_search"),
+}
+
+
+def _emit_bench2(ran: set) -> None:
+    # refresh only the tables whose module ran THIS invocation (stale
+    # per-table JSONs from an earlier run must not be stamped into the
+    # snapshot), but keep the other modules' existing tables — a partial
+    # --only run must not truncate the tracked snapshot
+    snap_path = ART / "BENCH_2.json"
+    fresh = {}
+    for mod, tables in _BENCH2_TABLES.items():
+        if mod not in ran:
+            continue
+        for name in tables:
+            path = ART / f"{name}.json"
+            if path.exists():
+                fresh[name] = json.loads(path.read_text())
+    if fresh:
+        out = json.loads(snap_path.read_text()) if snap_path.exists() else {}
+        out.update(fresh)
+        snap_path.write_text(json.dumps(out, indent=1))
+        print(f"\nwrote {snap_path} (refreshed {sorted(fresh)})")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="reduced precisions (CI-speed run)")
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated module subset")
     args = ap.parse_args()
     if args.quick:
         os.environ["BENCH_QUICK"] = "1"
 
-    from benchmarks import (claim21, fig3_lub_sweep, kernels_bench,
-                            roofline_report, scaling, table1, table2)
+    from benchmarks import (batched_engine, claim21, fig3_lub_sweep,
+                            kernels_bench, roofline_report, scaling, table1,
+                            table2)
     mods = {
         "table1": table1, "table2": table2, "claim21": claim21,
-        "scaling": scaling, "fig3_lub_sweep": fig3_lub_sweep,
-        "kernels_bench": kernels_bench, "roofline_report": roofline_report,
+        "scaling": scaling, "batched_engine": batched_engine,
+        "fig3_lub_sweep": fig3_lub_sweep, "kernels_bench": kernels_bench,
+        "roofline_report": roofline_report,
     }
+    only = set(args.only.split(",")) if args.only else None
+    if only and not only <= set(mods):
+        sys.exit(f"unknown --only module(s): {sorted(only - set(mods))}")
     failures = []
+    ran = set()
     for name, mod in mods.items():
-        if args.only and name != args.only:
+        if only and name not in only:
             continue
         t0 = time.perf_counter()
         print(f"\n=== {name} ===", flush=True)
         try:
             mod.run()
+            ran.add(name)
             print(f"--- {name}: {time.perf_counter()-t0:.1f}s", flush=True)
         except Exception as e:
             failures.append((name, repr(e)))
             print(f"--- {name} FAILED: {e!r}", flush=True)
+    _emit_bench2(ran)
     if failures:
         print(f"\n{len(failures)} benchmark(s) failed: {failures}")
         sys.exit(1)

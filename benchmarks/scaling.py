@@ -3,7 +3,10 @@
   1. runtime vs lookup bits R — "empirical results for a 16 bit design
      suggest the runtime is O(R^-3)": more regions means narrower regions,
      so the quadratic per-region searches shrink faster than region count
-     grows. We fit the log-log slope.
+     grows. We fit the log-log slope on the seed backend (pooled +
+     Claim II.1 scalar search — the paper's single-threaded PyPy generator)
+     and report the batched region engine alongside with a
+     speedup-vs-seed column.
   2. runtime vs input bits at fixed relative R — "scales exponentially in
      the number of bits of precision": we fit the doubling factor per bit.
 """
@@ -15,8 +18,14 @@ import time
 import numpy as np
 
 from benchmarks.common import QUICK, emit
+from repro.api import ExploreConfig, Explorer
 from repro.core.funcspec import get_spec
-from repro.core.generate import generate_for_r
+
+
+def _timed_gen(ex: Explorer, spec, r: int):
+    t0 = time.perf_counter()
+    res = ex.explore_r(spec, r)
+    return res, time.perf_counter() - t0
 
 
 def run() -> list[dict]:
@@ -24,38 +33,48 @@ def run() -> list[dict]:
     rows = []
     times = []
     r_range = range(4, min(bits - 2, 9) + 1)
-    for r in r_range:
-        t0 = time.perf_counter()
-        # paper setup: scalar search with Claim II.1 pruning (§II-A measures
-        # the single-threaded PyPy generator; vectorized/hull have different
-        # constants and would mask the R-scaling being reproduced)
-        res = generate_for_r(get_spec("recip", bits), r, impl="claim21")
-        dt = time.perf_counter() - t0
-        times.append((r, dt))
-        rows.append({"sweep": "R", "bits": bits, "R": r,
-                     "time_s": round(dt, 3),
-                     "feasible": res is not None})
+    spec = get_spec("recip", bits)
+    # fresh sessions per backend so the envelope cache can't cross-subsidize
+    with Explorer(ExploreConfig(engine="pooled", impl="claim21")) as seed_ex, \
+            Explorer(ExploreConfig(engine="batched")) as bat_ex:
+        for r in r_range:
+            res, dt = _timed_gen(seed_ex, spec, r)
+            res_b, dt_b = _timed_gen(bat_ex, spec, r)
+            times.append((r, dt))
+            rows.append({"sweep": "R", "bits": bits, "R": r,
+                         "time_s": round(dt, 3),
+                         "time_batched_s": round(dt_b, 3),
+                         "speedup_vs_seed": round(dt / dt_b, 2),
+                         "feasible": res is not None})
+            assert (res is None) == (res_b is None)
     rs = np.array([r for r, _ in times], float)
     ts = np.array([t for _, t in times], float)
     slope = float(np.polyfit(np.log(2.0 ** rs), np.log(ts), 1)[0])
     rows.append({"sweep": "R", "bits": bits, "R": "fit",
                  "time_s": f"log2 slope = {slope:.2f} (paper: ~-3)",
+                 "time_batched_s": "", "speedup_vs_seed": "",
                  "feasible": ""})
 
-    # precision scaling at R = bits//2
+    # precision scaling at R = bits//2 (seed backend, batched alongside)
     times_b = []
-    for b in range(8, (12 if QUICK else 15) + 1):
-        t0 = time.perf_counter()
-        generate_for_r(get_spec("recip", b), b // 2)
-        dt = time.perf_counter() - t0
-        times_b.append((b, dt))
-        rows.append({"sweep": "bits", "bits": b, "R": b // 2,
-                     "time_s": round(dt, 3), "feasible": True})
+    with Explorer(ExploreConfig(engine="pooled", impl="claim21")) as seed_ex, \
+            Explorer(ExploreConfig(engine="batched")) as bat_ex:
+        for b in range(8, (12 if QUICK else 15) + 1):
+            s = get_spec("recip", b)
+            _, dt = _timed_gen(seed_ex, s, b // 2)
+            _, dt_b = _timed_gen(bat_ex, s, b // 2)
+            times_b.append((b, dt))
+            rows.append({"sweep": "bits", "bits": b, "R": b // 2,
+                         "time_s": round(dt, 3),
+                         "time_batched_s": round(dt_b, 3),
+                         "speedup_vs_seed": round(dt / dt_b, 2),
+                         "feasible": True})
     bs = np.array([b for b, _ in times_b], float)
     ts = np.array([t for _, t in times_b], float)
     growth = float(math.exp(np.polyfit(bs, np.log(ts), 1)[0]))
     rows.append({"sweep": "bits", "bits": "fit", "R": "",
                  "time_s": f"x{growth:.2f} per input bit (exponential)",
+                 "time_batched_s": "", "speedup_vs_seed": "",
                  "feasible": ""})
     emit("scaling", rows)
     return rows

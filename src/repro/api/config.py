@@ -15,6 +15,25 @@ import pathlib
 
 from repro.core.funcspec import FunctionSpec, get_spec
 
+# Single source of truth for the divided-difference search implementation
+# (core.searches.IMPLS) and the region-engine backend. Core modules resolve
+# their ``impl=None`` / ``engine=None`` defaults against these lazily, so the
+# whole pipeline is retuned from one place.
+DEFAULT_IMPL = "hull"
+DEFAULT_ENGINE = "batched"
+
+# engine -> how the per-region §II work (envelopes, Eqns 9-10 feasibility,
+# a-intervals, truncation re-checks) is dispatched:
+#   batched  one numpy array program over stacked (regions, N) arrays
+#   pallas   one pallas_call + on-device parity merge / a-interval reduction
+#            (compiled on TPU, interpret elsewhere; float32 envelopes)
+#   pooled   the seed's per-region scalar dispatch through RegionPool —
+#            kept as fallback and as the equivalence oracle in tests
+ENGINES = ("batched", "pallas", "pooled")
+
+# Envelope-cache LRU cap (entries, one per (spec, R, engine)); None = unbounded.
+DEFAULT_ENVELOPE_CACHE = 64
+
 # kind -> (in_bits, spec kwargs, lookup_bits). Widths are chosen so every
 # coefficient fits int32 and the one-hot LUT contraction is exact in fp32.
 DEFAULTS: dict[str, tuple[int, dict, int]] = {
@@ -56,12 +75,19 @@ class ExploreConfig:
       kind/bits/out_bits/ulp: the function spec, resolved through
         :data:`DEFAULTS` (``spec()`` builds the FunctionSpec).
       degree: force degree 1/2; None = the target policy's lin-vs-quad rule.
-      lookup_bits: fixed R; None = sweep ``[r_lo, r_hi]``.
+      lookup_bits: fixed R; None = sweep ``[r_lo, r_hi]`` (a per-call
+        ``r_lo``/``r_hi`` on ``explore()`` overrides a pinned height).
       r_lo/r_hi: sweep range; None = minimum feasible R and ``r_lo + 6``.
-      impl: divided-difference search implementation (core.searches.IMPLS).
+      impl: divided-difference search implementation (core.searches.IMPLS);
+        only exercised by the ``pooled`` engine — the batched engines carry
+        their own (value-identical) searches.
+      engine: region-engine backend, one of :data:`ENGINES`.
+      envelope_cache: LRU cap on cached (spec, R) RegionSpace lists; None
+        disables eviction (evictions are counted in ``envelope_stats``).
       k_max: precision-slack search cap of decision step 1; None defers to
         the target policy's cap.
-      workers: RegionPool process count (None/1 = in-process).
+      workers: RegionPool process count (None/1 = in-process); only the
+        ``pooled`` engine forks.
       cache_dir: table persistence directory; None = $REPRO_TABLE_CACHE or
         ``artifacts/tables``.
     """
@@ -74,7 +100,9 @@ class ExploreConfig:
     lookup_bits: int | None = None
     r_lo: int | None = None
     r_hi: int | None = None
-    impl: str = "hull"
+    impl: str = DEFAULT_IMPL
+    engine: str = DEFAULT_ENGINE
+    envelope_cache: int | None = DEFAULT_ENVELOPE_CACHE
     k_max: int | None = None
     workers: int | None = None
     cache_dir: str | None = None

@@ -12,6 +12,14 @@ Seed pain points this replaces (ISSUE 1):
   * ``numerics/registry.py`` kept its own disk+memory cache — that cache is
     now the Explorer's persistence layer (``get_table``).
 
+Since ISSUE 2 the per-region §II work routes through the batched region
+engine by default (``ExploreConfig.engine``): envelopes, feasibility and
+the decision-procedure truncation re-checks run as one array program over
+all ``2^R`` regions (``core.batched`` / the ``kernels.dspace`` Pallas
+backend), the envelope cache is LRU-bounded, and ``min_regions`` exploits
+feasibility monotonicity in R (exponential descent + binary search)
+instead of linearly scanning from the most expensive probe. DESIGN.md §9.
+
 Typical use::
 
     with Explorer(ExploreConfig(kind="recip", bits=12)) as ex:
@@ -22,17 +30,19 @@ See DESIGN.md §6 for the architecture.
 """
 from __future__ import annotations
 
+import collections
 import hashlib
 import json
 import re
 import threading
 import time
 
-from repro.api.config import DEFAULTS, ExploreConfig, spec_for
+from repro.api.config import DEFAULTS, ENGINES, ExploreConfig, spec_for
 from repro.api.result import DesignSpaceResult, ExploreEntry
 from repro.api.target import Target, get_target
+from repro.core import batched
 from repro.core.decision import _run_decision_pooled
-from repro.core.designspace import RegionSpace, _space_worker
+from repro.core.designspace import RegionSpace, compute_spaces
 from repro.core.funcspec import FunctionSpec
 from repro.core.pmap import RegionPool
 from repro.core.table import TableDesign
@@ -52,11 +62,18 @@ class Explorer:
     def __init__(self, config: ExploreConfig | None = None,
                  *, target: str | Target = "asic"):
         self.config = config or ExploreConfig()
+        if self.config.engine not in ENGINES:
+            raise ValueError(f"unknown engine {self.config.engine!r}; "
+                             f"expected one of {ENGINES}")
         self.default_target = target
         self._pool: RegionPool | None = None
-        self._spaces: dict[tuple, list[RegionSpace]] = {}
+        self._spaces: collections.OrderedDict[tuple, list[RegionSpace]] = \
+            collections.OrderedDict()
         self._space_computes = 0
         self._space_hits = 0
+        self._space_evictions = 0
+        self._feasible: dict[tuple, bool] = {}
+        self._bounds: dict[tuple, tuple] = {}  # spec value-key -> (lo, hi)
         self._spec_keys: dict[int, tuple] = {}
         self._spec_refs: dict[int, FunctionSpec] = {}
         self._tables: dict[str, TableDesign] = {}
@@ -88,9 +105,10 @@ class Explorer:
     # -- envelope cache ----------------------------------------------------
     @property
     def envelope_stats(self) -> dict[str, int]:
-        """{'computed': n, 'hits': m} — asserts the once-per-(spec, R)
-        contract in tests."""
-        return {"computed": self._space_computes, "hits": self._space_hits}
+        """{'computed': n, 'hits': m, 'evictions': e} — asserts the
+        once-per-(spec, R) contract and the LRU bound in tests."""
+        return {"computed": self._space_computes, "hits": self._space_hits,
+                "evictions": self._space_evictions}
 
     _SPEC_MEMO_CAP = 1024  # id-keyed memo entries before a wholesale reset
 
@@ -113,57 +131,163 @@ class Explorer:
                 self._spec_refs.clear()
             self._spec_keys[id(spec)] = key
             self._spec_refs[id(spec)] = spec
+            if len(self._bounds) >= 64:  # a few MB per spec at 16 bits
+                self._bounds.clear()
+            self._bounds.setdefault(key, (lo, hi))
         return key
 
+    def _region_bounds(self, spec: FunctionSpec, lookup_bits: int):
+        """``spec.region_bounds`` through a per-spec cache: the exact
+        (rational-arithmetic) bound construction is paid once per spec, not
+        once per probed R — min-R probes sweep many R over one spec."""
+        key = self._spec_key(spec)
+        arrs = self._bounds.get(key)
+        if arrs is None:
+            arrs = spec.bound_arrays()
+            self._bounds[key] = arrs
+        lo, hi = arrs
+        r = 1 << lookup_bits
+        return lo.reshape(r, -1), hi.reshape(r, -1)
+
+    def _cached_spaces(self, key: tuple):
+        """LRU lookup + hit accounting; call with _state_lock held."""
+        spaces = self._spaces.get(key)
+        if spaces is not None:
+            self._spaces.move_to_end(key)
+            self._space_hits += 1
+        return spaces
+
+    def _space_key(self, spec: FunctionSpec, lookup_bits: int, impl: str,
+                   engine: str) -> tuple:
+        # the batched engines do not consult `impl` (their searches are
+        # value-identical to every IMPLS entry), so all impls share one entry
+        return (*self._spec_key(spec), lookup_bits, engine,
+                impl if engine == "pooled" else "-")
+
     def envelopes(self, spec: FunctionSpec, lookup_bits: int,
-                  impl: str | None = None) -> list[RegionSpace]:
-        """Per-region §II envelopes — computed at most once per (spec, R)."""
+                  impl: str | None = None, engine: str | None = None
+                  ) -> list[RegionSpace]:
+        """Per-region §II envelopes — computed at most once per (spec, R),
+        LRU-bounded at ``config.envelope_cache`` entries."""
         impl = impl or self.config.impl
+        engine = engine or self.config.engine
         with self._state_lock:
-            key = (*self._spec_key(spec), lookup_bits, impl)
-            spaces = self._spaces.get(key)
+            key = self._space_key(spec, lookup_bits, impl, engine)
+            spaces = self._cached_spaces(key)
             if spaces is not None:
-                self._space_hits += 1
                 return spaces
-            L, U = spec.region_bounds(lookup_bits)
-            spaces = self._get_pool().map(
-                _space_worker, [(L[r], U[r], impl) for r in range(L.shape[0])])
+            L, U = self._region_bounds(spec, lookup_bits)
+            spaces = compute_spaces(
+                L, U, impl, engine,
+                pool=self._get_pool() if engine == "pooled" else None)
             self._spaces[key] = spaces
             self._space_computes += 1
+            cap = self.config.envelope_cache
+            while cap is not None and len(self._spaces) > max(cap, 1):
+                self._spaces.popitem(last=False)
+                self._space_evictions += 1
             return spaces
 
     def feasible(self, spec: FunctionSpec, lookup_bits: int,
-                 impl: str | None = None) -> bool:
-        """Eqns 9-10 over every region: does ANY piecewise quadratic exist?"""
-        return all(s.feasible for s in self.envelopes(spec, lookup_bits, impl))
+                 impl: str | None = None, engine: str | None = None) -> bool:
+        """Eqns 9-10 over every region: does ANY piecewise quadratic exist?
+
+        Under the batched engine this uses a lightweight all-regions verdict
+        (no RegionSpace materialization) with its own boolean cache, so min-R
+        probes don't churn the envelope LRU; cached envelopes are reused when
+        present. The pooled and pallas engines answer from their own
+        RegionSpaces — the verdict must come from the same arithmetic
+        ``explore_r`` will judge with (the float32 pallas envelopes can
+        disagree with the exact mask on marginal specs).
+        """
+        impl = impl or self.config.impl
+        engine = engine or self.config.engine
+        if engine != "batched":
+            return all(s.feasible
+                       for s in self.envelopes(spec, lookup_bits, impl, engine))
+        with self._state_lock:
+            spaces = self._cached_spaces(
+                self._space_key(spec, lookup_bits, impl, engine))
+            if spaces is not None:
+                return all(s.feasible for s in spaces)
+            fkey = (*self._spec_key(spec), lookup_bits)
+            ok = self._feasible.get(fkey)
+            if ok is None:
+                L, U = self._region_bounds(spec, lookup_bits)
+                ok = bool(batched.regions_feasible_mask(L, U).all())
+                if len(self._feasible) >= 4096:
+                    self._feasible.clear()
+                self._feasible[fkey] = ok
+            return ok
 
     def min_regions(self, spec: FunctionSpec, r_max: int | None = None,
-                    impl: str | None = None) -> int | None:
-        """Smallest feasible R — the paper's 'minimum number of regions'."""
-        r_max = spec.in_bits if r_max is None else r_max
-        for r in range(0, r_max + 1):
-            if self.feasible(spec, r, impl):
-                return r
-        return None
+                    impl: str | None = None, engine: str | None = None
+                    ) -> int | None:
+        """Smallest feasible R — the paper's 'minimum number of regions'.
+
+        Splitting a region leaves each half with a subset of the parent's
+        constraints, so feasibility is monotone in R and the linear scan of
+        the seed is wasteful twice over: it probes every R, and it starts at
+        the *expensive* end (a probe at R costs O(4^in_bits / 2^R) element
+        work, so R=0 is the worst probe in the whole sweep). This descends
+        from ``r_max`` (cheap end) with exponentially growing steps while
+        probes stay overhead-bound, dropping to single steps once element
+        work dominates (each level down already quadruples the probe cost,
+        so the *cost* keeps galloping and overshoot stays bounded), then
+        binary-searches the final bracket. Any correct search must probe
+        both min_R and min_R - 1; this pays O(1) such probes beyond them.
+        Probes reuse cached envelopes/verdicts.
+        """
+        # R > in_bits doesn't exist; the seed's upward scan never reached it,
+        # so a larger r_max must behave like "unbounded", not crash
+        r_max = spec.in_bits if r_max is None else min(r_max, spec.in_bits)
+        if r_max < 0 or not self.feasible(spec, r_max, impl, engine):
+            return None  # monotone: nothing below r_max can work either
+        hi, lo = r_max, -1  # known feasible / known infeasible
+        step = 1
+        work_cap = 1 << 26  # element-work floor where stepping turns costly
+
+        def probe_work(r: int) -> int:
+            return 4 ** spec.in_bits >> max(r, 0)  # ~ 2^R regions x N^2
+
+        while hi - 1 > lo:
+            r = max(hi - step, lo + 1)
+            if self.feasible(spec, r, impl, engine):
+                hi = r
+            else:
+                lo = r
+                break
+            nxt = max(hi - 2 * step, lo + 1)
+            step = 2 * step if probe_work(nxt) <= work_cap else 1
+        while hi - lo > 1:
+            mid = (lo + hi) // 2
+            if self.feasible(spec, mid, impl, engine):
+                hi = mid
+            else:
+                lo = mid
+        return hi
 
     # -- exploration -------------------------------------------------------
     def explore_r(self, spec: FunctionSpec, lookup_bits: int,
                   target: str | Target | None = None,
-                  degree: int | None = None, impl: str | None = None
-                  ) -> ExploreEntry | None:
+                  degree: int | None = None, impl: str | None = None,
+                  engine: str | None = None) -> ExploreEntry | None:
         """Run one target's decision procedure at a fixed LUT height."""
         tgt = get_target(target if target is not None else self.default_target)
         impl = impl or self.config.impl
+        engine = engine or self.config.engine
         degree = degree if degree is not None else self.config.degree
         t0 = time.perf_counter()
-        spaces = self.envelopes(spec, lookup_bits, impl)
+        spaces = self.envelopes(spec, lookup_bits, impl, engine)
         if not all(s.feasible for s in spaces):
             return None
         k_max = (self.config.k_max if self.config.k_max is not None
                  else tgt.policy.k_max)
         out = _run_decision_pooled(
             spec, lookup_bits, degree, impl, k_max,
-            self._get_pool(), spaces=spaces, policy=tgt.policy)
+            self._get_pool() if engine == "pooled" else None,
+            spaces=spaces, policy=tgt.policy, engine=engine,
+            bounds=self._region_bounds(spec, lookup_bits))
         if out is None:
             return None
         design, report = out
@@ -176,8 +300,8 @@ class Explorer:
                 *, target: str | Target | None = None,
                 lookup_bits: int | None = None,
                 r_lo: int | None = None, r_hi: int | None = None,
-                degree: int | None = None, impl: str | None = None
-                ) -> DesignSpaceResult:
+                degree: int | None = None, impl: str | None = None,
+                engine: str | None = None) -> DesignSpaceResult:
         """Sweep LUT heights under one target; returns the full frontier.
 
         Defaults come from the session config: a fixed ``lookup_bits`` if
@@ -187,7 +311,8 @@ class Explorer:
         spec = spec if spec is not None else self.config.spec()
         tgt = get_target(target if target is not None else self.default_target)
         degree = degree if degree is not None else self.config.degree
-        if lookup_bits is None:
+        if lookup_bits is None and r_lo is None and r_hi is None:
+            # a per-call sweep request overrides a config-pinned height
             lookup_bits = self.config.lookup_bits
         min_r: int | None = None
         if lookup_bits is not None:
@@ -195,7 +320,7 @@ class Explorer:
         else:
             r_lo = r_lo if r_lo is not None else self.config.r_lo
             if r_lo is None:
-                r_lo = min_r = self.min_regions(spec, impl=impl)
+                r_lo = min_r = self.min_regions(spec, impl=impl, engine=engine)
                 if r_lo is None:
                     return DesignSpaceResult(spec.name, tgt.name, [], None)
             r_hi = r_hi if r_hi is not None else self.config.r_hi
@@ -204,7 +329,7 @@ class Explorer:
             heights = list(range(r_lo, r_hi + 1))
         entries = []
         for r in heights:
-            e = self.explore_r(spec, r, tgt, degree, impl)
+            e = self.explore_r(spec, r, tgt, degree, impl, engine)
             if e is not None:
                 entries.append(e)
         return DesignSpaceResult(spec.name, tgt.name, entries, min_r)

@@ -39,7 +39,7 @@ B_ENUM_CAP = 64
 # --------------------------------------------------------------------------
 
 def linear_fit_interval(lo: np.ndarray, hi: np.ndarray, stride: int = 1,
-                        impl: str = "hull") -> tuple[int, int] | None:
+                        impl: str | None = None) -> tuple[int, int] | None:
     """Integer interval [b_min, b_max] of slopes b such that some intercept c
     satisfies Lo <= b * (stride * index) + c <= Hi pointwise; None if empty.
 
@@ -80,7 +80,7 @@ def _trunc(x: np.ndarray, bits: int) -> np.ndarray:
 
 def _region_trunc_candidates(L: np.ndarray, U: np.ndarray, k: int,
                              a_values: list[int], sq_t: int, lin_t: int,
-                             impl: str = "hull") -> list[Candidate]:
+                             impl: str | None = None) -> list[Candidate]:
     """Surviving (a, b-interval) choices under truncations (i, j) — exact."""
     n = len(L)
     x = np.arange(n, dtype=np.int64)
@@ -275,48 +275,69 @@ def _trunc_worker(args):
 
 
 def run_decision(spec: FunctionSpec, lookup_bits: int, degree: int | None = None,
-                 impl: str = "vectorized", k_max: int | None = None,
+                 impl: str | None = None, k_max: int | None = None,
                  processes: int | None = None, pool=None, spaces=None,
-                 policy: DecisionPolicy | None = None
-                 ) -> tuple[TableDesign, DecisionReport] | None:
+                 policy: DecisionPolicy | None = None, engine: str | None = None,
+                 bounds=None) -> tuple[TableDesign, DecisionReport] | None:
     """Run the full §III procedure; returns a verified TableDesign or None if
     no piecewise polynomial of the requested degree exists at this R.
 
-    ``processes > 1`` parallelizes the per-region work (paper §V future work);
-    an externally-owned ``pool`` takes precedence (the Explorer session keeps
-    one alive across the whole R-sweep instead of forking per call).
-    ``spaces`` injects precomputed per-region envelopes; ``policy`` swaps the
-    step ordering — together they are what makes "retargeting = a modified
-    decision procedure" cheap.
+    ``engine`` selects the region backend (api.config.ENGINES): the default
+    batched engine runs every per-region phase as one array program; under
+    ``"pooled"``, ``processes > 1`` parallelizes the per-region work (paper
+    §V future work) and an externally-owned ``pool`` takes precedence (the
+    Explorer session keeps one alive across the whole R-sweep instead of
+    forking per call). ``spaces`` injects precomputed per-region envelopes;
+    ``policy`` swaps the step ordering — together they are what makes
+    "retargeting = a modified decision procedure" cheap.
     """
+    from repro.core.designspace import resolve_engine
     from repro.core.pmap import RegionPool
 
     policy = policy or DecisionPolicy()
+    engine = resolve_engine(engine)
     if k_max is None:
         k_max = policy.k_max
-    if pool is not None:
+    if engine != "pooled" or pool is not None:
         return _run_decision_pooled(spec, lookup_bits, degree, impl, k_max, pool,
-                                    spaces=spaces, policy=policy)
+                                    spaces=spaces, policy=policy, engine=engine,
+                                    bounds=bounds)
     with RegionPool(processes) as owned:
         return _run_decision_pooled(spec, lookup_bits, degree, impl, k_max, owned,
-                                    spaces=spaces, policy=policy)
+                                    spaces=spaces, policy=policy, engine=engine,
+                                    bounds=bounds)
 
 
 def _run_decision_pooled(spec, lookup_bits, degree, impl, k_max, pool,
-                         spaces=None, policy: DecisionPolicy | None = None
+                         spaces=None, policy: DecisionPolicy | None = None,
+                         engine: str | None = None, bounds=None
                          ) -> tuple[TableDesign, DecisionReport] | None:
+    from repro.core.designspace import resolve_engine
+
     policy = policy or DecisionPolicy()
+    engine = resolve_engine(engine)
+
+    def trunc_all(ds, k, a_sets, i, j):
+        """Step-2/3 truncation re-checks for every region at one (i, j)."""
+        if engine == "pooled":
+            return pool.map(_trunc_worker,
+                            [(ds.L[r], ds.U[r], k, a_sets[r], i, j, impl)
+                             for r in range(len(a_sets))])
+        from repro.core import batched
+
+        return batched.trunc_candidates(ds.L, ds.U, k, a_sets, i, j)
+
     # -- step 1: minimal k, and lin-vs-quad choice (paper: linear iff 0 is in
     # every region's a-interval — smaller, faster hardware) ----------------
     lin_ds = minimal_k(spec, lookup_bits, force_linear=True, impl=impl, k_max=k_max,
-                       pool=pool, spaces=spaces)
+                       pool=pool, spaces=spaces, engine=engine, bounds=bounds)
     linear_possible = lin_ds is not None and lin_ds.feasible
     if degree == 1 or (degree is None and policy.prefer_linear and linear_possible):
         ds = lin_ds
         deg = 1
     else:
         ds = minimal_k(spec, lookup_bits, force_linear=False, impl=impl, k_max=k_max,
-                       pool=pool, spaces=spaces)
+                       pool=pool, spaces=spaces, engine=engine, bounds=bounds)
         deg = 2
     if ds is None or not ds.feasible:
         return None
@@ -330,25 +351,19 @@ def _run_decision_pooled(spec, lookup_bits, degree, impl, k_max, pool,
     sq_t = 0
     if policy.maximize_sq_trunc and deg == 2 and w > 0:
         for i in range(1, w + 1):
-            rows = pool.map(_trunc_worker,
-                            [(ds.L[r], ds.U[r], k, a_sets[r], i, 0, impl)
-                             for r in range(n_regions)])
+            rows = trunc_all(ds, k, a_sets, i, 0)
             if any(not c for c in rows):
                 break
             sq_t, a_sets = i, [[c.a for c in cands] for cands in rows]
 
     # -- step 3: maximize linear truncation j ------------------------------
     lin_t = 0
-    region_cands: list[list[Candidate]] = pool.map(
-        _trunc_worker, [(ds.L[r], ds.U[r], k, a_sets[r], sq_t, 0, impl)
-                        for r in range(n_regions)])
+    region_cands: list[list[Candidate]] = trunc_all(ds, k, a_sets, sq_t, 0)
     if any(not c for c in region_cands):
         return None  # should not happen: step-2 kept feasibility
     for j in range(1, (w if policy.maximize_lin_trunc else 0) + 1):
-        trial = pool.map(
-            _trunc_worker,
-            [(ds.L[r], ds.U[r], k, [c.a for c in region_cands[r]], sq_t, j, impl)
-             for r in range(n_regions)])
+        trial = trunc_all(ds, k, [[c.a for c in region_cands[r]]
+                                  for r in range(n_regions)], sq_t, j)
         if any(not c for c in trial):
             break
         lin_t, region_cands = j, trial

@@ -37,12 +37,28 @@ A_ENUM_CAP = 1024
 A_UNCONSTRAINED = 1 << 20
 
 
-def envelopes(L: np.ndarray, U: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-    """Per-sum-t envelopes M(t), m(t); arrays indexed by t, t in [1, 2N-3].
+def resolve_engine(engine: str | None) -> str:
+    """``engine`` or ``api.config.DEFAULT_ENGINE``, validated against
+    ``api.config.ENGINES`` (deferred import — same layering rule as
+    :func:`repro.core.searches.resolve_impl`)."""
+    from repro.api.config import DEFAULT_ENGINE, ENGINES
 
-    Index 0 is a placeholder (-inf / +inf). Pure strided-slice updates — no
-    scatter — one vector op per delta (this is the §II-A hot loop; the Pallas
-    twin lives in kernels/dspace).
+    if engine is None:
+        return DEFAULT_ENGINE
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; expected one of {ENGINES}")
+    return engine
+
+
+def envelopes(L: np.ndarray, U: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
+    """Per-sum-t envelopes M(t), m(t) as arrays of size ``2N - 2``.
+
+    A pair ``x < y`` exists exactly for sums ``t`` in ``[1, 2N-3]``, so the
+    returned arrays are indexed ``t = 0 .. 2N-3`` with index 0 a placeholder
+    (-inf / +inf) and every ``t >= 1`` finite. Pure strided-slice updates — no
+    scatter — one vector op per delta (this is the §II-A hot loop; the batched
+    twin is ``core.batched.batched_envelopes``, the Pallas twin lives in
+    kernels/dspace).
     """
     n = len(L)
     if n < 2:
@@ -76,7 +92,7 @@ class RegionSpace:
         return self.feasible and self.a_lo < 0.0 < self.a_hi
 
 
-def region_space(L: np.ndarray, U: np.ndarray, impl: str = "vectorized") -> RegionSpace:
+def region_space(L: np.ndarray, U: np.ndarray, impl: str | None = None) -> RegionSpace:
     big_m, small_m = envelopes(L, U)
     n = len(L)
     if n <= 2:
@@ -219,38 +235,68 @@ def _cand_worker(args):
     return _region_candidates(space, L_row, U_row, k, force_linear)
 
 
-def build_design_space(spec: FunctionSpec, lookup_bits: int, k: int,
-                       force_linear: bool = False, impl: str = "vectorized",
-                       spaces: list[RegionSpace] | None = None,
-                       pool=None) -> DesignSpace:
-    from repro.core.pmap import RegionPool
+def compute_spaces(L: np.ndarray, U: np.ndarray, impl: str | None = None,
+                   engine: str | None = None, pool=None) -> list[RegionSpace]:
+    """All per-region RegionSpaces under the selected engine.
 
-    pool = pool or RegionPool(1)
-    L, U = spec.region_bounds(lookup_bits)
+    ``batched``/``pallas`` run one array program over the stacked
+    ``(regions, N)`` rows; ``pooled`` is the seed's per-region dispatch
+    (and the equivalence oracle — all engines agree, exactly for
+    ``batched``, to float32 for ``pallas``).
+    """
+    engine = resolve_engine(engine)
+    if engine == "pooled":
+        from repro.core.pmap import RegionPool
+
+        pool = pool or RegionPool(1)
+        return pool.map(_space_worker,
+                        [(L[r], U[r], impl) for r in range(L.shape[0])])
+    from repro.core import batched
+
+    if engine == "pallas":
+        return batched.region_spaces_pallas(L, U)
+    return batched.region_spaces(L, U)
+
+
+def build_design_space(spec: FunctionSpec, lookup_bits: int, k: int,
+                       force_linear: bool = False, impl: str | None = None,
+                       spaces: list[RegionSpace] | None = None,
+                       pool=None, engine: str | None = None,
+                       bounds: tuple[np.ndarray, np.ndarray] | None = None
+                       ) -> DesignSpace:
+    engine = resolve_engine(engine)
+    L, U = bounds if bounds is not None else spec.region_bounds(lookup_bits)
     if spaces is None:
-        spaces = pool.map(_space_worker,
-                          [(L[r], U[r], impl) for r in range(L.shape[0])])
-    cands = pool.map(_cand_worker,
-                     [(spaces[r], L[r], U[r], k, force_linear)
-                      for r in range(L.shape[0])])
+        spaces = compute_spaces(L, U, impl, engine, pool)
+    if engine == "pooled":
+        from repro.core.pmap import RegionPool
+
+        pool = pool or RegionPool(1)
+        cands = pool.map(_cand_worker,
+                         [(spaces[r], L[r], U[r], k, force_linear)
+                          for r in range(L.shape[0])])
+    else:
+        from repro.core import batched
+
+        cands = batched.design_candidates(spaces, L, U, k, force_linear)
     return DesignSpace(spec, lookup_bits, k, L, U, spaces, cands, force_linear)
 
 
-def regions_feasible(spec: FunctionSpec, lookup_bits: int, impl: str = "vectorized",
-                     pool=None) -> tuple[bool, list[RegionSpace]]:
+def regions_feasible(spec: FunctionSpec, lookup_bits: int, impl: str | None = None,
+                     pool=None, engine: str | None = None,
+                     bounds: tuple[np.ndarray, np.ndarray] | None = None
+                     ) -> tuple[bool, list[RegionSpace]]:
     """Eqns 9-10 over every region: does ANY piecewise quadratic exist?"""
-    from repro.core.pmap import RegionPool
-
-    pool = pool or RegionPool(1)
-    L, U = spec.region_bounds(lookup_bits)
-    spaces = pool.map(_space_worker,
-                      [(L[r], U[r], impl) for r in range(L.shape[0])])
+    L, U = bounds if bounds is not None else spec.region_bounds(lookup_bits)
+    spaces = compute_spaces(L, U, impl, engine, pool)
     return all(s.feasible for s in spaces), spaces
 
 
 def minimal_k(spec: FunctionSpec, lookup_bits: int, force_linear: bool = False,
-              impl: str = "vectorized", k_max: int = 24,
-              pool=None, spaces: list[RegionSpace] | None = None
+              impl: str | None = None, k_max: int = 24,
+              pool=None, spaces: list[RegionSpace] | None = None,
+              engine: str | None = None,
+              bounds: tuple[np.ndarray, np.ndarray] | None = None
               ) -> DesignSpace | None:
     """Decision step 1: smallest k giving >=1 integer candidate per region.
 
@@ -261,14 +307,17 @@ def minimal_k(spec: FunctionSpec, lookup_bits: int, force_linear: bool = False,
     it across k values, targets, and decision policies.
     """
     if spaces is None:
-        ok, spaces = regions_feasible(spec, lookup_bits, impl, pool=pool)
+        ok, spaces = regions_feasible(spec, lookup_bits, impl, pool=pool,
+                                      engine=engine, bounds=bounds)
         if not ok:
             return None
     elif not all(s.feasible for s in spaces):
         return None
+    if bounds is None:
+        bounds = spec.region_bounds(lookup_bits)  # invariant across the k loop
     for k in range(k_max + 1):
         ds = build_design_space(spec, lookup_bits, k, force_linear, impl, spaces,
-                                pool=pool)
+                                pool=pool, engine=engine, bounds=bounds)
         if ds.feasible:
             return ds
     return None

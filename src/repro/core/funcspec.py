@@ -74,10 +74,18 @@ def make_reciprocal(bits: int, ulp: float = 1.0) -> FunctionSpec:
     num = 1 << (2 * bits + 1)
 
     def bounds(codes: np.ndarray) -> tuple[np.ndarray, np.ndarray]:
-        den = (1 << bits) + codes.astype(object)  # exact python ints
         # V = num/den; |Y - V| <= ulp with exact rational comparisons.
         # ceil(num/den - ulp) and floor(num/den + ulp) for rational ulp.
         u_num, u_den = _as_fraction(ulp)
+        den64 = (1 << bits) + codes.astype(np.int64)
+        d_max = int(den64.max()) if len(den64) else 1
+        if num * u_den + u_num * d_max < (1 << 62):
+            # every intermediate fits int64: numpy floor division is exact
+            # and rounds toward -inf exactly like python's // on negatives
+            lo = -((-(num * u_den - u_num * den64)) // (den64 * u_den))
+            hi = (num * u_den + u_num * den64) // (den64 * u_den)
+            return lo, hi
+        den = (1 << bits) + codes.astype(object)  # exact python ints
         lo = [-((-(num * u_den - u_num * int(d))) // (int(d) * u_den)) for d in den]
         hi = [(num * u_den + u_num * int(d)) // (int(d) * u_den) for d in den]
         return np.array(lo, dtype=np.int64), np.array(hi, dtype=np.int64)

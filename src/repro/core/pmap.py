@@ -6,6 +6,12 @@ M/m envelopes, the Eqn 9-10 feasibility searches and the truncation
 re-checks of §III all touch one region's (L, U) rows only. ``RegionPool``
 wraps a fork-based process pool; all submitted callables must be
 module-level (picklable) functions.
+
+Since ISSUE 2 this pool is the ``engine="pooled"`` fallback only: the
+default region backend is ``core.batched``, which runs the same per-region
+math as one array program over stacked ``(regions, N)`` rows — no pickling,
+no per-region Python dispatch — and is bit-identical to the pooled path
+(it doubles as the equivalence oracle in tests/core/test_batched.py).
 """
 from __future__ import annotations
 

@@ -127,12 +127,31 @@ IMPLS: dict[str, Callable[[np.ndarray, np.ndarray], Result]] = {
     "hull": max_dd_hull,
 }
 
-
-def max_dd(g: np.ndarray, h: np.ndarray, impl: str = "hull") -> Result:
-    return IMPLS[impl](np.asarray(g, np.float64), np.asarray(h, np.float64))
+_DEFAULT_IMPL: str | None = None  # lazy memo of api.config.DEFAULT_IMPL
 
 
-def min_dd(g: np.ndarray, h: np.ndarray, impl: str = "hull") -> Result:
+def resolve_impl(impl: str | None) -> str:
+    """``impl`` or the single session-wide default (``api.config.DEFAULT_IMPL``).
+
+    The import is deferred (and memoized) so the low-level search module
+    never participates in the ``repro.api`` import cycle.
+    """
+    if impl is not None:
+        return impl
+    global _DEFAULT_IMPL
+    if _DEFAULT_IMPL is None:
+        from repro.api.config import DEFAULT_IMPL
+
+        _DEFAULT_IMPL = DEFAULT_IMPL
+    return _DEFAULT_IMPL
+
+
+def max_dd(g: np.ndarray, h: np.ndarray, impl: str | None = None) -> Result:
+    return IMPLS[resolve_impl(impl)](np.asarray(g, np.float64),
+                                     np.asarray(h, np.float64))
+
+
+def min_dd(g: np.ndarray, h: np.ndarray, impl: str | None = None) -> Result:
     """min_{x<y} (g[y]-h[x])/(y-x) via negation."""
     val, x, y = max_dd(-np.asarray(g, np.float64), -np.asarray(h, np.float64), impl)
     return -val, x, y

@@ -30,12 +30,15 @@ TILE = 128
 BIG = 3.4e38  # python float: becomes an inline constant, not a captured array
 
 
-def _envelope_kernel(l_ref, u_ref, me_ref, mo_ref, be_ref, bo_ref, *, n: int):
+def _envelope_kernel(l_ref, u_ref, me_ref, mo_ref, be_ref, bo_ref, *, n: int,
+                     tile_axis: int = 0):
     """Inputs are rows padded to (1, 3n): real data in [n, 2n).
 
-    me/mo: m(t) even/odd; be/bo: M(t) even/odd.
+    me/mo: m(t) even/odd; be/bo: M(t) even/odd. ``tile_axis`` is the grid
+    axis carrying the j-tile index (axis 1 when a leading region axis is
+    present, as in ``envelopes_parity_batched``).
     """
-    j0 = pl.program_id(0) * TILE
+    j0 = pl.program_id(tile_axis) * TILE
     lane = jax.lax.broadcasted_iota(jnp.int32, (1, TILE), 1)
     j = j0 + lane  # global center indices, (1, TILE)
     l_row = l_ref[...]  # (1, 3n) float32
@@ -97,3 +100,28 @@ def envelopes_parity(l_arr: jax.Array, u_arr: jax.Array,
         interpret=interpret,
     )(l2, u2)
     return me[0], mo[0], be[0], bo[0]
+
+
+def envelopes_parity_batched(l_arr: jax.Array, u_arr: jax.Array,
+                             interpret: bool = True) -> tuple[jax.Array, ...]:
+    """Batched-region variant: ``(B, n)`` rows in, four ``(B, n)`` parity
+    envelopes out of ONE ``pallas_call`` with grid ``(B, n // TILE)``.
+
+    This is what lets the generator replace ``2^R`` per-region pool
+    round-trips with a single device program (core/batched.py).
+    """
+    b, n = l_arr.shape
+    assert n % TILE == 0 and n >= TILE, n
+    l2 = jnp.pad(l_arr.astype(jnp.float32), ((0, 0), (n, n)))
+    u2 = jnp.pad(u_arr.astype(jnp.float32), ((0, 0), (n, n)))
+    kernel = functools.partial(_envelope_kernel, n=n, tile_axis=1)
+    out_spec = pl.BlockSpec((1, TILE), lambda r, i: (r, i))
+    shape = jax.ShapeDtypeStruct((b, n), jnp.float32)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, n // TILE),
+        in_specs=[pl.BlockSpec((1, 3 * n), lambda r, i: (r, 0))] * 2,
+        out_specs=[out_spec] * 4,
+        out_shape=[shape] * 4,
+        interpret=interpret,
+    )(l2, u2)

@@ -3,15 +3,27 @@
 ``envelopes_pallas`` returns M(t), m(t) in the exact layout the core numpy
 path (`repro.core.designspace.envelopes`) produces, so the generator can swap
 implementations freely (``impl="pallas"`` in benchmarks).
+
+``region_envelopes_device`` is the batched-engine entry point: one
+``pallas_call`` over a grid of regions plus an on-device parity merge,
+Eqn 9 feasibility, and the Eqn 7-8 a-interval divided-difference reduction —
+the whole §II front half for all ``2^R`` regions in a single compiled
+program (compiled on TPU, interpret elsewhere).
 """
 from __future__ import annotations
+
+import functools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.kernels.dspace.kernel import TILE, envelopes_parity
+from repro.kernels.dspace.kernel import (BIG, TILE, envelopes_parity,
+                                         envelopes_parity_batched)
 from repro.kernels.dspace.ref import envelopes_parity_ref
+
+_PAD_L = -(2.0 ** 30)  # pad-lane sentinels: see envelopes_pallas docstring
+_PAD_U = 2.0 ** 30
 
 
 def _interleave(me, mo, be, bo, n: int):
@@ -57,3 +69,77 @@ def envelopes_ref_jnp(L: np.ndarray, U: np.ndarray) -> tuple[np.ndarray, np.ndar
         return np.full(1, -np.inf), np.full(1, np.inf)
     me, mo, be, bo = envelopes_parity_ref(jnp.asarray(L), jnp.asarray(U))
     return _interleave(me, mo, be, bo, n)
+
+
+# ---------------------------------------------------------------------------
+# Batched engine: all regions in one device program
+# ---------------------------------------------------------------------------
+
+def _dd_max_rows(g: jax.Array, h: jax.Array) -> jax.Array:
+    """Row-wise max_{x<y} (g[y]-h[x])/(y-x) on device, O(T^2) masked sweep.
+
+    Right-pads ``g`` with ``-BIG`` so out-of-range y operands lose every max
+    reduction (the padded slope keeps magnitude >= BIG / T, far below/above
+    any real envelope slope)."""
+    bsz, t = g.shape
+    gp = jnp.pad(g, ((0, 0), (0, t)), constant_values=-BIG)
+
+    def body(delta, best):
+        gy = jax.lax.dynamic_slice(gp, (0, delta), (bsz, t))
+        d = (gy - h) / delta.astype(jnp.float32)
+        return jnp.maximum(best, jnp.max(d, axis=1))
+
+    return jax.lax.fori_loop(1, t, body, jnp.full(bsz, -BIG, jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("n_real", "interpret"))
+def _region_spaces_jit(l2: jax.Array, u2: jax.Array, n_real: int,
+                       interpret: bool):
+    """One pallas_call (grid over regions) + on-device parity merge,
+    Eqn 9 feasibility, and the Eqn 7-8 a-interval reduction."""
+    b, n_pad = l2.shape
+    me, mo, be, bo = envelopes_parity_batched(l2, u2, interpret)
+    # parity merge: t = 2j -> even slot, t = 2j+1 -> odd slot
+    m = jnp.stack([me[:, : n_pad - 1], mo[:, : n_pad - 1]], axis=2)
+    big = jnp.stack([be[:, : n_pad - 1], bo[:, : n_pad - 1]], axis=2)
+    m = m.reshape(b, 2 * n_pad - 2)[:, : 2 * n_real - 2]
+    big = big.reshape(b, 2 * n_pad - 2)[:, : 2 * n_real - 2]
+    mt, st = big[:, 1:], m[:, 1:]  # valid t range
+    feas9 = jnp.all(mt < st, axis=1)
+    a_lo = _dd_max_rows(mt, st)
+    a_hi = -_dd_max_rows(-st, -mt)
+    return big, m, a_lo, a_hi, feas9
+
+
+def region_envelopes_device(L: np.ndarray, U: np.ndarray,
+                            interpret: bool | None = None
+                            ) -> tuple[np.ndarray, ...]:
+    """§II front half for ALL regions: (M, m, a_lo, a_hi, feas9) arrays.
+
+    ``interpret=None`` auto-selects: compiled on TPU, interpret elsewhere
+    (the CPU Pallas lowering only exists in interpret mode). M/m come back
+    float64 in the core layout (index 0 placeholder, sentinels -> inf);
+    envelope arithmetic itself runs in float32 — see DESIGN.md §9.
+    """
+    L = np.asarray(L)
+    U = np.asarray(U)
+    b, n = L.shape
+    assert n >= 3, "trivial region widths are handled by the numpy engine"
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    n_pad = max(-(-n // TILE) * TILE, TILE)
+    lp = np.full((b, n_pad), _PAD_L)
+    up = np.full((b, n_pad), _PAD_U)
+    lp[:, :n] = L
+    up[:, :n] = U
+    big, m, a_lo, a_hi, feas9 = _region_spaces_jit(
+        jnp.asarray(lp, jnp.float32), jnp.asarray(up, jnp.float32),
+        n_real=n, interpret=bool(interpret))
+    big = np.asarray(big, np.float64)
+    m = np.asarray(m, np.float64)
+    m[m >= 3.0e38] = np.inf
+    big[big <= -3.0e38] = -np.inf
+    m[:, 0] = np.inf
+    big[:, 0] = -np.inf
+    return (big, m, np.asarray(a_lo, np.float64), np.asarray(a_hi, np.float64),
+            np.asarray(feas9))

@@ -30,3 +30,11 @@ def envelopes_parity_ref(l_arr, u_arr):
         m_odd = m_odd.at[j].set(jnp.where(odd_mask, d_up, BIG).min())
         b_odd = b_odd.at[j].set(jnp.where(odd_mask, d_lo, -BIG).max())
     return m_even, m_odd, b_even, b_odd
+
+
+def envelopes_parity_ref_batched(l_rows, u_rows):
+    """Region-batched oracle for ``kernel.envelopes_parity_batched``:
+    the dense reference mapped over the leading (region) axis."""
+    outs = [envelopes_parity_ref(l_rows[r], u_rows[r])
+            for r in range(l_rows.shape[0])]
+    return tuple(jnp.stack([o[i] for o in outs]) for i in range(4))

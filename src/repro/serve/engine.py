@@ -70,9 +70,10 @@ class ServeEngine:
             # pool), install it with repro.api.set_default_explorer() before
             # constructing the engine.
             ex = default_explorer()
-            # silu/gelu are hardcoded by MoE/SSM layers and the vision-stub
-            # projector regardless of cfg.act, so always warm them too.
-            kinds = {"exp2neg", "recip", "rsqrt", "silu", "gelu"}
+            # silu/gelu/softplus are hardcoded by MoE/SSM layers and the
+            # vision-stub projector regardless of cfg.act, so always warm
+            # them too (softplus: the SSM dt activation in decode).
+            kinds = {"exp2neg", "recip", "rsqrt", "silu", "gelu", "softplus"}
             if getattr(cfg, "act", None) in DEFAULTS:
                 kinds.add(cfg.act)
             for kind in sorted(kinds):

@@ -165,7 +165,82 @@ def test_envelope_reuse_returns_identical_bounds():
         first = ex.envelopes(spec, 3)
         second = ex.envelopes(spec, 3)
         assert first is second
-        assert ex.envelope_stats == {"computed": 1, "hits": 1}
+        assert ex.envelope_stats == {"computed": 1, "hits": 1, "evictions": 0}
+
+
+def test_envelope_cache_lru_bound():
+    """The (spec, R) cache is LRU-bounded by config.envelope_cache and
+    evictions are observable in envelope_stats."""
+    spec = get_spec("recip", 8)
+    with Explorer(ExploreConfig(envelope_cache=2)) as ex:
+        ex.envelopes(spec, 2)
+        ex.envelopes(spec, 3)
+        ex.envelopes(spec, 3)  # R=3 becomes most-recent
+        ex.envelopes(spec, 4)  # evicts R=2
+        stats = ex.envelope_stats
+        assert stats == {"computed": 3, "hits": 1, "evictions": 1}
+        assert len(ex._spaces) == 2
+        ex.envelopes(spec, 3)  # still cached (was most-recent at eviction)
+        assert ex.envelope_stats["hits"] == 2
+        ex.envelopes(spec, 2)  # evicted -> recomputed
+        assert ex.envelope_stats["computed"] == 4
+        assert ex.envelope_stats["evictions"] == 2
+
+
+def test_unbounded_envelope_cache():
+    spec = get_spec("recip", 8)
+    with Explorer(ExploreConfig(envelope_cache=None)) as ex:
+        for r in range(6):
+            ex.envelopes(spec, r)
+        assert ex.envelope_stats["evictions"] == 0
+        assert len(ex._spaces) == 6
+
+
+# ------------------------------------------------------------ region engine
+
+def test_engine_knob_validated():
+    with pytest.raises(ValueError, match="unknown engine"):
+        Explorer(ExploreConfig(engine="nope"))
+
+
+@pytest.mark.parametrize("engine", ["pooled", "batched", "pallas"])
+def test_engines_produce_identical_designs(engine):
+    """The tentpole equivalence: every engine yields the same RegionSpace
+    verdicts and, through the decision procedure, the same design."""
+    spec = get_spec("recip", 8)
+    with Explorer(ExploreConfig(engine="batched")) as ref_ex:
+        ref = ref_ex.explore_r(spec, 3)
+    with Explorer(ExploreConfig(engine=engine)) as ex:
+        got = ex.explore_r(spec, 3)
+    assert ref is not None and got is not None
+    assert _same_design(ref.design, got.design)
+
+
+def test_min_regions_binary_matches_linear_scan():
+    """Feasibility is monotone in R (region splitting only removes
+    constraints): the exponential-descent + binary search must agree with
+    the seed's linear scan on every registered spec kind."""
+    from repro.api.config import DEFAULTS
+
+    with Explorer() as ex:
+        for kind in DEFAULTS:
+            spec = ExploreConfig(kind=kind, bits=8).spec()
+            fast = ex.min_regions(spec)
+            linear = next((r for r in range(spec.in_bits + 1)
+                           if ex.feasible(spec, r)), None)
+            assert fast == linear, kind
+            # feasibility really is monotone above the minimum
+            assert all(ex.feasible(spec, r)
+                       for r in range(fast, spec.in_bits + 1)), kind
+
+
+def test_min_regions_r_max_cutoff():
+    spec = get_spec("recip", 8)
+    with Explorer() as ex:
+        true_min = ex.min_regions(spec)
+        assert true_min == 2
+        assert ex.min_regions(spec, r_max=true_min - 1) is None
+        assert ex.min_regions(spec, r_max=true_min) == true_min
 
 
 # ------------------------------------------------------------ result object

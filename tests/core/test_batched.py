@@ -1,0 +1,177 @@
+"""Batched region engine ≡ per-region scalar path (the equivalence oracle).
+
+The numpy engine must match the pooled per-region routines *bit for bit*
+(same float64 expressions, batched over a leading region axis); the Pallas
+engine matches to float32 tolerance and must agree on every feasibility
+verdict for the specs under test.
+"""
+import numpy as np
+import pytest
+
+from repro.core import batched, decision
+from repro.core import designspace as dsp
+from repro.core.funcspec import get_spec
+
+
+def _scalar_spaces(L, U):
+    return [dsp.region_space(L[r], U[r], "hull") for r in range(L.shape[0])]
+
+
+def _same_float(a, b):
+    return (a == b) or (np.isnan(a) and np.isnan(b))
+
+
+def _rand_bounds(rng, b, n, slack=5):
+    L = rng.integers(0, 60, (b, n)).astype(np.int64)
+    return L, L + rng.integers(0, slack, (b, n))
+
+
+# ------------------------------------------------------- region spaces
+
+@pytest.mark.parametrize("kind,bits", [("recip", 8), ("exp2", 8), ("silu", 8)])
+def test_region_spaces_bitwise_match(kind, bits):
+    spec = get_spec(kind, bits)
+    # includes the n == 2 (R = bits-1) and n == 1 (R = bits) degenerate rows
+    for lookup_bits in (0, 1, 2, 3, bits - 2, bits - 1, bits):
+        L, U = spec.region_bounds(lookup_bits)
+        ref = _scalar_spaces(L, U)
+        bat = batched.region_spaces(L, U)
+        assert len(ref) == len(bat) == 1 << lookup_bits
+        for r, (a, b) in enumerate(zip(ref, bat)):
+            assert np.array_equal(a.big_m, b.big_m), (lookup_bits, r)
+            assert np.array_equal(a.small_m, b.small_m), (lookup_bits, r)
+            assert _same_float(a.a_lo, b.a_lo), (lookup_bits, r)
+            assert _same_float(a.a_hi, b.a_hi), (lookup_bits, r)
+            assert a.feasible == b.feasible, (lookup_bits, r)
+        mask = batched.regions_feasible_mask(L, U)
+        assert list(mask) == [s.feasible for s in ref]
+
+
+def test_region_spaces_random_rows_include_infeasible():
+    rng = np.random.default_rng(0)
+    for n in (4, 8, 16):
+        L, U = _rand_bounds(rng, 32, n, slack=3)
+        ref = _scalar_spaces(L, U)
+        bat = batched.region_spaces(L, U)
+        verdicts = {s.feasible for s in ref}
+        for a, b in zip(ref, bat):
+            assert a.feasible == b.feasible
+            assert _same_float(a.a_lo, b.a_lo) and _same_float(a.a_hi, b.a_hi)
+        assert len(verdicts) == 2 or n > 4, "want a feasible/infeasible mix"
+
+
+def test_batched_dd_matches_scalar_searches():
+    rng = np.random.default_rng(1)
+    g = rng.integers(-1000, 1000, (16, 40)).astype(np.float64)
+    h = rng.integers(-1000, 1000, (16, 40)).astype(np.float64)
+    from repro.core import searches
+    mx = batched.batched_max_dd(g, h)
+    mn = batched.batched_min_dd(g, h)
+    for i in range(16):
+        assert mx[i] == searches.max_dd(g[i], h[i], "naive")[0]
+        assert mn[i] == searches.min_dd(g[i], h[i], "naive")[0]
+
+
+def test_batched_dd_hull_fallback_path():
+    rng = np.random.default_rng(2)
+    t = batched._HULL_T_THRESHOLD
+    g = rng.integers(-1000, 1000, (2, t)).astype(np.float64)
+    h = rng.integers(-1000, 1000, (2, t)).astype(np.float64)
+    from repro.core import searches
+    mx = batched.batched_max_dd(g, h)
+    for i in range(2):
+        assert mx[i] == searches.max_dd(g[i], h[i], "hull")[0]
+
+
+# ------------------------------------------------------- candidates
+
+@pytest.mark.parametrize("force_linear", [False, True])
+def test_design_candidates_match_per_region(force_linear):
+    spec = get_spec("recip", 8)
+    for lookup_bits in (2, 3, 7, 8):
+        L, U = spec.region_bounds(lookup_bits)
+        spaces = batched.region_spaces(L, U)
+        for k in (0, 3, 6):
+            ref = [dsp._region_candidates(spaces[r], L[r], U[r], k, force_linear)
+                   for r in range(L.shape[0])]
+            bat = batched.design_candidates(spaces, L, U, k, force_linear)
+            assert ref == bat, (lookup_bits, k, force_linear)
+
+
+def test_trunc_candidates_match_per_region():
+    spec = get_spec("recip", 8)
+    for lookup_bits in (2, 3):
+        ds = dsp.minimal_k(spec, lookup_bits, engine="batched")
+        assert ds is not None
+        n_regions = 1 << lookup_bits
+        a_sets = [[c.a for c in ds.candidates[r]] for r in range(n_regions)]
+        for sq_t, lin_t in ((0, 0), (1, 0), (2, 1), (3, 2)):
+            if max(sq_t, lin_t) > ds.eval_bits:
+                continue
+            ref = [decision._region_trunc_candidates(
+                       ds.L[r], ds.U[r], ds.k, a_sets[r], sq_t, lin_t, "hull")
+                   for r in range(n_regions)]
+            bat = batched.trunc_candidates(ds.L, ds.U, ds.k, a_sets, sq_t, lin_t)
+            assert ref == bat, (lookup_bits, sq_t, lin_t)
+
+
+def test_batched_linear_fit_matches_scalar():
+    rng = np.random.default_rng(3)
+    lo = rng.integers(-200, 200, (64, 8)).astype(np.int64)
+    hi = lo + rng.integers(0, 60, (64, 8))
+    hi[::9] -= 100  # force some empty (lo > hi) rows
+    for stride in (1, 2, 4):
+        bat = batched.batched_linear_fit(lo, hi, stride)
+        for i in range(64):
+            assert bat[i] == decision.linear_fit_interval(lo[i], hi[i], stride)
+
+
+# ------------------------------------------------------- full decision
+
+@pytest.mark.parametrize("kind,bits,lookup_bits",
+                         [("recip", 8, 2), ("recip", 8, 4), ("exp2", 8, 3),
+                          ("log2", 8, 3)])
+def test_run_decision_engines_identical(kind, bits, lookup_bits):
+    spec = get_spec(kind, bits)
+    pooled = decision.run_decision(spec, lookup_bits, engine="pooled", impl="hull")
+    bat = decision.run_decision(spec, lookup_bits, engine="batched")
+    assert (pooled is None) == (bat is None)
+    if pooled is None:
+        return
+    d1, r1 = pooled
+    d2, r2 = bat
+    assert (d1.k, d1.degree, d1.sq_trunc, d1.lin_trunc) == \
+        (d2.k, d2.degree, d2.sq_trunc, d2.lin_trunc)
+    assert d1.lut_widths == d2.lut_widths
+    assert np.array_equal(d1.a, d2.a)
+    assert np.array_equal(d1.b, d2.b)
+    assert np.array_equal(d1.c, d2.c)
+    assert r1.linear_possible == r2.linear_possible
+
+
+# ------------------------------------------------------- pallas engine
+
+def test_pallas_engine_matches_numpy_interpret():
+    spec = get_spec("recip", 8)
+    for lookup_bits in (2, 3, 5):
+        L, U = spec.region_bounds(lookup_bits)
+        ref = batched.region_spaces(L, U)
+        pal = batched.region_spaces_pallas(L, U, interpret=True)
+        for r, (a, b) in enumerate(zip(ref, pal)):
+            np.testing.assert_allclose(b.big_m[1:], a.big_m[1:], rtol=2e-5)
+            np.testing.assert_allclose(b.small_m[1:], a.small_m[1:], rtol=2e-5)
+            assert a.feasible == b.feasible, (lookup_bits, r)
+            if a.feasible:
+                np.testing.assert_allclose([b.a_lo, b.a_hi], [a.a_lo, a.a_hi],
+                                           rtol=2e-4)
+
+
+def test_pallas_engine_trivial_widths_use_numpy_path():
+    spec = get_spec("recip", 8)
+    for lookup_bits in (7, 8):  # n == 2 / n == 1
+        L, U = spec.region_bounds(lookup_bits)
+        ref = batched.region_spaces(L, U)
+        pal = batched.region_spaces_pallas(L, U)
+        for a, b in zip(ref, pal):
+            assert a.feasible == b.feasible
+            assert np.array_equal(a.big_m, b.big_m)
