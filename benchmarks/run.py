@@ -11,11 +11,13 @@
 | batched_engine    | batched vs pooled generation, min-R    |
 | fig3_lub_sweep    | Figs 2-3 area-delay vs LUT height      |
 | kernels_bench     | TPU adaptation: kernels + table accuracy |
+| serve_path        | fused-library vs per-table decode numerics |
 | roofline_report   | SRoofline table from the dry-run sweep |
 
 After a run that produced them, the claim21 + batched_engine rows are
-folded into ``artifacts/bench/BENCH_2.json`` — the per-PR perf snapshot
-tracked by the CI bench-smoke job.
+folded into ``artifacts/bench/BENCH_2.json`` and the serve_path rows into
+``BENCH_3.json`` — the per-PR perf snapshots tracked by the CI bench-smoke
+job.
 """
 from __future__ import annotations
 
@@ -28,32 +30,38 @@ import time
 
 ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "bench"
 
-# module -> tables folded into the BENCH_2.json perf snapshot
-_BENCH2_TABLES = {
-    "claim21": ("claim21_search", "claim21_endtoend"),
-    "batched_engine": ("batched_vs_pooled", "min_regions_search"),
+# snapshot file -> {module -> tables folded into it}
+_SNAPSHOTS = {
+    "BENCH_2.json": {
+        "claim21": ("claim21_search", "claim21_endtoend"),
+        "batched_engine": ("batched_vs_pooled", "min_regions_search"),
+    },
+    "BENCH_3.json": {
+        "serve_path": ("serve_path_decode", "serve_path_ensemble"),
+    },
 }
 
 
-def _emit_bench2(ran: set) -> None:
+def _emit_snapshots(ran: set) -> None:
     # refresh only the tables whose module ran THIS invocation (stale
     # per-table JSONs from an earlier run must not be stamped into the
     # snapshot), but keep the other modules' existing tables — a partial
-    # --only run must not truncate the tracked snapshot
-    snap_path = ART / "BENCH_2.json"
-    fresh = {}
-    for mod, tables in _BENCH2_TABLES.items():
-        if mod not in ran:
-            continue
-        for name in tables:
-            path = ART / f"{name}.json"
-            if path.exists():
-                fresh[name] = json.loads(path.read_text())
-    if fresh:
-        out = json.loads(snap_path.read_text()) if snap_path.exists() else {}
-        out.update(fresh)
-        snap_path.write_text(json.dumps(out, indent=1))
-        print(f"\nwrote {snap_path} (refreshed {sorted(fresh)})")
+    # --only run must not truncate the tracked snapshots
+    for snap, sources in _SNAPSHOTS.items():
+        snap_path = ART / snap
+        fresh = {}
+        for mod, tables in sources.items():
+            if mod not in ran:
+                continue
+            for name in tables:
+                path = ART / f"{name}.json"
+                if path.exists():
+                    fresh[name] = json.loads(path.read_text())
+        if fresh:
+            out = json.loads(snap_path.read_text()) if snap_path.exists() else {}
+            out.update(fresh)
+            snap_path.write_text(json.dumps(out, indent=1))
+            print(f"\nwrote {snap_path} (refreshed {sorted(fresh)})")
 
 
 def main() -> None:
@@ -67,13 +75,13 @@ def main() -> None:
         os.environ["BENCH_QUICK"] = "1"
 
     from benchmarks import (batched_engine, claim21, fig3_lub_sweep,
-                            kernels_bench, roofline_report, scaling, table1,
-                            table2)
+                            kernels_bench, roofline_report, scaling,
+                            serve_path, table1, table2)
     mods = {
         "table1": table1, "table2": table2, "claim21": claim21,
         "scaling": scaling, "batched_engine": batched_engine,
         "fig3_lub_sweep": fig3_lub_sweep, "kernels_bench": kernels_bench,
-        "roofline_report": roofline_report,
+        "serve_path": serve_path, "roofline_report": roofline_report,
     }
     only = set(args.only.split(",")) if args.only else None
     if only and not only <= set(mods):
@@ -92,7 +100,7 @@ def main() -> None:
         except Exception as e:
             failures.append((name, repr(e)))
             print(f"--- {name} FAILED: {e!r}", flush=True)
-    _emit_bench2(ran)
+    _emit_snapshots(ran)
     if failures:
         print(f"\n{len(failures)} benchmark(s) failed: {failures}")
         sys.exit(1)

@@ -1,21 +1,29 @@
-"""Serving with certified table numerics: continuous batching, exact-vs-interp.
+"""Serving with certified table numerics: compile -> save -> load -> serve.
 
     PYTHONPATH=src python examples/serve_interp.py [--arch yi_6b]
 
-Loads a (smoke-size) model twice — once with XLA transcendentals, once with
-the paper's piecewise-polynomial tables in every softmax/SiLU/rsqrt — serves
-the same batched request stream through the continuous-batching engine, and
-reports token agreement plus the certified worst-case softmax error bound
-carried by the tables.
+The deployment flow the library artifact enables:
+
+  1. ``Explorer.compile()`` packs every table the interp numerics touch
+     into one ``InterpLibrary`` (generating + verifying on a cold cache);
+  2. ``library.save(path)`` persists it as npz + json manifest;
+  3. a serving process ``InterpLibrary.load``s the artifact and constructs
+     its ``ServeEngine`` from it — *zero* exploration calls at serve time.
+
+The same batched request stream is then served with XLA transcendentals and
+with the loaded library in every softmax/SiLU/rsqrt, reporting token
+agreement plus the certified worst-case softmax error bound.
 """
 from __future__ import annotations
 
 import argparse
+import pathlib
+import tempfile
 
 import jax
 import numpy as np
 
-from repro.api import Explorer, set_default_explorer
+from repro.api import Explorer, InterpLibrary
 from repro.configs.base import get_smoke_config
 from repro.models import transformer as tf
 from repro.numerics.ops import softmax_ulp_bound
@@ -30,6 +38,10 @@ def main():
     ap.add_argument("--slots", type=int, default=3)
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--library", default=None,
+                    help="library artifact path: loaded if it exists "
+                         "(matching repro.launch.serve --library), compiled "
+                         "+ saved there otherwise (default: a temp dir)")
     args = ap.parse_args()
 
     base = get_smoke_config(args.arch)
@@ -38,14 +50,26 @@ def main():
     prompts = [rng.integers(0, base.vocab_size, args.prompt_len).astype(np.int32)
                for _ in range(args.requests)]
 
-    # one Explorer session supplies (and, on first run, generates + verifies)
-    # every table the interp numerics touch; the engines and the jitted
-    # decode paths all resolve through it once it is the process default
-    set_default_explorer(Explorer())
+    path = pathlib.Path(args.library or
+                        tempfile.mkdtemp(prefix="interp_lib_")) / "library"
+    manifest = path.with_suffix(".json")
+    if not manifest.exists():
+        # compile once: one Explorer session generates + verifies every
+        # table of the manifest and packs them into a single pytree artifact
+        with Explorer() as ex:
+            manifest = ex.compile().save(path)
+        print(f"compiled library -> {manifest}")
+
+    # the serving side only ever loads — no Explorer, no generation, just
+    # the packed coefficients riding through the jitted decode as a pytree
+    library = InterpLibrary.load(manifest)
+    print(f"loaded {manifest}: {library}")
+
     outs = {}
     for numerics in ("exact", "interp"):
         cfg = base.replace(numerics=numerics)
-        eng = ServeEngine(cfg, params, slots=args.slots, cache_len=128)
+        eng = ServeEngine(cfg, params, slots=args.slots, cache_len=128,
+                          library=library if numerics == "interp" else None)
         for i, p in enumerate(prompts):
             eng.submit(Request(i, p, args.max_new))
         done = sorted(eng.run(), key=lambda r: r.rid)
@@ -59,8 +83,11 @@ def main():
     ]
     print(f"\nper-request greedy token agreement exact-vs-interp: "
           f"{[f'{a:.2f}' for a in agree]}")
+    # the bound is a function of the served tables' widths — read them from
+    # the loaded artifact's metadata, not a second exploration session
+    bound = softmax_ulp_bound(library.meta("exp2neg"), library.meta("recip"))
     print(f"certified softmax relative error bound of the tables: "
-          f"{softmax_ulp_bound():.2e}")
+          f"{bound:.2e}")
     print("(tokens can differ only where the argmax margin is inside that "
           "bound — the approximation is *certified*, not heuristic)")
 

@@ -20,6 +20,8 @@ Legacy entry points (``repro.core.generate.generate_table`` / ``sweep_lub``,
 from repro.api.config import DEFAULTS, ExploreConfig, spec_for  # noqa: F401
 from repro.api.explorer import (Explorer, default_explorer, explore,  # noqa: F401
                                 get_table, set_default_explorer)
+from repro.api.library import (DEFAULT_LIBRARY_KINDS, FuncMeta,  # noqa: F401
+                               InterpLibrary, load_library)
 from repro.api.result import DesignSpaceResult, ExploreEntry  # noqa: F401
 from repro.api.target import (Target, get_target, list_targets,  # noqa: F401
                               register_target)
@@ -28,8 +30,10 @@ from repro.core.funcspec import FunctionSpec, get_spec  # noqa: F401
 from repro.core.table import TableDesign  # noqa: F401
 
 __all__ = [
-    "DEFAULTS", "DecisionPolicy", "DesignSpaceResult", "ExploreConfig",
-    "ExploreEntry", "Explorer", "FunctionSpec", "TableDesign", "Target",
+    "DEFAULTS", "DEFAULT_LIBRARY_KINDS", "DecisionPolicy",
+    "DesignSpaceResult", "ExploreConfig", "ExploreEntry", "Explorer",
+    "FuncMeta", "FunctionSpec", "InterpLibrary", "TableDesign", "Target",
     "default_explorer", "explore", "get_spec", "get_table", "get_target",
-    "list_targets", "register_target", "set_default_explorer", "spec_for",
+    "list_targets", "load_library", "register_target",
+    "set_default_explorer", "spec_for",
 ]

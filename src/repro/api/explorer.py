@@ -38,6 +38,8 @@ import threading
 import time
 
 from repro.api.config import DEFAULTS, ENGINES, ExploreConfig, spec_for
+from repro.api.library import DEFAULT_LIBRARY_KINDS, InterpLibrary
+from repro.core.funcspec import ACT_HI, ACT_LO
 from repro.api.result import DesignSpaceResult, ExploreEntry
 from repro.api.target import Target, get_target
 from repro.core import batched
@@ -382,6 +384,36 @@ class Explorer:
             tmp.replace(path)
             self._tables[key] = entry.design
             return entry.design
+
+    # -- compiled libraries (the runtime-side artifact) --------------------
+    def compile(self, kinds=None, *, target: str | Target | None = None,
+                **table_kw) -> InterpLibrary:
+        """Compile a set of certified tables into one :class:`InterpLibrary`.
+
+        ``kinds`` is an iterable of registry kind names or ``(kind, kwargs)``
+        pairs (kwargs forwarded to :meth:`get_table` — bits, lookup_bits,
+        ulp...); ``None`` compiles :data:`DEFAULT_LIBRARY_KINDS`, the full
+        manifest of tables the interp numerics backend can touch. Each table
+        comes through the session's persistence layer, so a warm cache makes
+        this a pure pack step; a cold one generates + verifies once and the
+        resulting artifact can be ``save``d so serving never explores again.
+        """
+        items: list[tuple[str, dict]] = []
+        for it in (DEFAULT_LIBRARY_KINDS if kinds is None else kinds):
+            if isinstance(it, str):
+                items.append((it, dict(table_kw)))
+            else:
+                kind, kw = it
+                items.append((kind, {**table_kw, **dict(kw)}))
+        designs = [self.get_table(kind, target=target, **kw)
+                   for kind, kw in items]
+        # non-default activation windows (lo/hi spec kwargs) must reach the
+        # metadata, or the library-bound glue would quantize over the wrong
+        # input range
+        windows = {kind: (kw.get("lo", ACT_LO), kw.get("hi", ACT_HI))
+                   for kind, kw in items if "lo" in kw or "hi" in kw}
+        return InterpLibrary.from_designs(designs, [k for k, _ in items],
+                                          act_windows=windows)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,279 @@
+"""Compiled interpolation libraries: the runtime-side artifact of a session.
+
+The paper's deployable product is not one table but the *set* of certified
+piecewise-polynomial designs a model's numerics touch. ``InterpLibrary``
+packs that set into a single frozen, registered JAX pytree:
+
+  * one padded ``(F, R_max, 3)`` int32 coefficient ROM — the only dynamic
+    leaf, so the artifact shards (replicated), donates, and rides inside a
+    params/cache pytree through ``jit`` / ``vmap`` / ``repro.checkpoint``;
+  * a tuple of static :class:`FuncMeta` records (hashable — jit treats the
+    library's structure as compile-time constant): per-function widths,
+    datapath shifts, and the input-window/output-span constants the float
+    glue in ``repro.numerics`` needs.
+
+Evaluation is fused: element ``i`` reads function ``fids[i]``'s rows, so
+softmax's exp+recip, rmsnorm's rsqrt and the activations all lower to the
+same ``(shapes, F, R_max)`` Pallas executable instead of one specialization
+per table (``repro.kernels.interp``). The per-table path remains the
+bit-exactness oracle. ``save``/``load`` (npz + json manifest) let a served
+model start from a library with zero exploration calls. DESIGN.md §10.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import pathlib
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from repro.core.funcspec import ACT_HI, ACT_KINDS, ACT_LO, act_out_span
+from repro.core.table import TableDesign
+
+# The library manifest: every table kind the interp numerics backend can
+# touch at runtime (softmax exp/recip, rmsnorm rsqrt, all activations).
+# ``Explorer.compile()`` defaults to this set — serving warm-up compiles it
+# once instead of hand-maintaining a per-engine kind list.
+DEFAULT_LIBRARY_KINDS = ("exp2neg", "gelu", "recip", "rsqrt", "sigmoid",
+                         "silu", "softplus")
+
+_FORMAT_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class FuncMeta:
+    """Static per-function metadata of one library slot (hashable)."""
+
+    kind: str  # registry kind, e.g. "exp2neg" — the numerics lookup key
+    name: str  # design name, e.g. "exp2neg_12"
+    in_bits: int
+    out_bits: int
+    lookup_bits: int  # R: this function uses rows [0, 2^R) of its slot
+    k: int
+    degree: int
+    sq_trunc: int
+    lin_trunc: int
+    act_lo: float = 0.0  # input window (direct activation tables only)
+    act_hi: float = 0.0
+    act_span: float = 0.0  # output span S: float value = int * S / 2^out_bits
+
+    @property
+    def eval_bits(self) -> int:
+        return self.in_bits - self.lookup_bits
+
+    def datapath_row(self) -> tuple[int, int, int, int, int]:
+        """The (eval_bits, k, sq_trunc, lin_trunc, degree) kernel row."""
+        return (self.eval_bits, self.k, self.sq_trunc, self.lin_trunc,
+                self.degree)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class InterpLibrary:
+    """Frozen pytree of every table a model's numerics touch.
+
+    Construct through :meth:`from_designs` / :meth:`repro.api.Explorer.
+    compile` / :meth:`load`; the raw constructor is the pytree-unflatten
+    hook and performs no validation (leaves may be tracers).
+    """
+
+    __slots__ = ("coeffs", "metas", "_index", "_meta_rows")
+
+    def __init__(self, coeffs, metas: tuple[FuncMeta, ...]):
+        self.coeffs = coeffs  # (F, R_max, 3) int32 — the only dynamic leaf
+        self.metas = tuple(metas)
+        self._index = {m.kind: i for i, m in enumerate(self.metas)}
+        self._meta_rows = None  # lazy (F, 5) device array
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def from_designs(cls, designs: Sequence[TableDesign],
+                     kinds: Sequence[str],
+                     act_windows: dict | None = None) -> "InterpLibrary":
+        """Pack verified designs into one padded ROM + static metadata.
+
+        ``act_windows``: optional ``{kind: (lo, hi)}`` for activation tables
+        generated over a non-default input window — recorded in the metadata
+        and honored by the library-bound float glue.
+        """
+        import jax.numpy as jnp
+
+        assert len(designs) == len(kinds) and len(designs) > 0
+        dupes = {k for k in kinds if list(kinds).count(k) > 1}
+        if dupes:  # _index would silently shadow the earlier slot
+            raise ValueError(f"duplicate kinds in library: {sorted(dupes)}")
+        metas = []
+        for kind, d in zip(kinds, designs):
+            if d.degree != 2 and np.any(d.a != 0):
+                raise ValueError(  # fused path zeroes the squarer by degree
+                    f"{d.name}: degree-{d.degree} design with nonzero a")
+            act = kind in ACT_KINDS
+            lo, hi = (act_windows or {}).get(kind, (ACT_LO, ACT_HI))
+            metas.append(FuncMeta(
+                kind=kind, name=d.name, in_bits=d.in_bits,
+                out_bits=d.out_bits, lookup_bits=d.lookup_bits, k=d.k,
+                degree=d.degree, sq_trunc=d.sq_trunc, lin_trunc=d.lin_trunc,
+                act_lo=lo if act else 0.0, act_hi=hi if act else 0.0,
+                act_span=act_out_span(kind, lo, hi) if act else 0.0))
+        r_max = max(1 << d.lookup_bits for d in designs)
+        packed = np.zeros((len(designs), r_max, 3), np.int32)
+        for i, d in enumerate(designs):
+            packed[i, : 1 << d.lookup_bits] = d.packed_coeffs()
+        return cls(jnp.asarray(packed), tuple(metas))
+
+    # -- introspection -----------------------------------------------------
+    @property
+    def kinds(self) -> tuple[str, ...]:
+        return tuple(m.kind for m in self.metas)
+
+    @property
+    def r_max(self) -> int:
+        return max(1 << m.lookup_bits for m in self.metas)
+
+    def __contains__(self, kind: str) -> bool:
+        return kind in self._index
+
+    def __len__(self) -> int:
+        return len(self.metas)
+
+    def __repr__(self) -> str:
+        return (f"InterpLibrary({len(self.metas)} funcs, "
+                f"coeffs{tuple(np.shape(self.coeffs))}: "
+                f"{', '.join(self.kinds)})")
+
+    def func_id(self, kind: str) -> int:
+        try:
+            return self._index[kind]
+        except KeyError:
+            raise KeyError(f"{kind!r} not in library {self.kinds}") from None
+
+    def meta(self, kind: str) -> FuncMeta:
+        return self.metas[self.func_id(kind)]
+
+    def meta_rows(self):
+        """(F, 5) int32 device array of datapath rows (kernel operand)."""
+        import jax
+        import jax.numpy as jnp
+
+        if self._meta_rows is None:
+            rows = jnp.asarray(
+                np.array([m.datapath_row() for m in self.metas], np.int32))
+            if isinstance(rows, jax.core.Tracer):
+                # jnp.asarray returns a tracer under an active trace even
+                # for a concrete constant; caching one would leak it
+                return rows
+            self._meta_rows = rows
+        return self._meta_rows
+
+    def manifest(self) -> dict:
+        f, r_max, _ = np.shape(self.coeffs)
+        return {
+            "version": _FORMAT_VERSION,
+            "kinds": list(self.kinds),
+            "n_funcs": int(f),
+            "r_max": int(r_max),
+            "funcs": [m.to_dict() for m in self.metas],
+        }
+
+    # -- evaluation --------------------------------------------------------
+    def eval_int(self, codes, kind: str, use_kernel: bool | None = None,
+                 interpret: bool | None = None):
+        """Exact integer evaluation of one function (static kind).
+
+        ``use_kernel=None`` picks the fused Pallas kernel on TPU and the
+        jnp slice path elsewhere; both are bit-identical to the per-table
+        ``table_eval_int`` oracle (tests/api/test_library.py).
+        """
+        import jax
+
+        from repro.kernels.interp.ops import _on_tpu
+        from repro.kernels.interp.ref import interp_eval_ref
+
+        fid = self.func_id(kind)
+        if use_kernel or (use_kernel is None and _on_tpu()):
+            return self.eval_fused(codes, fid, use_kernel=True,
+                                   interpret=interpret)
+        m = self.metas[fid]
+        rows = jax.lax.index_in_dim(self.coeffs, fid, 0, keepdims=False)
+        return interp_eval_ref(
+            codes, rows[: 1 << m.lookup_bits], eval_bits=m.eval_bits,
+            k=m.k, sq_trunc=m.sq_trunc, lin_trunc=m.lin_trunc,
+            degree=m.degree)
+
+    def eval_fused(self, codes, fids, use_kernel: bool = True,
+                   interpret: bool | None = None):
+        """Fused multi-function evaluation: element i reads table fids[i]."""
+        from repro.kernels.interp.ops import library_eval
+
+        return library_eval(codes, fids, self.coeffs, self.meta_rows(),
+                            use_kernel=use_kernel, interpret=interpret)
+
+    # -- persistence (npz coefficients + json manifest) --------------------
+    def save(self, path: str | pathlib.Path) -> pathlib.Path:
+        """Write ``<path>.npz`` (ROM) + ``<path>.json`` (manifest); returns
+        the manifest path. A saved library serves with zero exploration."""
+        base = pathlib.Path(path)
+        if base.suffix in (".json", ".npz"):
+            base = base.with_suffix("")
+        base.parent.mkdir(parents=True, exist_ok=True)
+        coeffs = np.asarray(self.coeffs, np.int32)
+        np.savez(base.with_suffix(".npz"), coeffs=coeffs)
+        man = self.manifest()
+        man["coeffs_file"] = base.with_suffix(".npz").name
+        man["coeffs_sha"] = hashlib.sha256(
+            np.ascontiguousarray(coeffs).tobytes()).hexdigest()[:16]
+        tmp = base.with_suffix(".json.tmp")
+        tmp.write_text(json.dumps(man, indent=1))
+        tmp.replace(base.with_suffix(".json"))
+        return base.with_suffix(".json")
+
+    @classmethod
+    def load(cls, path: str | pathlib.Path) -> "InterpLibrary":
+        import jax.numpy as jnp
+
+        base = pathlib.Path(path)
+        if base.suffix in (".json", ".npz"):
+            base = base.with_suffix("")
+        man = json.loads(base.with_suffix(".json").read_text())
+        if man.get("version") != _FORMAT_VERSION:
+            raise ValueError(f"unsupported library version {man.get('version')}")
+        with np.load(base.parent / man["coeffs_file"]) as z:
+            coeffs = z["coeffs"].astype(np.int32)
+        sha = hashlib.sha256(
+            np.ascontiguousarray(coeffs).tobytes()).hexdigest()[:16]
+        if man.get("coeffs_sha") and sha != man["coeffs_sha"]:
+            raise ValueError(f"corrupt library ROM {base}.npz")
+        metas = tuple(FuncMeta(**f) for f in man["funcs"])
+        return cls(jnp.asarray(coeffs), metas)
+
+
+def load_library(path: str | pathlib.Path) -> InterpLibrary:
+    """Module-level convenience: :meth:`InterpLibrary.load`."""
+    return InterpLibrary.load(path)
+
+
+def _flatten_with_keys(lib: InterpLibrary):
+    import jax
+
+    return ((jax.tree_util.GetAttrKey("coeffs"), lib.coeffs),), lib.metas
+
+
+def _flatten(lib: InterpLibrary):
+    return (lib.coeffs,), lib.metas
+
+
+def _unflatten(metas, leaves) -> InterpLibrary:
+    return InterpLibrary(leaves[0], metas)
+
+
+def _register() -> None:
+    import jax
+
+    jax.tree_util.register_pytree_with_keys(
+        InterpLibrary, _flatten_with_keys, _unflatten, _flatten)
+
+
+_register()

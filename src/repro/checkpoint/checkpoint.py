@@ -35,7 +35,11 @@ def _leaf_paths(tree) -> list[tuple[str, object]]:
     flat = jax.tree_util.tree_flatten_with_path(tree)[0]
     out = []
     for path, leaf in flat:
-        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        # DictKey carries .key, SequenceKey .idx, GetAttrKey (custom pytree
+        # nodes like repro.api.InterpLibrary) .name
+        name = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path)
         out.append((name, leaf))
     return out
 

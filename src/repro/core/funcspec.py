@@ -19,6 +19,24 @@ from typing import Callable
 
 import numpy as np
 
+# Input window of the direct activation tables (silu / sigmoid / softplus /
+# gelu): codes map affinely onto [ACT_LO, ACT_HI). The float glue in
+# ``repro.numerics`` and the library metadata in ``repro.api.library`` both
+# read these — the window lives here, next to the bound makers, and nowhere
+# else.
+ACT_LO, ACT_HI = -8.0, 8.0
+ACT_KINDS = ("silu", "sigmoid", "softplus", "gelu")
+
+
+def act_out_span(kind: str, lo: float = ACT_LO, hi: float = ACT_HI) -> float:
+    """Output span S of a direct activation table: the stored integer is
+    ``value * 2^out_bits / S``, so the float glue rescales by
+    ``S / 2^out_bits``. sigmoid's range is (0, 1); the others scale by the
+    input window width so the signed/linear tails stay representable."""
+    if kind not in ACT_KINDS:
+        raise KeyError(f"{kind!r} is not a direct activation table")
+    return 1.0 if kind == "sigmoid" else hi - lo
+
 
 @dataclasses.dataclass(frozen=True)
 class FunctionSpec:
@@ -163,7 +181,7 @@ def make_rsqrt(bits: int, out_bits: int | None = None, ulp: float = 1.0) -> Func
     )
 
 
-def make_sigmoid(bits: int, out_bits: int | None = None, lo: float = -8.0, hi: float = 8.0,
+def make_sigmoid(bits: int, out_bits: int | None = None, lo: float = ACT_LO, hi: float = ACT_HI,
                  ulp: float = 1.0) -> FunctionSpec:
     """``y = sigmoid(s)``, s affinely mapped from codes over [lo, hi)."""
     out_bits = out_bits if out_bits is not None else bits
@@ -177,7 +195,7 @@ def make_sigmoid(bits: int, out_bits: int | None = None, lo: float = -8.0, hi: f
     )
 
 
-def make_silu(bits: int, out_bits: int | None = None, lo: float = -8.0, hi: float = 8.0,
+def make_silu(bits: int, out_bits: int | None = None, lo: float = ACT_LO, hi: float = ACT_HI,
               ulp: float = 1.0) -> FunctionSpec:
     """``y = s * sigmoid(s)`` — signed output (min ~= -0.278 * scale / range)."""
     out_bits = out_bits if out_bits is not None else bits
@@ -192,7 +210,7 @@ def make_silu(bits: int, out_bits: int | None = None, lo: float = -8.0, hi: floa
     )
 
 
-def make_softplus(bits: int, out_bits: int | None = None, lo: float = -8.0, hi: float = 8.0,
+def make_softplus(bits: int, out_bits: int | None = None, lo: float = ACT_LO, hi: float = ACT_HI,
                   ulp: float = 1.0) -> FunctionSpec:
     """``y = log(1 + e^s)`` — Mamba2's dt activation."""
     out_bits = out_bits if out_bits is not None else bits
@@ -206,7 +224,7 @@ def make_softplus(bits: int, out_bits: int | None = None, lo: float = -8.0, hi: 
     )
 
 
-def make_gelu(bits: int, out_bits: int | None = None, lo: float = -8.0, hi: float = 8.0,
+def make_gelu(bits: int, out_bits: int | None = None, lo: float = ACT_LO, hi: float = ACT_HI,
               ulp: float = 1.0) -> FunctionSpec:
     """tanh-form GELU (Whisper/ViT MLPs) — signed output."""
     out_bits = out_bits if out_bits is not None else bits

@@ -51,6 +51,10 @@ class TableDesign:
     a_meta: CoeffMeta
     b_meta: CoeffMeta
     c_meta: CoeffMeta
+    # lazily-populated device-side coefficient arrays (see device_coeffs);
+    # excluded from serialization and never part of design identity
+    _device_cache: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
 
     @property
     def eval_bits(self) -> int:  # W
@@ -148,3 +152,33 @@ class TableDesign:
         if np.abs(mat).max() >= 2**31:
             raise ValueError(f"{self.name}: coefficients exceed int32")
         return mat.astype(np.int32)
+
+    def device_coeffs(self, checked: bool = False):
+        """Cached device-side (2^R, 3) int32 coefficient array.
+
+        Every evaluation path used to re-stack the numpy columns into a
+        fresh ``jnp.asarray`` on each trace; the transfer now happens once
+        per design. ``checked=True`` additionally enforces the int32 range
+        (``packed_coeffs``) — the Pallas kernels require it, the jnp paths
+        keep the historical silent-wrap semantics for oversized tables.
+        """
+        import jax
+        import jax.numpy as jnp  # local: core stays importable without jax
+
+        if checked and "checked" not in self._device_cache:
+            self.packed_coeffs()  # raises on overflow; same int32 values
+            self._device_cache["checked"] = True
+        dev = self._device_cache.get("coeffs")
+        if dev is None:
+            mat = self._device_cache.get("host")
+            if mat is None:
+                mat = np.stack([self.a, self.b, self.c], axis=1).astype(np.int32)
+                self._device_cache["host"] = mat
+            # under an active trace jnp.asarray returns a tracer even for a
+            # concrete numpy constant (verified on jax 0.4.37) — caching one
+            # would leak it; mid-trace callers reuse the host cache only
+            dev = jnp.asarray(mat)
+            if isinstance(dev, jax.core.Tracer):
+                return dev
+            self._device_cache["coeffs"] = dev
+        return dev

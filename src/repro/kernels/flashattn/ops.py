@@ -34,8 +34,8 @@ def attention_fused(q: jax.Array, k: jax.Array, v: jax.Array, *,
                                 causal=causal, scale=scale)
     else:
         interpret = (jax.default_backend() != "tpu") if interpret is None else interpret
-        ec = jnp.asarray(exp_design.packed_coeffs())
-        rc = jnp.asarray(recip_design.packed_coeffs())
+        ec = exp_design.device_coeffs(checked=True)
+        rc = recip_design.device_coeffs(checked=True)
         o = flash_attention(qn, kn, vn, ec, rc, _meta(exp_design),
                             _meta(recip_design), causal=causal, scale=scale,
                             interpret=interpret)

@@ -46,6 +46,71 @@ def _interp_kernel(codes_ref, coeffs_ref, out_ref, *, eval_bits: int, k: int,
     out_ref[...] = jax.lax.shift_right_arithmetic(acc, k)
 
 
+def _library_kernel(codes_ref, fids_ref, coeffs_ref, meta_ref, out_ref, *,
+                    n_funcs: int, r_max: int):
+    """Fused multi-function table evaluation: gather by (func_id, region).
+
+    ``coeffs_ref`` is the library's padded ROM flattened to
+    ``(n_funcs * r_max, 3)``; ``meta_ref`` is the per-function static
+    datapath ``(n_funcs, 5)`` int32: eval_bits, k, sq_trunc, lin_trunc,
+    degree. Both LUT reads are one-hot MXU contractions like the
+    single-table kernel; the shifts take per-element amounts, which Mosaic
+    lowers as vector shifts.
+    """
+    codes = codes_ref[...]  # (BLOCK_ROWS, LANES) int32
+    fids = fids_ref[...]
+    n = codes.size
+    # per-element datapath params: onehot(fid) @ meta
+    flat_f = fids.reshape(-1)
+    iota_f = jax.lax.broadcasted_iota(jnp.int32, (n, n_funcs), 1)
+    onehot_f = (flat_f[:, None] == iota_f).astype(jnp.int32)
+    m = jax.lax.dot_general(
+        onehot_f, meta_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    eb, k, sq, lin, deg = (m[:, i].reshape(codes.shape) for i in range(5))
+    one = jnp.int32(1)
+    r = jax.lax.shift_right_logical(codes, eb)
+    x = jnp.bitwise_and(codes, jax.lax.shift_left(one, eb) - 1)
+    # fused ROM read: row index = func_id * r_max + region
+    row = (fids * r_max + r).reshape(-1)
+    iota_r = jax.lax.broadcasted_iota(jnp.int32, (n, n_funcs * r_max), 1)
+    onehot_r = (row[:, None] == iota_r).astype(jnp.int32)
+    sel = jax.lax.dot_general(
+        onehot_r, coeffs_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    ).reshape(codes.shape + (3,))
+    xs = jax.lax.shift_left(jax.lax.shift_right_logical(x, sq), sq)
+    xl = jax.lax.shift_left(jax.lax.shift_right_logical(x, lin), lin)
+    xs = jnp.where(deg == 2, xs, 0)  # degree-1 rows skip the squarer
+    acc = sel[..., 0] * xs * xs + sel[..., 1] * xl + sel[..., 2]
+    out_ref[...] = jax.lax.shift_right_arithmetic(acc, k)
+
+
+def library_eval_2d(codes: jax.Array, fids: jax.Array, coeffs: jax.Array,
+                    meta: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """codes/fids: (rows, 128) int32, rows % 8 == 0; coeffs: (F, R_max, 3);
+    meta: (F, 5) int32 rows of (eval_bits, k, sq_trunc, lin_trunc, degree)."""
+    rows, lanes = codes.shape
+    assert lanes == LANES and rows % BLOCK_ROWS == 0, codes.shape
+    assert fids.shape == codes.shape, (fids.shape, codes.shape)
+    n_funcs, r_max, _ = coeffs.shape
+    flat = coeffs.reshape(n_funcs * r_max, 3)
+    kernel = functools.partial(_library_kernel, n_funcs=n_funcs, r_max=r_max)
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // BLOCK_ROWS,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((n_funcs * r_max, 3), lambda i: (0, 0)),
+            pl.BlockSpec((n_funcs, 5), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+        interpret=interpret,
+    )(codes, fids, flat, meta)
+
+
 def interp_eval_2d(codes: jax.Array, coeffs: jax.Array, *, eval_bits: int,
                    k: int, sq_trunc: int, lin_trunc: int, degree: int,
                    interpret: bool = True) -> jax.Array:

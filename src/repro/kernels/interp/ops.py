@@ -1,15 +1,16 @@
-"""Jitted public wrapper: evaluate a TableDesign on arbitrary-shape codes."""
+"""Jitted public wrappers: evaluate one TableDesign — or a whole compiled
+InterpLibrary — on arbitrary-shape codes."""
 from __future__ import annotations
 
 from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.table import TableDesign
-from repro.kernels.interp.kernel import BLOCK_ROWS, LANES, interp_eval_2d
-from repro.kernels.interp.ref import interp_eval_ref
+from repro.kernels.interp.kernel import (BLOCK_ROWS, LANES, interp_eval_2d,
+                                         library_eval_2d)
+from repro.kernels.interp.ref import interp_eval_ref, library_eval_ref
 
 
 def _on_tpu() -> bool:
@@ -35,12 +36,42 @@ def table_eval(codes: jax.Array, design: TableDesign,
     """Evaluate ``design`` on int32 codes; Pallas kernel or jnp-ref path."""
     codes = codes.astype(jnp.int32)
     if not use_kernel:
-        coeffs64 = jnp.asarray(np.stack([design.a, design.b, design.c], 1))
-        return interp_eval_ref(codes, coeffs64, eval_bits=design.eval_bits,
+        return interp_eval_ref(codes, design.device_coeffs(),
+                               eval_bits=design.eval_bits,
                                k=design.k, sq_trunc=design.sq_trunc,
                                lin_trunc=design.lin_trunc, degree=design.degree)
-    coeffs = jnp.asarray(design.packed_coeffs())
+    coeffs = design.device_coeffs(checked=True)
     interpret = (not _on_tpu()) if interpret is None else interpret
     return _eval_padded(codes, coeffs, eval_bits=design.eval_bits, k=design.k,
                         sq_trunc=design.sq_trunc, lin_trunc=design.lin_trunc,
                         degree=design.degree, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def _library_eval_padded(codes, fids, coeffs, meta, *, interpret):
+    n = codes.size
+    tile = BLOCK_ROWS * LANES
+    pad = (-n) % tile
+    flat = jnp.pad(codes.reshape(-1), (0, pad)).reshape(-1, LANES)
+    flat_f = jnp.pad(fids.reshape(-1), (0, pad)).reshape(-1, LANES)
+    out = library_eval_2d(flat, flat_f, coeffs, meta, interpret=interpret)
+    return out.reshape(-1)[:n].reshape(codes.shape)
+
+
+def library_eval(codes: jax.Array, fids: jax.Array, coeffs: jax.Array,
+                 meta: jax.Array, use_kernel: bool = True,
+                 interpret: bool | None = None) -> jax.Array:
+    """Fused multi-function evaluation: element i reads function
+    ``fids[i]``'s table row. One kernel program serves the entire library —
+    every call site lowers the same (shapes, F, R_max) executable, instead
+    of one Pallas specialization per table.
+
+    codes/fids: int32, any (matching) shape; coeffs: (F, R_max, 3) int32
+    padded ROM; meta: (F, 5) int32 datapath rows.
+    """
+    codes = codes.astype(jnp.int32)
+    fids = jnp.broadcast_to(jnp.asarray(fids, jnp.int32), codes.shape)
+    if not use_kernel:
+        return library_eval_ref(codes, fids, coeffs, meta)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return _library_eval_padded(codes, fids, coeffs, meta, interpret=interpret)

@@ -5,6 +5,27 @@ import jax
 import jax.numpy as jnp
 
 
+def library_eval_ref(codes: jax.Array, fids: jax.Array, coeffs: jax.Array,
+                     meta: jax.Array) -> jax.Array:
+    """Gather-semantics oracle for the fused multi-function kernel.
+
+    coeffs: (F, R_max, 3) int32; meta: (F, 5) int32 rows of
+    (eval_bits, k, sq_trunc, lin_trunc, degree). Bit-identical to running
+    each element through ``interp_eval_ref`` with its own table.
+    """
+    m = meta[fids]  # (..., 5)
+    eb, k, sq, lin, deg = (m[..., i] for i in range(5))
+    one = jnp.int32(1)
+    r = jax.lax.shift_right_logical(codes, eb)
+    x = jnp.bitwise_and(codes, jax.lax.shift_left(one, eb) - 1)
+    sel = coeffs[fids, r]  # (..., 3)
+    xs = jax.lax.shift_left(jax.lax.shift_right_logical(x, sq), sq)
+    xl = jax.lax.shift_left(jax.lax.shift_right_logical(x, lin), lin)
+    xs = jnp.where(deg == 2, xs, 0)
+    acc = sel[..., 0] * xs * xs + sel[..., 1] * xl + sel[..., 2]
+    return jax.lax.shift_right_arithmetic(acc, k)
+
+
 def interp_eval_ref(codes: jax.Array, coeffs: jax.Array, *, eval_bits: int,
                     k: int, sq_trunc: int, lin_trunc: int, degree: int) -> jax.Array:
     r = jax.lax.shift_right_logical(codes, eval_bits)

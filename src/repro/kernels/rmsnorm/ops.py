@@ -16,7 +16,7 @@ def approx_rmsnorm_fused(x: jax.Array, gamma: jax.Array,
                          use_kernel: bool = True,
                          interpret: bool | None = None) -> jax.Array:
     design = design or get_table("rsqrt")
-    coeffs = jnp.asarray(design.packed_coeffs())
+    coeffs = design.device_coeffs(checked=True)
     meta = _meta(design)
     shape = x.shape
     d = shape[-1]

@@ -36,8 +36,8 @@ def approx_softmax_fused(x: jax.Array,
     """
     exp_design = exp_design or get_table("exp2neg")
     recip_design = recip_design or get_table("recip")
-    ec = jnp.asarray(exp_design.packed_coeffs())
-    rc = jnp.asarray(recip_design.packed_coeffs())
+    ec = exp_design.device_coeffs(checked=True)
+    rc = recip_design.device_coeffs(checked=True)
     em, rm = _meta(exp_design), _meta(recip_design)
     shape = x.shape
     d = shape[-1]

@@ -57,7 +57,7 @@ def _train_lowered(cfg: ModelConfig, shape: ShapeConfig, mesh, step_cfg: StepCon
 
 
 def _prefill_lowered(cfg: ModelConfig, shape: ShapeConfig, mesh):
-    numerics = get_numerics(cfg.numerics)
+    numerics = get_numerics(cfg)
     specs = input_specs(cfg, shape)
     p_shapes = tf.model_shapes(cfg)
     p_sh = shlib.param_specs(p_shapes, mesh)

@@ -2,6 +2,10 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch yi_6b --smoke \
         --requests 8 --slots 4 --prompt-len 16 --max-new 12
+
+With ``--numerics interp`` the engine serves from a compiled interpolation
+library; ``--library PATH`` loads a saved artifact (no exploration at all),
+``--save-library PATH`` persists the compiled artifact for the next launch.
 """
 from __future__ import annotations
 
@@ -11,6 +15,7 @@ import time
 import jax
 import numpy as np
 
+from repro.api import InterpLibrary
 from repro.configs.base import ARCH_IDS, get_config, get_smoke_config
 from repro.models import transformer as tf
 from repro.serve import ServeEngine
@@ -27,14 +32,27 @@ def main():
     ap.add_argument("--max-new", type=int, default=12)
     ap.add_argument("--cache-len", type=int, default=128)
     ap.add_argument("--numerics", choices=["exact", "interp"], default=None)
+    ap.add_argument("--library", default=None,
+                    help="serve from this saved InterpLibrary (json/npz base)")
+    ap.add_argument("--save-library", default=None,
+                    help="persist the engine's compiled library here")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if args.numerics:
         cfg = cfg.replace(numerics=args.numerics)
+    if args.library or args.save_library:
+        if args.numerics == "exact":
+            ap.error("--library/--save-library require interp numerics")
+        if cfg.numerics != "interp":
+            cfg = cfg.replace(numerics="interp")  # the flags imply it
+    library = InterpLibrary.load(args.library) if args.library else None
     params = tf.init_params(jax.random.key(args.seed), cfg)
-    eng = ServeEngine(cfg, params, slots=args.slots, cache_len=args.cache_len)
+    eng = ServeEngine(cfg, params, slots=args.slots, cache_len=args.cache_len,
+                      library=library)
+    if args.save_library and eng.library is not None:
+        print(f"saved library -> {eng.library.save(args.save_library)}")
     rng = np.random.default_rng(args.seed)
     t0 = time.perf_counter()
     for i in range(args.requests):

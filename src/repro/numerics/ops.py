@@ -10,6 +10,15 @@ models (so the multi-pod dry-run lowers identically on any backend).
 Float glue (max-subtract, exponent split, power-of-two scaling) is exact
 hardware-wise — only the table lookups carry approximation error, and those
 errors are *proved* bounds from table verification.
+
+Since ISSUE 3 the backends are *instances*: ``get_numerics(cfg)`` returns an
+object, and the interp backend can be bound to a compiled
+:class:`repro.api.InterpLibrary` so every lookup resolves against one packed
+artifact (no process-global registry on the hot path). Unbound instances
+fall back to the default Explorer session, preserving the legacy behavior.
+The float glue is shared between the per-table and library paths — the two
+differ only in who evaluates the integer table, which is exactly the part
+the golden tests pin bit-for-bit.
 """
 from __future__ import annotations
 
@@ -18,10 +27,10 @@ from functools import partial
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.core.table import TableDesign
 from repro.api import get_table
+from repro.core.funcspec import ACT_HI, ACT_LO, act_out_span
+from repro.core.table import TableDesign
 
 LOG2E = 1.4426950408889634
 
@@ -29,7 +38,7 @@ LOG2E = 1.4426950408889634
 def table_eval_int(codes: jax.Array, design: TableDesign) -> jax.Array:
     """Evaluate a table on int32 input codes (exact integer semantics)."""
     w = design.eval_bits
-    coeffs = jnp.asarray(np.stack([design.a, design.b, design.c], 1), jnp.int32)
+    coeffs = design.device_coeffs()
     r = jax.lax.shift_right_logical(codes, w)
     x = jnp.bitwise_and(codes, (1 << w) - 1)
     sel = coeffs[r]  # gather: (..., 3)
@@ -46,91 +55,112 @@ def _quantize(v: jax.Array, bits: int) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
-# exp(x) for x <= 0  (softmax exponential):  2^(x*log2e) = 2^(-n) * 2^(-f)
+# float glue, parameterized over the integer table evaluator. ``ev`` maps
+# int32 codes to the table's integer output; in_bits/out_bits come from the
+# design or the library metadata. Exactly one implementation of each glue
+# exists, so the per-table and library-bound paths cannot drift.
 # ---------------------------------------------------------------------------
 
-def approx_exp_neg(x: jax.Array, design: TableDesign | None = None) -> jax.Array:
-    """exp(x) for x <= 0 via the exp2neg table; exact power-of-two scaling."""
-    design = design or get_table("exp2neg")
+def _exp_neg_glue(x, in_bits: int, out_bits: int, ev) -> jax.Array:
+    """exp(x) for x <= 0:  2^(x*log2e) = 2^(-n) * tab(-f)."""
     t = jnp.maximum(-x, 0.0).astype(jnp.float32) * LOG2E
     t = jnp.minimum(t, 126.0)  # below fp32 denormal cliff anyway
     n = jnp.floor(t)
     f = t - n  # in [0, 1)
-    codes = _quantize(f, design.in_bits)
-    frac = table_eval_int(codes, design).astype(jnp.float32) * (2.0 ** -design.out_bits)
+    codes = _quantize(f, in_bits)
+    frac = ev(codes).astype(jnp.float32) * (2.0 ** -out_bits)
     return frac * jnp.exp2(-n)  # exp2 of an integer == exact exponent shift
 
 
-# ---------------------------------------------------------------------------
-# reciprocal of positive floats:  1/(m * 2^e) = recip(m) * 2^-e,  m in [1, 2)
-# ---------------------------------------------------------------------------
-
-def approx_recip_pos(x: jax.Array, design: TableDesign | None = None) -> jax.Array:
-    design = design or get_table("recip")
+def _recip_pos_glue(x, in_bits: int, ev) -> jax.Array:
+    """1/(m * 2^e) = recip(m) * 2^-e,  m in [1, 2)."""
     m, e = jnp.frexp(x.astype(jnp.float32))  # m in [0.5, 1)
     m2 = 2.0 * m  # [1, 2)
-    codes = _quantize(m2 - 1.0, design.in_bits)
+    codes = _quantize(m2 - 1.0, in_bits)
     # table target: V = 2^(2b+1)/(2^b + Z)  ==  (1/m2) * 2^(bits+1)
-    val = table_eval_int(codes, design).astype(jnp.float32) * (2.0 ** -(design.in_bits + 1))
+    val = ev(codes).astype(jnp.float32) * (2.0 ** -(in_bits + 1))
     return val * jnp.exp2(1.0 - e.astype(jnp.float32))  # 1/x = (1/m2) * 2^(1-e)
 
 
-# ---------------------------------------------------------------------------
-# rsqrt of positive floats:  x = v * 4^h, v in [1,4);  rsqrt = tab(v) * 2^-h
-# ---------------------------------------------------------------------------
-
-def approx_rsqrt_pos(x: jax.Array, design: TableDesign | None = None) -> jax.Array:
-    design = design or get_table("rsqrt")
+def _rsqrt_pos_glue(x, in_bits: int, out_bits: int, ev) -> jax.Array:
+    """x = v * 4^h, v in [1,4);  rsqrt = tab(v) * 2^-h."""
     m, e = jnp.frexp(x.astype(jnp.float32))  # x = m * 2^e, m in [0.5, 1)
     e = e.astype(jnp.int32)
     odd = jnp.bitwise_and(e, 1)  # e odd -> v = m*2 in [1,2); even -> v = m*4 in [2,4)
     v = jnp.where(odd == 1, 2.0 * m, 4.0 * m)
     h = jnp.where(odd == 1, (e - 1) // 2, (e - 2) // 2)
-    half = 1 << (design.in_bits - 1)
+    half = 1 << (in_bits - 1)
     codes = jnp.where(
         odd == 1,
-        _quantize(v - 1.0, design.in_bits - 1),
-        half + _quantize((v - 2.0) * 0.5, design.in_bits - 1),
+        _quantize(v - 1.0, in_bits - 1),
+        half + _quantize((v - 2.0) * 0.5, in_bits - 1),
     ).astype(jnp.int32)
-    codes = jnp.clip(codes, 0, (1 << design.in_bits) - 1)
-    val = table_eval_int(codes, design).astype(jnp.float32) * (2.0 ** -design.out_bits)
+    codes = jnp.clip(codes, 0, (1 << in_bits) - 1)
+    val = ev(codes).astype(jnp.float32) * (2.0 ** -out_bits)
     return val * jnp.exp2(-h.astype(jnp.float32))
 
 
+def _range_glue(x, in_bits: int, out_bits: int, span: float, ev,
+                lo: float = ACT_LO, hi: float = ACT_HI) -> jax.Array:
+    """Direct table over [lo, hi): quantize the window, rescale the output."""
+    xc = jnp.clip(x.astype(jnp.float32), lo, hi - 1e-6)
+    codes = _quantize((xc - lo) / (hi - lo), in_bits)
+    return ev(codes).astype(jnp.float32) * (span / (1 << out_bits))
+
+
+def _act_tails(kind: str, x, y, lo: float = ACT_LO, hi: float = ACT_HI):
+    """Outside the table window the activations are linear (right tail) or
+    saturate; sigmoid saturates to 1/0, the rest to x/0."""
+    top = 1.0 if kind == "sigmoid" else x
+    return jnp.where(x >= hi, top, jnp.where(x <= lo, 0.0, y)).astype(x.dtype)
+
+
 # ---------------------------------------------------------------------------
-# bounded-range activations (SiLU / sigmoid / softplus / GELU): direct tables
+# per-table entry points (design argument; default = the process session).
+# These remain the bit-exactness oracle for the library-fused path.
 # ---------------------------------------------------------------------------
 
-def _range_table_eval(x: jax.Array, design: TableDesign, lo: float, hi: float,
-                      out_scale: float) -> jax.Array:
-    xc = jnp.clip(x.astype(jnp.float32), lo, hi - 1e-6)
-    codes = _quantize((xc - lo) / (hi - lo), design.in_bits)
-    return table_eval_int(codes, design).astype(jnp.float32) * out_scale
+def _tab(kind: str, design: TableDesign | None) -> TableDesign:
+    return design if design is not None else get_table(kind)
+
+
+def approx_exp_neg(x: jax.Array, design: TableDesign | None = None) -> jax.Array:
+    """exp(x) for x <= 0 via the exp2neg table; exact power-of-two scaling."""
+    d = _tab("exp2neg", design)
+    return _exp_neg_glue(x, d.in_bits, d.out_bits, lambda c: table_eval_int(c, d))
+
+
+def approx_recip_pos(x: jax.Array, design: TableDesign | None = None) -> jax.Array:
+    d = _tab("recip", design)
+    return _recip_pos_glue(x, d.in_bits, lambda c: table_eval_int(c, d))
+
+
+def approx_rsqrt_pos(x: jax.Array, design: TableDesign | None = None) -> jax.Array:
+    d = _tab("rsqrt", design)
+    return _rsqrt_pos_glue(x, d.in_bits, d.out_bits, lambda c: table_eval_int(c, d))
+
+
+def _approx_act(kind: str, x: jax.Array, design: TableDesign | None) -> jax.Array:
+    d = _tab(kind, design)
+    y = _range_glue(x, d.in_bits, d.out_bits, act_out_span(kind),
+                    lambda c: table_eval_int(c, d))
+    return _act_tails(kind, x, y)
 
 
 def approx_silu(x: jax.Array, design: TableDesign | None = None) -> jax.Array:
-    design = design or get_table("silu")
-    y = _range_table_eval(x, design, -8.0, 8.0, 16.0 / (1 << design.out_bits))
-    # outside the table range silu(x) ~= x (right) or ~= 0 (left)
-    return jnp.where(x >= 8.0, x, jnp.where(x <= -8.0, 0.0, y)).astype(x.dtype)
+    return _approx_act("silu", x, design)
 
 
 def approx_sigmoid(x: jax.Array, design: TableDesign | None = None) -> jax.Array:
-    design = design or get_table("sigmoid")
-    y = _range_table_eval(x, design, -8.0, 8.0, 1.0 / (1 << design.out_bits))
-    return jnp.where(x >= 8.0, 1.0, jnp.where(x <= -8.0, 0.0, y)).astype(x.dtype)
+    return _approx_act("sigmoid", x, design)
 
 
 def approx_softplus(x: jax.Array, design: TableDesign | None = None) -> jax.Array:
-    design = design or get_table("softplus")
-    y = _range_table_eval(x, design, -8.0, 8.0, 16.0 / (1 << design.out_bits))
-    return jnp.where(x >= 8.0, x, jnp.where(x <= -8.0, 0.0, y)).astype(x.dtype)
+    return _approx_act("softplus", x, design)
 
 
 def approx_gelu(x: jax.Array, design: TableDesign | None = None) -> jax.Array:
-    design = design or get_table("gelu")
-    y = _range_table_eval(x, design, -8.0, 8.0, 16.0 / (1 << design.out_bits))
-    return jnp.where(x >= 8.0, x, jnp.where(x <= -8.0, 0.0, y)).astype(x.dtype)
+    return _approx_act("gelu", x, design)
 
 
 # ---------------------------------------------------------------------------
@@ -163,6 +193,7 @@ class ExactNumerics:
     """Plain XLA transcendentals (the no-technique baseline)."""
 
     name = "exact"
+    library = None
 
     softmax = staticmethod(jax.nn.softmax)
     silu = staticmethod(jax.nn.silu)
@@ -186,31 +217,102 @@ class ExactNumerics:
 
 
 class InterpNumerics:
-    """The paper's technique as the model's numerics backend."""
+    """The paper's technique as the model's numerics backend.
+
+    An instance optionally binds a compiled :class:`repro.api.InterpLibrary`
+    — then every table lookup evaluates through the library's packed ROM
+    (one artifact, no registry, fused Pallas kernel on TPU) and the instance
+    never calls the default Explorer. Unbound (``library=None``, the legacy
+    behavior and the ``get_numerics("interp")`` default) each op resolves
+    its table lazily through ``repro.api.get_table``.
+    """
 
     name = "interp"
 
-    softmax = staticmethod(approx_softmax)
-    silu = staticmethod(approx_silu)
-    gelu = staticmethod(approx_gelu)
-    sigmoid = staticmethod(approx_sigmoid)
-    softplus = staticmethod(approx_softplus)
-    exp_neg = staticmethod(approx_exp_neg)
-    rmsnorm = staticmethod(approx_rmsnorm)
-    recip_pos = staticmethod(approx_recip_pos)
+    def __init__(self, library=None):
+        self.library = library
+
+    def _ev(self, kind: str):
+        """(in_bits, out_bits, int-evaluator) for ``kind``."""
+        lib = self.library
+        if lib is not None:
+            m = lib.meta(kind)  # KeyError = artifact missing a used kind
+            return m.in_bits, m.out_bits, lambda c: lib.eval_int(c, kind)
+        d = get_table(kind)
+        return d.in_bits, d.out_bits, lambda c: table_eval_int(c, d)
+
+    def exp_neg(self, x):
+        ib, ob, ev = self._ev("exp2neg")
+        return _exp_neg_glue(x, ib, ob, ev)
+
+    def recip_pos(self, x):
+        ib, _, ev = self._ev("recip")
+        return _recip_pos_glue(x, ib, ev)
+
+    def rsqrt_pos(self, x):
+        ib, ob, ev = self._ev("rsqrt")
+        return _rsqrt_pos_glue(x, ib, ob, ev)
+
+    def _act(self, kind: str, x):
+        lib = self.library
+        if lib is not None:
+            # the artifact records the window the table was generated over —
+            # honor it (a custom-window library must not quantize over the
+            # defaults)
+            m = lib.meta(kind)
+            y = _range_glue(x, m.in_bits, m.out_bits, m.act_span,
+                            lambda c: lib.eval_int(c, kind),
+                            m.act_lo, m.act_hi)
+            return _act_tails(kind, x, y, m.act_lo, m.act_hi)
+        ib, ob, ev = self._ev(kind)
+        return _act_tails(kind, x, _range_glue(x, ib, ob, act_out_span(kind), ev))
+
+    def silu(self, x):
+        return self._act("silu", x)
+
+    def sigmoid(self, x):
+        return self._act("sigmoid", x)
+
+    def softplus(self, x):
+        return self._act("softplus", x)
+
+    def gelu(self, x):
+        return self._act("gelu", x)
+
+    def softmax(self, x, axis: int = -1):
+        xf = x.astype(jnp.float32)
+        m = jax.lax.stop_gradient(jnp.max(xf, axis=axis, keepdims=True))
+        e = self.exp_neg(xf - m)
+        s = jnp.sum(e, axis=axis, keepdims=True)
+        return (e * self.recip_pos(s)).astype(x.dtype)
+
+    def rmsnorm(self, x, gamma, eps: float = 1e-6):
+        xf = x.astype(jnp.float32)
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True) + eps
+        return (xf * self.rsqrt_pos(var) * gamma).astype(x.dtype)
 
 
 BACKENDS = {"exact": ExactNumerics, "interp": InterpNumerics}
 
 
-def get_numerics(name: str):
-    return BACKENDS[name]
+def get_numerics(cfg_or_name="exact", library=None):
+    """Resolve a numerics backend *instance* for a model config (or a plain
+    backend name). ``library`` binds the interp backend to a compiled
+    :class:`repro.api.InterpLibrary`; the exact backend gets the trivial
+    instance (no tables to bind)."""
+    name = getattr(cfg_or_name, "numerics", cfg_or_name)
+    if name == "exact":
+        return ExactNumerics()
+    if name == "interp":
+        return InterpNumerics(library)
+    raise KeyError(f"unknown numerics backend {name!r}")
 
 
-def softmax_ulp_bound(exp_design: TableDesign | None = None,
-                      recip_design: TableDesign | None = None) -> float:
+def softmax_ulp_bound(exp_design=None, recip_design=None) -> float:
     """Certified relative error bound of approx_softmax terms, from the
-    tables' verified ULP guarantees (used by tests and EXPERIMENTS.md)."""
+    tables' verified ULP guarantees (used by tests and EXPERIMENTS.md).
+    Accepts ``TableDesign`` or library ``FuncMeta`` (only widths are read);
+    ``None`` resolves through the default session."""
     exp_design = exp_design or get_table("exp2neg")
     recip_design = recip_design or get_table("recip")
     # quantization of f adds 1/2 ulp of 2^-in_bits in the exponent argument

@@ -9,9 +9,18 @@ slots, each slot holding one request's cache rows; finished requests free
 their slot and a queued request is prefilled into it. Slot state lives in
 the batched cache pytree — insertion is a per-slot dynamic_update on the
 batch axis.
+
+Interp numerics serve from a compiled :class:`repro.api.InterpLibrary`: the
+engine compiles the full library manifest at construction (or accepts a
+preloaded artifact, e.g. ``InterpLibrary.load(...)`` — then serving makes
+zero exploration calls) and threads it through the jitted prefill/decode
+steps as an explicit pytree argument, alongside params and caches. That is
+what makes the deployed tables shardable (replicated leaf), donatable and
+checkpointable instead of ambient global state.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 from typing import Callable
 
@@ -19,25 +28,27 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import DEFAULTS, default_explorer
+from repro.api import InterpLibrary, default_explorer
 from repro.models import transformer as tf
 from repro.numerics.ops import get_numerics
 
 
 def make_serve_step(cfg) -> Callable:
-    """decode_step(params, token (B,1), pos (), caches) -> (logits, caches)."""
-    numerics = get_numerics(cfg.numerics)
+    """decode_step(params, token (B,1), pos (), caches, cross=None,
+    library=None) -> (logits, caches). ``library`` is a jit-traced pytree:
+    swapping artifacts does not retrace, and the leaf obeys the caller's
+    sharding/donation just like params."""
 
-    def step(params, token, pos, caches, cross=None):
+    def step(params, token, pos, caches, cross=None, library=None):
+        numerics = get_numerics(cfg, library)
         return tf.decode_step(params, token, pos, caches, cfg, numerics, cross=cross)
 
     return step
 
 
 def make_prefill(cfg, cache_len: int) -> Callable:
-    numerics = get_numerics(cfg.numerics)
-
-    def pf(params, tokens, frontend_emb=None, enc_frames=None):
+    def pf(params, tokens, frontend_emb=None, enc_frames=None, library=None):
+        numerics = get_numerics(cfg, library)
         return tf.prefill(params, tokens, cfg, numerics, cache_len,
                           frontend_emb=frontend_emb, enc_frames=enc_frames)
 
@@ -54,35 +65,36 @@ class Request:
 
 
 class ServeEngine:
-    """Continuous batching over a fixed slot pool (greedy decoding)."""
+    """Continuous batching over a fixed slot pool (greedy decoding).
 
-    def __init__(self, cfg, params, slots: int, cache_len: int):
+    ``library``: a preloaded :class:`InterpLibrary` for interp numerics;
+    ``None`` compiles the default manifest through the process session at
+    construction (generation, if the disk cache is cold, happens here — not
+    inside the first jitted step). Exact-numerics engines carry no library.
+    """
+
+    def __init__(self, cfg, params, slots: int, cache_len: int,
+                 library: InterpLibrary | None = None):
         self.cfg, self.params = cfg, params
         self.slots, self.cache_len = slots, cache_len
-        numerics = get_numerics(cfg.numerics)
-        self.numerics = numerics
-        if cfg.numerics == "interp":
-            # Warm every table the decode path can touch, so generation (if
-            # not disk-cached yet) happens at engine construction rather than
-            # inside the first jitted step. The jitted numerics resolve
-            # tables through the process default session, so warm-up must use
-            # the same one; to serve from a custom session (cache dir, worker
+        if cfg.numerics != "interp":
+            library = None
+        elif library is None:
+            # The library manifest replaces the hand-maintained warm-up kind
+            # set: Explorer.compile() packs every table the interp numerics
+            # can touch (activations hardcoded by MoE/SSM layers and the
+            # vision-stub projector included), so a kind can't be forgotten
+            # here again. To serve from a custom session (cache dir, worker
             # pool), install it with repro.api.set_default_explorer() before
-            # constructing the engine.
-            ex = default_explorer()
-            # silu/gelu/softplus are hardcoded by MoE/SSM layers and the
-            # vision-stub projector regardless of cfg.act, so always warm
-            # them too (softplus: the SSM dt activation in decode).
-            kinds = {"exp2neg", "recip", "rsqrt", "silu", "gelu", "softplus"}
-            if getattr(cfg, "act", None) in DEFAULTS:
-                kinds.add(cfg.act)
-            for kind in sorted(kinds):
-                ex.get_table(kind)
+            # constructing the engine — or pass a compiled/loaded library.
+            library = default_explorer().compile()
+        self.library = library
+        self.numerics = get_numerics(cfg, library)
         self.caches = tf.init_cache(cfg, slots, cache_len)
         self.pos = np.zeros(slots, np.int32)  # next position per slot
         self.cur = np.full(slots, -1, np.int32)  # current token per slot
         self.req: list[Request | None] = [None] * slots
-        self.queue: list[Request] = []
+        self.queue: collections.deque[Request] = collections.deque()
         self.finished: list[Request] = []
 
         self._prefill1 = jax.jit(make_prefill(cfg, cache_len))
@@ -94,8 +106,9 @@ class ServeEngine:
     def _admit(self):
         for s in range(self.slots):
             if self.req[s] is None and self.queue:
-                r = self.queue.pop(0)
-                logits, cache1, _ = self._prefill1(self.params, r.prompt[None, :])
+                r = self.queue.popleft()
+                logits, cache1, _ = self._prefill1(self.params, r.prompt[None, :],
+                                                   library=self.library)
                 # splice this request's cache rows into slot s of the pool
                 self.caches = jax.tree.map(
                     lambda pool, one: jax.lax.dynamic_update_slice_in_dim(
@@ -125,7 +138,8 @@ class ServeEngine:
         pos = int(self.pos.max())
         toks = jnp.asarray(np.maximum(self.cur, 0)[:, None], jnp.int32)
         logits, self.caches = self._decode(self.params, toks,
-                                           jnp.asarray(pos, jnp.int32), self.caches)
+                                           jnp.asarray(pos, jnp.int32),
+                                           self.caches, library=self.library)
         nxt = np.asarray(jnp.argmax(logits[:, 0], -1), np.int32)
         for s, r in enumerate(self.req):
             if r is not None:

@@ -66,9 +66,13 @@ def _split_micro(batch: dict, n: int) -> dict:
     return jax.tree.map(r, batch)
 
 
-def make_train_step(cfg, step_cfg: StepConfig) -> Callable:
-    """Returns step(state, batch, step_idx) -> (state, metrics)."""
-    numerics = get_numerics(cfg.numerics)
+def make_train_step(cfg, step_cfg: StepConfig, library=None) -> Callable:
+    """Returns step(state, batch, step_idx) -> (state, metrics).
+
+    ``library``: optional compiled :class:`repro.api.InterpLibrary` binding
+    the interp numerics to one packed artifact (closure leaf — jit folds the
+    replicated coefficient ROM into the step like any other constant)."""
+    numerics = get_numerics(cfg, library)
     pdt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.param_dtype]
 
     def loss(p, mb):
@@ -112,8 +116,8 @@ def make_train_step(cfg, step_cfg: StepConfig) -> Callable:
     return step
 
 
-def make_eval_step(cfg) -> Callable:
-    numerics = get_numerics(cfg.numerics)
+def make_eval_step(cfg, library=None) -> Callable:
+    numerics = get_numerics(cfg, library)
 
     def eval_step(params, batch):
         l, m = tf.loss_fn(params, batch, cfg, numerics)

@@ -1,0 +1,257 @@
+"""Compiled InterpLibrary artifact: bit-exactness golden tests, pytree
+round-trips (jit / vmap / shard / checkpoint / npz), and serving from a
+preloaded library with zero exploration calls."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (DEFAULT_LIBRARY_KINDS, Explorer, InterpLibrary,
+                       default_explorer, load_library)
+from repro.numerics.ops import (InterpNumerics, approx_rmsnorm,
+                                approx_softmax, get_numerics, table_eval_int)
+
+
+@pytest.fixture(scope="module")
+def lib() -> InterpLibrary:
+    # tables come through the session persistence layer (disk-cached after
+    # the first generation), so compile() is a pure pack step
+    return default_explorer().compile()
+
+
+# ---------------------------------------------------------------------------
+# golden bit-exactness: fused library evaluation vs per-table oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", DEFAULT_LIBRARY_KINDS)
+def test_library_eval_bit_identical(lib, kind):
+    m = lib.meta(kind)
+    codes = jnp.arange(1 << m.in_bits, dtype=jnp.int32)
+    ref = np.asarray(table_eval_int(codes, default_explorer().get_table(kind)))
+    # static-kind slice path (the off-TPU runtime path)
+    np.testing.assert_array_equal(np.asarray(lib.eval_int(codes, kind)), ref)
+    # fused gather semantics (jnp oracle of the multi-function kernel)
+    fused = lib.eval_fused(codes, lib.func_id(kind), use_kernel=False)
+    np.testing.assert_array_equal(np.asarray(fused), ref)
+
+
+@pytest.mark.parametrize("kind", DEFAULT_LIBRARY_KINDS)
+def test_library_kernel_bit_identical(lib, kind):
+    """The Pallas kernel (interpret mode off-TPU) matches the oracle."""
+    m = lib.meta(kind)
+    codes = jnp.arange(1 << m.in_bits, dtype=jnp.int32)
+    ref = np.asarray(table_eval_int(codes, default_explorer().get_table(kind)))
+    out = lib.eval_fused(codes, lib.func_id(kind), use_kernel=True,
+                         interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), ref)
+
+
+def test_mixed_function_fused_eval(lib):
+    """One fused call evaluating every function at once, element-wise."""
+    rng = np.random.default_rng(0)
+    fids = rng.integers(0, len(lib), 4096).astype(np.int32)
+    in_bits = np.array([m.in_bits for m in lib.metas])
+    codes = (rng.integers(0, 1 << 30, 4096) % (1 << in_bits[fids])).astype(np.int32)
+    out = np.asarray(lib.eval_fused(jnp.asarray(codes), jnp.asarray(fids),
+                                    use_kernel=False))
+    kout = np.asarray(lib.eval_fused(jnp.asarray(codes), jnp.asarray(fids),
+                                     use_kernel=True, interpret=True))
+    for f, kind in enumerate(lib.kinds):
+        mask = fids == f
+        ref = np.asarray(table_eval_int(jnp.asarray(codes[mask]),
+                                        default_explorer().get_table(kind)))
+        np.testing.assert_array_equal(out[mask], ref)
+        np.testing.assert_array_equal(kout[mask], ref)
+
+
+def test_library_numerics_match_per_table_glue(lib):
+    """Library-bound numerics == the per-table reference functions, bit for
+    bit (shared float glue + bit-identical integer eval)."""
+    num = get_numerics("interp", lib)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(0, 3, (4, 64)).astype(np.float32))
+    np.testing.assert_array_equal(np.asarray(num.softmax(x)),
+                                  np.asarray(approx_softmax(x)))
+    gamma = jnp.asarray(rng.normal(1, 0.1, 64).astype(np.float32))
+    np.testing.assert_array_equal(np.asarray(num.rmsnorm(x, gamma)),
+                                  np.asarray(approx_rmsnorm(x, gamma)))
+    from repro.numerics.ops import (approx_gelu, approx_sigmoid, approx_silu,
+                                    approx_softplus)
+    for fn, ref in [(num.silu, approx_silu), (num.gelu, approx_gelu),
+                    (num.sigmoid, approx_sigmoid), (num.softplus, approx_softplus)]:
+        np.testing.assert_array_equal(np.asarray(fn(x)), np.asarray(ref(x)))
+
+
+# ---------------------------------------------------------------------------
+# pytree round-trips
+# ---------------------------------------------------------------------------
+
+def test_library_is_registered_pytree(lib):
+    leaves, treedef = jax.tree.flatten(lib)
+    assert len(leaves) == 1 and leaves[0] is lib.coeffs
+    back = jax.tree.unflatten(treedef, leaves)
+    assert isinstance(back, InterpLibrary)
+    assert back.kinds == lib.kinds and back.metas == lib.metas
+    # keyed flatten gives the stable leaf name checkpointing relies on
+    keyed, _ = jax.tree_util.tree_flatten_with_path(lib)
+    assert "coeffs" in "".join(str(k) for k in keyed[0][0])
+
+
+def test_jit_closure_vs_argument(lib):
+    codes = jnp.arange(1 << lib.meta("silu").in_bits, dtype=jnp.int32)
+
+    as_closure = jax.jit(lambda c: lib.eval_int(c, "silu"))
+    as_argument = jax.jit(lambda l, c: l.eval_int(c, "silu"))
+    np.testing.assert_array_equal(np.asarray(as_closure(codes)),
+                                  np.asarray(as_argument(lib, codes)))
+    # static metadata is jit-stable: same treedef -> no retrace
+    n0 = as_argument._cache_size()
+    as_argument(jax.tree.unflatten(jax.tree.structure(lib),
+                                   [lib.coeffs]), codes)
+    assert as_argument._cache_size() == n0
+
+
+def test_vmap_over_codes(lib):
+    codes = jnp.arange(1024, dtype=jnp.int32).reshape(8, 128)
+    out = jax.vmap(lambda c: lib.eval_int(c, "recip"))(codes)
+    ref = lib.eval_int(codes.reshape(-1), "recip").reshape(8, 128)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_replicated_sharding(lib):
+    mesh = jax.sharding.Mesh(np.array(jax.devices()), ("d",))
+    sharding = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+    placed = jax.device_put(lib, jax.tree.map(lambda _: sharding, lib))
+    assert isinstance(placed, InterpLibrary)
+    codes = jnp.arange(256, dtype=jnp.int32)
+    np.testing.assert_array_equal(np.asarray(placed.eval_int(codes, "recip")),
+                                  np.asarray(lib.eval_int(codes, "recip")))
+
+
+def test_checkpoint_round_trip(lib, tmp_path):
+    """The library rides inside a state pytree through repro.checkpoint."""
+    from repro import checkpoint as ckpt
+
+    state = {"weights": jnp.ones((4, 4), jnp.float32), "library": lib}
+    ckpt.save(tmp_path, 7, state)
+    step, restored, _ = ckpt.CheckpointManager(str(tmp_path)).restore_latest(state)
+    assert step == 7
+    assert isinstance(restored["library"], InterpLibrary)
+    assert restored["library"].metas == lib.metas
+    np.testing.assert_array_equal(np.asarray(restored["library"].coeffs),
+                                  np.asarray(lib.coeffs))
+
+
+def test_save_load_round_trip(lib, tmp_path):
+    path = lib.save(tmp_path / "lib")
+    assert path.exists() and path.with_suffix(".npz").exists()
+    back = load_library(path)
+    assert back.metas == lib.metas
+    np.testing.assert_array_equal(np.asarray(back.coeffs),
+                                  np.asarray(lib.coeffs))
+    codes = jnp.arange(1 << back.meta("gelu").in_bits, dtype=jnp.int32)
+    np.testing.assert_array_equal(np.asarray(back.eval_int(codes, "gelu")),
+                                  np.asarray(lib.eval_int(codes, "gelu")))
+
+
+def test_load_detects_corrupt_rom(lib, tmp_path):
+    path = lib.save(tmp_path / "lib")
+    coeffs = np.asarray(lib.coeffs).copy()
+    coeffs[0, 0, 2] += 1
+    np.savez(tmp_path / "lib.npz", coeffs=coeffs)
+    with pytest.raises(ValueError, match="corrupt"):
+        load_library(path)
+
+
+def test_compile_subset_and_overrides(tmp_path):
+    ex = Explorer()
+    lib = ex.compile([("recip", {"bits": 8, "lookup_bits": 4}),
+                      "exp2neg"])
+    assert lib.kinds == ("recip", "exp2neg")
+    assert lib.meta("recip").in_bits == 8
+    assert lib.r_max == 64  # exp2neg's default R=6 dominates the padding
+    codes = jnp.arange(1 << 8, dtype=jnp.int32)
+    ref = table_eval_int(codes, ex.get_table("recip", bits=8, lookup_bits=4))
+    np.testing.assert_array_equal(np.asarray(lib.eval_int(codes, "recip")),
+                                  np.asarray(ref))
+
+
+def test_duplicate_kinds_rejected():
+    with pytest.raises(ValueError, match="duplicate"):
+        default_explorer().compile(["recip", ("recip", {"bits": 8})])
+
+
+def test_custom_activation_window_honored():
+    """A library compiled over a non-default activation window records it in
+    the metadata and the bound glue quantizes over that window — not the
+    defaults (which would read the wrong table rows)."""
+    from repro.numerics.ops import _act_tails, _range_glue, table_eval_int
+
+    lo, hi = -4.0, 4.0
+    ex = default_explorer()
+    lib2 = ex.compile([("silu", {"lo": lo, "hi": hi})])
+    m = lib2.meta("silu")
+    assert (m.act_lo, m.act_hi, m.act_span) == (lo, hi, hi - lo)
+    num = get_numerics("interp", lib2)
+    x = jnp.linspace(-6.0, 6.0, 97)
+    d = ex.get_table("silu", lo=lo, hi=hi)
+    want = _act_tails("silu", x,
+                      _range_glue(x, d.in_bits, d.out_bits, hi - lo,
+                                  lambda c: table_eval_int(c, d), lo, hi),
+                      lo, hi)
+    np.testing.assert_array_equal(np.asarray(num.silu(x)), np.asarray(want))
+
+
+def test_missing_kind_raises(lib):
+    with pytest.raises(KeyError, match="log2"):
+        lib.func_id("log2")
+    num = InterpNumerics(default_explorer().compile(["recip"]))
+    with pytest.raises(KeyError):
+        num.silu(jnp.zeros((4,)))
+
+
+# ---------------------------------------------------------------------------
+# serving from a preloaded artifact: zero exploration calls
+# ---------------------------------------------------------------------------
+
+def test_serve_engine_from_preloaded_library(lib, tmp_path, monkeypatch):
+    import repro.api.explorer as explorer_mod
+    import repro.serve.engine as engine_mod
+    from repro.configs.base import get_smoke_config
+    from repro.models import transformer as tf
+    from repro.serve.engine import Request, ServeEngine
+
+    loaded = load_library(lib.save(tmp_path / "served"))
+
+    def _poisoned(*a, **kw):
+        raise AssertionError("exploration session touched while serving "
+                             "from a preloaded library")
+
+    monkeypatch.setattr(explorer_mod, "default_explorer", _poisoned)
+    monkeypatch.setattr(engine_mod, "default_explorer", _poisoned)
+    monkeypatch.setattr(explorer_mod.Explorer, "get_table", _poisoned)
+    monkeypatch.setattr(explorer_mod.Explorer, "compile", _poisoned)
+
+    cfg = get_smoke_config("yi_6b").replace(numerics="interp")
+    params = tf.init_params(jax.random.key(0), cfg)
+    eng = ServeEngine(cfg, params, slots=2, cache_len=48, library=loaded)
+    assert isinstance(eng.queue, __import__("collections").deque)
+    rng = np.random.default_rng(3)
+    for i in range(3):
+        eng.submit(Request(i, rng.integers(0, cfg.vocab_size, 8).astype(np.int32),
+                           max_new=4))
+    done = eng.run()
+    assert len(done) == 3
+    assert all(len(r.out) >= 4 for r in done)
+
+
+def test_funcmeta_frozen_and_hashable(lib):
+    m = lib.meta("silu")
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        m.k = 0
+    assert hash(lib.metas) == hash(tuple(lib.metas))
+    assert m.eval_bits == m.in_bits - m.lookup_bits
