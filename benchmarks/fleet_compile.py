@@ -1,0 +1,86 @@
+"""Fleet engine vs serial per-kind manifest compile (ISSUE 4 tentpole).
+
+Two measurements:
+
+* ``fleet_compile`` — ``Explorer.compile()`` over the full
+  :data:`DEFAULT_LIBRARY_KINDS` manifest at the registry's 12-bit specs,
+  cold table cache every run: the serial per-kind path (``fleet=False``,
+  one ``get_table`` ladder per kind) vs the fleet engine (every probe's
+  §II front half as one stacked array program + the decision procedures in
+  lockstep). Both produce bit-identical libraries (asserted).
+* ``fleet_min_regions`` — the manifest min-R query: per-spec
+  ``min_regions`` vs the lockstep ``min_regions_many`` that answers each
+  round's (spec, R) frontier with one stacked feasibility program.
+
+These rows feed artifacts/bench/BENCH_4.json (see benchmarks/run.py).
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import QUICK, emit
+from repro.api import ExploreConfig, Explorer
+from repro.api.config import DEFAULTS, spec_for
+from repro.api.library import DEFAULT_LIBRARY_KINDS
+
+
+def _compile_time(fleet: bool, repeat: int) -> tuple[float, object]:
+    best = float("inf")
+    lib = None
+    for _ in range(repeat):
+        with Explorer(ExploreConfig(cache_dir=tempfile.mkdtemp(),
+                                    fleet=fleet)) as ex:
+            t0 = time.perf_counter()
+            lib = ex.compile()
+            best = min(best, time.perf_counter() - t0)
+    return best, lib
+
+
+def run() -> list[dict]:
+    repeat = 2 if QUICK else 4
+    t_fleet, lib_fleet = _compile_time(True, repeat)
+    t_serial, lib_serial = _compile_time(False, repeat)
+    # the golden contract the speedup is NOT allowed to buy anything with
+    assert lib_fleet.metas == lib_serial.metas
+    np.testing.assert_array_equal(np.asarray(lib_fleet.coeffs),
+                                  np.asarray(lib_serial.coeffs))
+    rows = [
+        {"path": "serial per-kind (fleet off)", "kinds": len(DEFAULT_LIBRARY_KINDS),
+         "bits": 12, "time_s": round(t_serial, 3), "speedup": 1.0},
+        {"path": "fleet (stacked probes + lockstep decisions)",
+         "kinds": len(DEFAULT_LIBRARY_KINDS), "bits": 12,
+         "time_s": round(t_fleet, 3),
+         "speedup": round(t_serial / t_fleet, 2) if t_fleet else float("inf"),
+         "bit_identical": True},
+    ]
+    emit("fleet_compile", rows)
+
+    bits = 10 if QUICK else 12
+    specs = [spec_for(k, bits) for k in DEFAULTS]
+    t_many = t_one = float("inf")
+    for _ in range(repeat):
+        with Explorer() as ex:
+            t0 = time.perf_counter()
+            many = ex.min_regions_many(specs)
+            t_many = min(t_many, time.perf_counter() - t0)
+        with Explorer(ExploreConfig(fleet=False)) as ex:
+            t0 = time.perf_counter()
+            serial = [ex.min_regions(s) for s in specs]
+            t_one = min(t_one, time.perf_counter() - t0)
+    assert many == serial, (many, serial)
+    rows2 = [
+        {"path": "serial per-spec min_regions", "specs": len(specs),
+         "bits": bits, "time_s": round(t_one, 3), "speedup": 1.0},
+        {"path": "fleet min_regions_many (lockstep)", "specs": len(specs),
+         "bits": bits, "time_s": round(t_many, 3),
+         "speedup": round(t_one / t_many, 2) if t_many else float("inf")},
+    ]
+    emit("fleet_min_regions", rows2)
+    return rows + rows2
+
+
+if __name__ == "__main__":
+    run()

@@ -9,15 +9,16 @@
 | claim21           | SII-A Claim II.1 speedup + engines     |
 | scaling           | SII-A O(R^-3) + exponential-in-bits    |
 | batched_engine    | batched vs pooled generation, min-R    |
+| fleet_compile     | fleet vs serial manifest compile/min-R |
 | fig3_lub_sweep    | Figs 2-3 area-delay vs LUT height      |
 | kernels_bench     | TPU adaptation: kernels + table accuracy |
 | serve_path        | fused-library vs per-table decode numerics |
 | roofline_report   | SRoofline table from the dry-run sweep |
 
 After a run that produced them, the claim21 + batched_engine rows are
-folded into ``artifacts/bench/BENCH_2.json`` and the serve_path rows into
-``BENCH_3.json`` — the per-PR perf snapshots tracked by the CI bench-smoke
-job.
+folded into ``artifacts/bench/BENCH_2.json``, the serve_path rows into
+``BENCH_3.json``, and the fleet_compile rows into ``BENCH_4.json`` — the
+per-PR perf snapshots tracked by the CI bench-smoke job.
 """
 from __future__ import annotations
 
@@ -38,6 +39,9 @@ _SNAPSHOTS = {
     },
     "BENCH_3.json": {
         "serve_path": ("serve_path_decode", "serve_path_ensemble"),
+    },
+    "BENCH_4.json": {
+        "fleet_compile": ("fleet_compile", "fleet_min_regions"),
     },
 }
 
@@ -75,11 +79,12 @@ def main() -> None:
         os.environ["BENCH_QUICK"] = "1"
 
     from benchmarks import (batched_engine, claim21, fig3_lub_sweep,
-                            kernels_bench, roofline_report, scaling,
-                            serve_path, table1, table2)
+                            fleet_compile, kernels_bench, roofline_report,
+                            scaling, serve_path, table1, table2)
     mods = {
         "table1": table1, "table2": table2, "claim21": claim21,
         "scaling": scaling, "batched_engine": batched_engine,
+        "fleet_compile": fleet_compile,
         "fig3_lub_sweep": fig3_lub_sweep, "kernels_bench": kernels_bench,
         "serve_path": serve_path, "roofline_report": roofline_report,
     }

@@ -34,6 +34,12 @@ ENGINES = ("batched", "pallas", "pooled")
 # Envelope-cache LRU cap (entries, one per (spec, R, engine)); None = unbounded.
 DEFAULT_ENVELOPE_CACHE = 64
 
+# Fleet engine default: stack every (kind, spec, R) probe a manifest needs
+# into one array program (core.fleet) instead of F x R serial probes. Only
+# the batched engine routes through it (the fleet is bit-identical to that
+# engine; pooled/pallas sessions keep their per-spec dispatch).
+DEFAULT_FLEET = True
+
 # kind -> (in_bits, spec kwargs, lookup_bits). Widths are chosen so every
 # coefficient fits int32 and the one-hot LUT contraction is exact in fp32.
 DEFAULTS: dict[str, tuple[int, dict, int]] = {
@@ -82,6 +88,17 @@ class ExploreConfig:
         only exercised by the ``pooled`` engine — the batched engines carry
         their own (value-identical) searches.
       engine: region-engine backend, one of :data:`ENGINES`.
+      fleet: route ``compile()`` / ``min_regions_many`` / sweep envelope
+        priming through the fleet engine (``core.fleet``): every (kind,
+        spec, R) probe of a manifest stacked into one array program,
+        bit-identical to the serial batched path (which remains the
+        equivalence oracle). Ignored unless ``engine == "batched"``.
+      mesh: device count to shard the fleet's §II front half over
+        (``kernels/dspace`` ``shard_map`` grid over (probe, region); capped
+        at the local device count). ``None``/1 keeps the exact single-host
+        numpy program; > 1 switches that front half to float32 device
+        arithmetic — same contract as ``engine="pallas"``: a marginal
+        feasibility verdict can cost a retry, never an unsound artifact.
       envelope_cache: LRU cap on cached (spec, R) RegionSpace lists; None
         disables eviction (evictions are counted in ``envelope_stats``).
       k_max: precision-slack search cap of decision step 1; None defers to
@@ -102,6 +119,8 @@ class ExploreConfig:
     r_hi: int | None = None
     impl: str = DEFAULT_IMPL
     engine: str = DEFAULT_ENGINE
+    fleet: bool = DEFAULT_FLEET
+    mesh: int | None = None
     envelope_cache: int | None = DEFAULT_ENVELOPE_CACHE
     k_max: int | None = None
     workers: int | None = None

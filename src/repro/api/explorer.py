@@ -42,12 +42,80 @@ from repro.api.library import DEFAULT_LIBRARY_KINDS, InterpLibrary
 from repro.core.funcspec import ACT_HI, ACT_LO
 from repro.api.result import DesignSpaceResult, ExploreEntry
 from repro.api.target import Target, get_target
-from repro.core import batched
+from repro.core import batched, fleet
 from repro.core.decision import _run_decision_pooled
 from repro.core.designspace import RegionSpace, compute_spaces
 from repro.core.funcspec import FunctionSpec
 from repro.core.pmap import RegionPool
 from repro.core.table import TableDesign
+
+
+class _MinRSearch:
+    """State machine of the min-R search (exponential descent from the cheap
+    end + binary bracket), factored out of :meth:`Explorer.min_regions` so
+    the fleet path can lockstep many searches: each round collects one
+    pending (spec, R) probe per live search and answers the whole frontier
+    as one stacked array program. Probe sequences — and therefore results
+    and cache traffic — are identical to the serial search.
+    """
+
+    _WORK_CAP = 1 << 26  # element-work floor where stepping turns costly
+
+    def __init__(self, spec: FunctionSpec, r_max: int | None = None):
+        self.spec = spec
+        # R > in_bits doesn't exist; a larger r_max must behave like
+        # "unbounded", not crash
+        self.r_max = spec.in_bits if r_max is None else min(r_max, spec.in_bits)
+        self.result: int | None = None
+        self.done = self.r_max < 0
+        self.hi = self.r_max  # known feasible once init passes
+        self.lo = -1  # known infeasible
+        self.step = 1
+        self.phase = "init"
+
+    def _probe_work(self, r: int) -> int:
+        return 4 ** self.spec.in_bits >> max(r, 0)  # ~ 2^R regions x N^2
+
+    def next_probe(self) -> int | None:
+        if self.done:
+            return None
+        if self.phase == "init":
+            return self.r_max
+        if self.phase == "gallop":
+            return max(self.hi - self.step, self.lo + 1)
+        return (self.lo + self.hi) // 2  # binary
+
+    def _settle(self) -> None:
+        if self.hi - self.lo <= 1:
+            self.done = True
+            self.result = self.hi
+
+    def feed(self, ok: bool) -> None:
+        """Consume the verdict for the probe ``next_probe()`` returned."""
+        if self.phase == "init":
+            if not ok:  # monotone: nothing below r_max can work either
+                self.done = True
+                return
+            self.phase = "gallop"
+            self._settle()
+            return
+        if self.phase == "gallop":
+            if ok:
+                self.hi = max(self.hi - self.step, self.lo + 1)
+                nxt = max(self.hi - 2 * self.step, self.lo + 1)
+                self.step = (2 * self.step
+                             if self._probe_work(nxt) <= self._WORK_CAP else 1)
+            else:
+                self.lo = max(self.hi - self.step, self.lo + 1)
+                self.phase = "binary"
+            self._settle()
+            return
+        mid = (self.lo + self.hi) // 2
+        if ok:
+            self.hi = mid
+        else:
+            self.lo = mid
+        self._settle()
 
 
 class Explorer:
@@ -74,7 +142,11 @@ class Explorer:
         self._space_computes = 0
         self._space_hits = 0
         self._space_evictions = 0
-        self._feasible: dict[tuple, bool] = {}
+        self._feasible: collections.OrderedDict[tuple, bool] = \
+            collections.OrderedDict()
+        self._feas_computes = 0
+        self._feas_hits = 0
+        self._feas_evictions = 0
         self._bounds: dict[tuple, tuple] = {}  # spec value-key -> (lo, hi)
         self._spec_keys: dict[int, tuple] = {}
         self._spec_refs: dict[int, FunctionSpec] = {}
@@ -111,6 +183,32 @@ class Explorer:
         once-per-(spec, R) contract and the LRU bound in tests."""
         return {"computed": self._space_computes, "hits": self._space_hits,
                 "evictions": self._space_evictions}
+
+    _FEAS_CACHE_CAP = 4096  # boolean feasibility verdicts kept (LRU)
+
+    @property
+    def feasible_stats(self) -> dict[str, int]:
+        """{'computed', 'hits', 'evictions'} of the boolean feasibility-
+        verdict LRU (min-R probes; shared with the fleet engine's bulk
+        probes) — same contract as ``envelope_stats``."""
+        return {"computed": self._feas_computes, "hits": self._feas_hits,
+                "evictions": self._feas_evictions}
+
+    def _feasible_get(self, fkey: tuple) -> bool | None:
+        """LRU lookup + hit accounting; call with _state_lock held."""
+        ok = self._feasible.get(fkey)
+        if ok is not None:
+            self._feasible.move_to_end(fkey)
+            self._feas_hits += 1
+        return ok
+
+    def _feasible_put(self, fkey: tuple, ok: bool) -> None:
+        """LRU insert + eviction accounting; call with _state_lock held."""
+        self._feasible[fkey] = ok
+        self._feas_computes += 1
+        while len(self._feasible) > self._FEAS_CACHE_CAP:
+            self._feasible.popitem(last=False)
+            self._feas_evictions += 1
 
     _SPEC_MEMO_CAP = 1024  # id-keyed memo entries before a wholesale reset
 
@@ -190,6 +288,48 @@ class Explorer:
                 self._space_evictions += 1
             return spaces
 
+    def _envelopes_fleet(self, pairs: list[tuple[FunctionSpec, int]]
+                         ) -> list[list[RegionSpace]]:
+        """Bulk twin of :meth:`envelopes` for the fleet paths: every missing
+        (spec, R) of ``pairs`` is computed as one stacked array program
+        (grouped by row width) and primed into the envelope LRU with the
+        same accounting. Returns the spaces aligned with ``pairs``.
+
+        With ``config.mesh > 1`` the stack runs on the float32 device
+        program instead; those spaces are returned for the caller's
+        immediate (re-verified) use but are NEVER primed into the cache —
+        the exact batched engine's keys must keep answering with exact
+        float64 verdicts, exactly as the ``pallas`` engine keeps its own.
+        """
+        impl, engine = self.config.impl, "batched"
+        sharded = bool(self.config.mesh and self.config.mesh > 1)
+        with self._state_lock:
+            out: list = [None] * len(pairs)
+            missing = []
+            for i, (spec, r) in enumerate(pairs):
+                spaces = self._cached_spaces(
+                    self._space_key(spec, r, impl, engine))
+                if spaces is None:
+                    missing.append(i)
+                else:
+                    out[i] = spaces
+            if missing:
+                computed = fleet.fleet_region_spaces(
+                    [self._region_bounds(*pairs[i]) for i in missing],
+                    shards=self.config.mesh)
+                cap = self.config.envelope_cache
+                for i, spaces in zip(missing, computed):
+                    out[i] = spaces
+                    if sharded:
+                        continue
+                    spec, r = pairs[i]
+                    self._spaces[self._space_key(spec, r, impl, engine)] = spaces
+                    self._space_computes += 1
+                    while cap is not None and len(self._spaces) > max(cap, 1):
+                        self._spaces.popitem(last=False)
+                        self._space_evictions += 1
+            return out
+
     def feasible(self, spec: FunctionSpec, lookup_bits: int,
                  impl: str | None = None, engine: str | None = None) -> bool:
         """Eqns 9-10 over every region: does ANY piecewise quadratic exist?
@@ -213,13 +353,11 @@ class Explorer:
             if spaces is not None:
                 return all(s.feasible for s in spaces)
             fkey = (*self._spec_key(spec), lookup_bits)
-            ok = self._feasible.get(fkey)
+            ok = self._feasible_get(fkey)
             if ok is None:
                 L, U = self._region_bounds(spec, lookup_bits)
                 ok = bool(batched.regions_feasible_mask(L, U).all())
-                if len(self._feasible) >= 4096:
-                    self._feasible.clear()
-                self._feasible[fkey] = ok
+                self._feasible_put(fkey, ok)
             return ok
 
     def min_regions(self, spec: FunctionSpec, r_max: int | None = None,
@@ -238,36 +376,63 @@ class Explorer:
         so the *cost* keeps galloping and overshoot stays bounded), then
         binary-searches the final bracket. Any correct search must probe
         both min_R and min_R - 1; this pays O(1) such probes beyond them.
-        Probes reuse cached envelopes/verdicts.
+        Probes reuse cached envelopes/verdicts. The search itself lives in
+        :class:`_MinRSearch`; :meth:`min_regions_many` locksteps it over a
+        whole manifest through the fleet engine.
         """
-        # R > in_bits doesn't exist; the seed's upward scan never reached it,
-        # so a larger r_max must behave like "unbounded", not crash
-        r_max = spec.in_bits if r_max is None else min(r_max, spec.in_bits)
-        if r_max < 0 or not self.feasible(spec, r_max, impl, engine):
-            return None  # monotone: nothing below r_max can work either
-        hi, lo = r_max, -1  # known feasible / known infeasible
-        step = 1
-        work_cap = 1 << 26  # element-work floor where stepping turns costly
+        search = _MinRSearch(spec, r_max)
+        while (r := search.next_probe()) is not None:
+            search.feed(self.feasible(spec, r, impl, engine))
+        return search.result
 
-        def probe_work(r: int) -> int:
-            return 4 ** spec.in_bits >> max(r, 0)  # ~ 2^R regions x N^2
+    def _feasible_cached(self, spec: FunctionSpec, lookup_bits: int
+                         ) -> bool | None:
+        """Cached-only feasibility verdict (spaces cache, then the boolean
+        LRU) — the fleet paths consult this before bulk-probing."""
+        with self._state_lock:
+            spaces = self._cached_spaces(
+                self._space_key(spec, lookup_bits, self.config.impl, "batched"))
+            if spaces is not None:
+                return all(s.feasible for s in spaces)
+            return self._feasible_get((*self._spec_key(spec), lookup_bits))
 
-        while hi - 1 > lo:
-            r = max(hi - step, lo + 1)
-            if self.feasible(spec, r, impl, engine):
-                hi = r
-            else:
-                lo = r
-                break
-            nxt = max(hi - 2 * step, lo + 1)
-            step = 2 * step if probe_work(nxt) <= work_cap else 1
-        while hi - lo > 1:
-            mid = (lo + hi) // 2
-            if self.feasible(spec, mid, impl, engine):
-                hi = mid
-            else:
-                lo = mid
-        return hi
+    def min_regions_many(self, specs, r_max: int | None = None,
+                         impl: str | None = None, engine: str | None = None
+                         ) -> list[int | None]:
+        """Fleet min-R: the monotone search for MANY specs in lockstep.
+
+        Each round gathers every live search's next (spec, R) probe and
+        answers the whole frontier with one stacked array program
+        (``fleet.fleet_feasible_mask``) — a manifest's worth of min-R
+        queries costs a handful of dispatches instead of F x R serial
+        probes. Probe sequences per spec are identical to
+        :meth:`min_regions` (same state machine), verdicts land in the same
+        feasibility LRU, and results are bit-identical.
+        """
+        engine = engine or self.config.engine
+        specs = list(specs)
+        if not (self.config.fleet and engine == "batched") or len(specs) <= 1:
+            return [self.min_regions(s, r_max, impl, engine) for s in specs]
+        searches = [_MinRSearch(s, r_max) for s in specs]
+        while True:
+            pending: list[tuple[_MinRSearch, int]] = []
+            for s in searches:
+                while not s.done:
+                    r = s.next_probe()
+                    ok = self._feasible_cached(s.spec, r)
+                    if ok is None:
+                        pending.append((s, r))
+                        break
+                    s.feed(ok)
+            if not pending:
+                return [s.result for s in searches]
+            mask = fleet.fleet_feasible_mask(
+                [self._region_bounds(s.spec, r) for s, r in pending])
+            with self._state_lock:
+                for (s, r), ok in zip(pending, mask):
+                    self._feasible_put((*self._spec_key(s.spec), r), bool(ok))
+            for (s, _), ok in zip(pending, mask):
+                s.feed(bool(ok))
 
     # -- exploration -------------------------------------------------------
     def explore_r(self, spec: FunctionSpec, lookup_bits: int,
@@ -329,6 +494,15 @@ class Explorer:
             if r_hi is None:
                 r_hi = min(spec.in_bits, r_lo + 6)
             heights = list(range(r_lo, r_hi + 1))
+        # fleet path: prime every height's envelopes in one stacked program
+        # (each height its own width group — no cross-height pad work) so the
+        # per-R explore loop below runs entirely off the cache. Skipped under
+        # mesh > 1: f32 device spaces never enter the exact engine's cache,
+        # so priming would just duplicate the per-R exact computation.
+        if (self.config.fleet and len(heights) > 1 and impl is None
+                and (engine or self.config.engine) == "batched"
+                and not (self.config.mesh and self.config.mesh > 1)):
+            self._envelopes_fleet([(spec, r) for r in heights])
         entries = []
         for r in heights:
             e = self.explore_r(spec, r, tgt, degree, impl, engine)
@@ -337,16 +511,13 @@ class Explorer:
         return DesignSpaceResult(spec.name, tgt.name, entries, min_r)
 
     # -- table persistence (absorbed from numerics/registry) ---------------
-    def get_table(self, kind: str, bits: int | None = None,
-                  lookup_bits: int | None = None, degree: int | None = None,
-                  target: str | Target | None = None, **kw) -> TableDesign:
-        """Fetch (generating + verifying if needed) a cached table artifact.
-
-        Disk layout and key format are the seed registry's, so existing
-        ``artifacts/tables`` caches stay valid; non-default targets get a
-        suffixed key.
-        """
-        tgt = get_target(target if target is not None else self.default_target)
+    def _table_request(self, kind: str, bits: int | None,
+                       lookup_bits: int | None, degree: int | None,
+                       tgt: Target, kw: dict) -> tuple[str, int, int, int | None]:
+        """Resolve one table request against the registry defaults; returns
+        ``(cache key, bits, lookup_bits, degree)``. Shared by
+        :meth:`get_table` and the fleet compile path so both produce the
+        same artifacts under the same keys."""
         d_bits, _, d_r = DEFAULTS[kind]
         bits = bits if bits is not None else d_bits
         r = lookup_bits if lookup_bits is not None else d_r
@@ -359,6 +530,31 @@ class Explorer:
         if kw:  # spec overrides (ulp, out_bits, ...) change the artifact
             raw = "_".join(f"{k}{kw[k]}" for k in sorted(kw))
             key += "_" + re.sub(r"[^\w.\-]", "", raw)
+        return key, bits, r, degree
+
+    def _table_store(self, key: str, design: TableDesign) -> None:
+        """Persist a verified design under ``key`` (tmp + atomic rename) and
+        memoize it; call with ``self._lock`` held."""
+        cache_dir = self.config.resolved_cache_dir()
+        cache_dir.mkdir(parents=True, exist_ok=True)
+        path = cache_dir / f"{key}.json"
+        tmp = path.with_suffix(".tmp")
+        tmp.write_text(design.to_json())
+        tmp.replace(path)
+        self._tables[key] = design
+
+    def get_table(self, kind: str, bits: int | None = None,
+                  lookup_bits: int | None = None, degree: int | None = None,
+                  target: str | Target | None = None, **kw) -> TableDesign:
+        """Fetch (generating + verifying if needed) a cached table artifact.
+
+        Disk layout and key format are the seed registry's, so existing
+        ``artifacts/tables`` caches stay valid; non-default targets get a
+        suffixed key.
+        """
+        tgt = get_target(target if target is not None else self.default_target)
+        key, bits, r, degree = self._table_request(kind, bits, lookup_bits,
+                                                   degree, tgt, kw)
         with self._lock:
             if key in self._tables:
                 return self._tables[key]
@@ -378,11 +574,7 @@ class Explorer:
                 raise ValueError(f"no feasible table for {key}")
             ok, worst = entry.design.verify(spec)
             assert ok, f"unverified table {key}: worst={worst}"
-            cache_dir.mkdir(parents=True, exist_ok=True)
-            tmp = path.with_suffix(".tmp")
-            tmp.write_text(entry.design.to_json())
-            tmp.replace(path)
-            self._tables[key] = entry.design
+            self._table_store(key, entry.design)
             return entry.design
 
     # -- compiled libraries (the runtime-side artifact) --------------------
@@ -397,6 +589,12 @@ class Explorer:
         comes through the session's persistence layer, so a warm cache makes
         this a pure pack step; a cold one generates + verifies once and the
         resulting artifact can be ``save``d so serving never explores again.
+
+        Under the fleet engine (``config.fleet``, batched sessions) a cold
+        compile stacks every cache-missing (kind, spec, R) probe into one
+        array program and runs the decision procedures in lockstep
+        (``core.fleet``) — bit-identical designs to the serial per-kind
+        path, a handful of dispatches instead of F x R serial probes.
         """
         items: list[tuple[str, dict]] = []
         for it in (DEFAULT_LIBRARY_KINDS if kinds is None else kinds):
@@ -405,8 +603,11 @@ class Explorer:
             else:
                 kind, kw = it
                 items.append((kind, {**table_kw, **dict(kw)}))
-        designs = [self.get_table(kind, target=target, **kw)
-                   for kind, kw in items]
+        if self.config.fleet and self.config.engine == "batched":
+            designs = self._tables_fleet(items, target)
+        else:
+            designs = [self.get_table(kind, target=target, **kw)
+                       for kind, kw in items]
         # non-default activation windows (lo/hi spec kwargs) must reach the
         # metadata, or the library-bound glue would quantize over the wrong
         # input range
@@ -414,6 +615,70 @@ class Explorer:
                    for kind, kw in items if "lo" in kw or "hi" in kw}
         return InterpLibrary.from_designs(designs, [k for k, _ in items],
                                           act_windows=windows)
+
+    def _tables_fleet(self, items: list[tuple[str, dict]],
+                      target: str | Target | None) -> list[TableDesign]:
+        """Fleet twin of ``[self.get_table(kind, **kw) for ...]``.
+
+        Warm keys (memory or disk) load exactly as :meth:`get_table` would;
+        the cache-missing remainder is grouped by probe shape + degree, its
+        envelopes computed as one stacked program (priming the envelope
+        LRU), and each group's decision procedures run in lockstep with
+        shared array work (``fleet.fleet_decisions`` — bit-identical per
+        kind to the serial path). Results persist under the same disk keys.
+        A kind the lockstep finds infeasible at its requested R falls back
+        to :meth:`get_table`, which owns the R-retry ladder.
+        """
+        tgt = get_target(target if target is not None else self.default_target)
+        reqs = []
+        for kind, kw in items:
+            kw = dict(kw)
+            bits = kw.pop("bits", None)
+            r = kw.pop("lookup_bits", None)
+            dg = kw.pop("degree", None)
+            key, bits, r, dg = self._table_request(kind, bits, r, dg, tgt, kw)
+            reqs.append((kind, kw, key, bits, r, dg))
+        designs: dict[int, TableDesign] = {}
+        missing: list[int] = []
+        with self._lock:
+            for idx, (kind, kw, key, bits, r, dg) in enumerate(reqs):
+                if key in self._tables:
+                    designs[idx] = self._tables[key]
+                    continue
+                path = self.config.resolved_cache_dir() / f"{key}.json"
+                if path.exists():
+                    design = TableDesign.from_dict(json.loads(path.read_text()))
+                    self._tables[key] = design
+                    designs[idx] = design
+                    continue
+                missing.append(idx)
+        # group cold probes by (shape, degree): one lockstep decision each
+        groups: dict[tuple, list[tuple[int, FunctionSpec]]] = {}
+        for idx in missing:
+            kind, kw, key, bits, r, dg = reqs[idx]
+            spec = spec_for(kind, bits, **kw)
+            groups.setdefault(
+                (r, spec.in_bits - r, dg), []).append((idx, spec))
+        k_max = self.config.k_max  # None defers to the target policy's cap
+        for (r, _, dg), members in groups.items():
+            specs = [spec for _, spec in members]
+            bounds = [self._region_bounds(spec, r) for spec in specs]
+            spaces = self._envelopes_fleet([(spec, r) for spec in specs])
+            results = fleet.fleet_decisions(
+                specs, r, bounds, spaces, degree=dg, policy=tgt.policy,
+                k_max=k_max if k_max is not None else tgt.policy.k_max)
+            for (idx, spec), res in zip(members, results):
+                kind, kw, key, bits, _, dg = reqs[idx]
+                if res is None:  # rare: get_table owns the R-retry ladder
+                    designs[idx] = self.get_table(kind, bits=bits,
+                                                  lookup_bits=r, degree=dg,
+                                                  target=tgt, **kw)
+                    continue
+                design, _report = res  # finalize_design already verified it
+                with self._lock:
+                    self._table_store(key, design)
+                designs[idx] = design
+        return [designs[i] for i in range(len(items))]
 
 
 # ---------------------------------------------------------------------------

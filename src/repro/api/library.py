@@ -213,21 +213,41 @@ class InterpLibrary:
 
     # -- persistence (npz coefficients + json manifest) --------------------
     def save(self, path: str | pathlib.Path) -> pathlib.Path:
-        """Write ``<path>.npz`` (ROM) + ``<path>.json`` (manifest); returns
-        the manifest path. A saved library serves with zero exploration."""
+        """Write the ROM npz + ``<path>.json`` manifest; returns the
+        manifest path. A saved library serves with zero exploration.
+
+        A crash mid-save can never tear an artifact — not even a re-save
+        over an existing one: the ROM is written to a tmp path and renamed
+        to a *content-addressed* name (``<path>.<sha>.npz``, which the
+        manifest references), then the manifest is atomically replaced. At
+        every instant the on-disk json points at a complete ROM whose
+        checksum matches. Superseded ROM files are unlinked only after the
+        new manifest is in place (best-effort).
+        """
         base = pathlib.Path(path)
         if base.suffix in (".json", ".npz"):
             base = base.with_suffix("")
         base.parent.mkdir(parents=True, exist_ok=True)
         coeffs = np.asarray(self.coeffs, np.int32)
-        np.savez(base.with_suffix(".npz"), coeffs=coeffs)
-        man = self.manifest()
-        man["coeffs_file"] = base.with_suffix(".npz").name
-        man["coeffs_sha"] = hashlib.sha256(
+        sha = hashlib.sha256(
             np.ascontiguousarray(coeffs).tobytes()).hexdigest()[:16]
+        npz_path = base.parent / f"{base.name}.{sha}.npz"
+        tmp_npz = npz_path.with_suffix(".npz.tmp")
+        try:
+            with open(tmp_npz, "wb") as f:
+                np.savez(f, coeffs=coeffs)
+            tmp_npz.replace(npz_path)
+        finally:
+            tmp_npz.unlink(missing_ok=True)
+        man = self.manifest()
+        man["coeffs_file"] = npz_path.name
+        man["coeffs_sha"] = sha
         tmp = base.with_suffix(".json.tmp")
         tmp.write_text(json.dumps(man, indent=1))
         tmp.replace(base.with_suffix(".json"))
+        for stale in base.parent.glob(f"{base.name}.*.npz"):
+            if stale.name != npz_path.name:
+                stale.unlink(missing_ok=True)
         return base.with_suffix(".json")
 
     @classmethod

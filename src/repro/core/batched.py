@@ -37,12 +37,14 @@ see tests/core/test_batched.py and DESIGN.md §9.
 from __future__ import annotations
 
 import concurrent.futures
+import itertools
 import os
 import threading
 
 import numpy as np
 
-from repro.core.designspace import Candidate, RegionSpace, a_candidates
+from repro.core.designspace import (A_ENUM_CAP, Candidate, RegionSpace,
+                                    a_candidates, a_magnitude_order, a_window)
 
 # Work-shape heuristics: above this row length the O(T log T) scalar hull
 # beats the O(T^2) batched per-delta sweep per row (long rows only occur at
@@ -308,13 +310,27 @@ def _flatten_pairs(avals: list[list[int]]) -> tuple[np.ndarray, np.ndarray]:
     return np.asarray(rid, np.int64), np.asarray(flat, np.int64)
 
 
+def stack_envelopes(spaces: list[RegionSpace]
+                    ) -> tuple[np.ndarray, np.ndarray]:
+    """(M, m) rows of ``spaces`` stacked once, t >= 1 columns — the ``env``
+    operand of :func:`design_candidates`. The fleet engine's k ladders call
+    ``design_candidates`` many times over the same spaces; stacking here
+    instead of per call removes the dominant per-round overhead."""
+    return (np.stack([s.big_m for s in spaces])[:, 1:],
+            np.stack([s.small_m for s in spaces])[:, 1:])
+
+
 def design_candidates(spaces: list[RegionSpace], L: np.ndarray, U: np.ndarray,
-                      k: int, force_linear: bool) -> list[list[Candidate]]:
+                      k: int, force_linear: bool,
+                      env: tuple[np.ndarray, np.ndarray] | None = None
+                      ) -> list[list[Candidate]]:
     """Batched twin of ``designspace._region_candidates`` for every region.
 
     The admissible-a enumeration is per region (tiny, capped); the Eqn 3-4
     b-intervals and the exact c-interval witness confirmations run over all
     (region, a) pairs at once, chunked to a fixed temporary budget.
+    ``env`` optionally injects :func:`stack_envelopes` output (row-aligned
+    with ``spaces``) so repeated calls over one space set skip restacking.
     """
     L = np.asarray(L)
     U = np.asarray(U)
@@ -335,41 +351,116 @@ def design_candidates(spaces: list[RegionSpace], L: np.ndarray, U: np.ndarray,
     rid, a_arr = _flatten_pairs(avals)
     if rid.size == 0:
         return out
-    t_size = len(spaces[0].big_m)
-    ts = np.arange(1, t_size, dtype=np.float64)
-    big_m = np.stack([s.big_m for s in spaces])[:, 1:]
-    small_m = np.stack([s.small_m for s in spaces])[:, 1:]
-    scale = float(1 << k)
-    x = np.arange(n, dtype=np.int64)
-    sq = x * x
-    lo_all = L.astype(np.int64) << k
-    hi_all = (U.astype(np.int64) + 1) << k
-    for s, e in _chunks(len(rid), max(t_size, n)):
+    check = _PairCheck(spaces, L, U, k, env)
+    for s, e in _chunks(len(rid), max(check.t_size, n)):
         r_c, a_c = rid[s:e], a_arr[s:e]
+        ok, b_min, b_max = check(r_c, a_c)
+        for i in np.flatnonzero(ok):
+            out[int(r_c[i])].append(
+                Candidate(int(a_c[i]), int(b_min[i]), int(b_max[i])))
+    return out
+
+
+class _PairCheck:
+    """Shared (region, a)-pair math of the decision-step-1 body: the Eqn 3-4
+    b-interval plus the exact witness confirmation, vectorized over a flat
+    pair axis. Row results depend only on the row, so any grouping of calls
+    (chunks, waves) yields bit-identical values."""
+
+    def __init__(self, spaces, L, U, k: int, env=None):
+        self.t_size = len(spaces[0].big_m)
+        self.ts = np.arange(1, self.t_size, dtype=np.float64)
+        self.big_m, self.small_m = (env if env is not None
+                                    else stack_envelopes(spaces))
+        self.scale = float(1 << k)
+        n = L.shape[1]
+        self.x = np.arange(n, dtype=np.int64)
+        self.sq = self.x * self.x
+        self.lo_all = L.astype(np.int64) << k
+        self.hi_all = (U.astype(np.int64) + 1) << k
+
+    def __call__(self, r_c: np.ndarray, a_c: np.ndarray):
+        """-> (survives, b_min, b_max) for each (region, a) pair row."""
         # Eqns 3-4 (same float64 expressions as b_interval)
-        lin_t = a_c[:, None] * ts[None, :]
-        lo = (scale * big_m[r_c] - lin_t).max(axis=1)
-        hi = (scale * small_m[r_c] - lin_t).min(axis=1)
+        lin_t = a_c[:, None] * self.ts[None, :]
+        lo = (self.scale * self.big_m[r_c] - lin_t).max(axis=1)
+        hi = (self.scale * self.small_m[r_c] - lin_t).min(axis=1)
         b_min = np.floor(lo).astype(np.int64) + 1
         b_max = np.ceil(hi).astype(np.int64) - 1
         ok_iv = b_min <= b_max
         # exact confirmation at a witness b, widened one lattice step against
         # float slop in M/m — same candidate order as _region_candidates
-        base_lo = lo_all[r_c] - a_c[:, None] * sq[None, :]
-        base_hi = hi_all[r_c] - a_c[:, None] * sq[None, :]
+        base_lo = self.lo_all[r_c] - a_c[:, None] * self.sq[None, :]
+        base_hi = self.hi_all[r_c] - a_c[:, None] * self.sq[None, :]
         confirmed = np.zeros(len(r_c), bool)
         for b_opt in (b_min, b_min + 1, b_max, b_min - 1):
             need = ok_iv & ~confirmed
             if not need.any():
                 break
-            poly_b = b_opt[:, None] * x[None, :]
+            poly_b = b_opt[:, None] * self.x[None, :]
             c_lo = (base_lo - poly_b).max(axis=1)
             c_hi = (base_hi - poly_b).min(axis=1) - 1
             confirmed |= need & (c_lo <= c_hi)
-        for i in np.flatnonzero(ok_iv & confirmed):
-            out[int(r_c[i])].append(
-                Candidate(int(a_c[i]), int(b_min[i]), int(b_max[i])))
-    return out
+        return ok_iv & confirmed, b_min, b_max
+
+
+def candidates_feasible(spaces: list[RegionSpace], L: np.ndarray,
+                        U: np.ndarray, k: int, force_linear: bool,
+                        env: tuple[np.ndarray, np.ndarray] | None = None
+                        ) -> np.ndarray:
+    """Per-region verdict ``bool(design_candidates(...)[r])`` without
+    materializing the candidate lists.
+
+    The k ladders of the decision procedure discard every candidate list
+    except the final k's; this check walks the same per-region admissible-a
+    enumerations in |a|-rank *waves* — one stacked pair program per rank —
+    and retires a region at its first surviving candidate (the common case:
+    the smallest |a|, deep inside the a-interval, survives immediately).
+    Verdicts are bit-identical to the full generation: the same pair rows
+    run through the same :class:`_PairCheck` expressions, and existence is
+    order-independent.
+    """
+    L = np.asarray(L)
+    U = np.asarray(U)
+    b, n = L.shape
+    # lazy |a|-ordered window iterators: the common case retires a region on
+    # its very first candidate, so the full (capped) enumeration that
+    # design_candidates sorts per region is never materialized here
+    iters: list = []
+    for space in spaces:
+        if not space.feasible or (
+                force_linear and not (space.linear_ok or n <= 2)):
+            iters.append(None)
+        elif force_linear:
+            iters.append(iter((0,)))
+        else:
+            win = a_window(space, k)
+            iters.append(None if win is None else a_magnitude_order(*win))
+    verdict = np.zeros(b, bool)
+    if n == 1:  # any a works pointwise (see design_candidates)
+        verdict[:] = [it is not None for it in iters]
+        return verdict
+    check = _PairCheck(spaces, L, U, k, env)
+    pending = [r for r in range(b) if iters[r] is not None]
+    width = 1  # ranks per wave: grows geometrically so a region with NO
+    # surviving candidate exhausts its enumeration in O(log cap) waves
+    while pending:
+        rid_l: list[int] = []
+        a_l: list[int] = []
+        exhausted = set()
+        for r in pending:
+            take = list(itertools.islice(iters[r], width))
+            if len(take) < width:
+                exhausted.add(r)
+            rid_l.extend([r] * len(take))
+            a_l.extend(take)
+        r_c = np.asarray(rid_l, np.int64)
+        ok, _, _ = check(r_c, np.asarray(a_l, np.int64))
+        verdict[r_c[ok]] = True
+        pending = [r for r in pending
+                   if not verdict[r] and r not in exhausted]
+        width = min(4 * width, A_ENUM_CAP)
+    return verdict
 
 
 # --------------------------------------------------------------------------
@@ -380,9 +471,12 @@ def batched_linear_fit(lo: np.ndarray, hi: np.ndarray, stride: int = 1
                        ) -> list[tuple[int, int] | None]:
     """Row-wise twin of ``decision.linear_fit_interval``.
 
-    The dd bounds and the common case (both endpoint witnesses pass) are
-    fully vectorized; the rare float-slop adjustments fall back to the
-    scalar routine row by row, so results match it exactly.
+    The dd bounds, the common case (both endpoint witnesses pass) and the
+    empty-interval one-step widening (``b_min > b_max``: try ``b_min - 1``
+    then ``b_max + 1`` — the dominant outcome on truncation trials that kill
+    feasibility) are fully vectorized; only the rare float-slop endpoint
+    adjustments fall back to the scalar routine row by row, so results match
+    it exactly.
     """
     c, nb = lo.shape
     res: list[tuple[int, int] | None] = [None] * c
@@ -391,8 +485,10 @@ def batched_linear_fit(lo: np.ndarray, hi: np.ndarray, stride: int = 1
         for i in np.flatnonzero(valid):
             res[int(i)] = (0, 0)
         return res
-    b_lo = batched_max_dd(lo, hi)
-    b_hi = batched_min_dd(hi, lo)
+    # fused per-delta pass (the Eqn 7-8 fusion of _dd_interval_rows applies
+    # verbatim: b_lo = max (lo[y]-hi[x])/(y-x), b_hi = min (hi[y]-lo[x])/..)
+    b_lo, b_hi = _dd_interval_rows(lo.astype(np.float64),
+                                   hi.astype(np.float64))
     b_min = np.ceil(b_lo / stride - 1e-12).astype(np.int64)
     b_max = np.floor(b_hi / stride + 1e-12).astype(np.int64)
     idx = np.arange(nb, dtype=np.int64) * stride
@@ -401,11 +497,21 @@ def batched_linear_fit(lo: np.ndarray, hi: np.ndarray, stride: int = 1
         t = bv[:, None] * idx[None, :]
         return (lo - t).max(axis=1) <= (hi - t).min(axis=1)
 
-    fast = valid & (b_min <= b_max)
+    nonempty = b_min <= b_max
+    fast = valid & nonempty
     fast &= ok_vec(b_min) & ok_vec(b_max)
     for i in np.flatnonzero(fast):
         res[int(i)] = (int(b_min[i]), int(b_max[i]))
-    slow = np.flatnonzero(valid & ~fast)
+    empty = valid & ~nonempty
+    if empty.any():
+        # same order as the scalar routine: b_min - 1 first, then b_max + 1
+        w1 = empty & ok_vec(b_min - 1)
+        w2 = empty & ~w1 & ok_vec(b_max + 1)
+        for i in np.flatnonzero(w1):
+            res[int(i)] = (int(b_min[i]) - 1, int(b_min[i]) - 1)
+        for i in np.flatnonzero(w2):
+            res[int(i)] = (int(b_max[i]) + 1, int(b_max[i]) + 1)
+    slow = np.flatnonzero(valid & nonempty & ~fast)
     if slow.size:
         from repro.core.decision import linear_fit_interval
 
@@ -414,11 +520,17 @@ def batched_linear_fit(lo: np.ndarray, hi: np.ndarray, stride: int = 1
     return res
 
 
-def trunc_candidates(L: np.ndarray, U: np.ndarray, k: int,
-                     a_sets: list[list[int]], sq_t: int, lin_t: int
+def trunc_candidates(L: np.ndarray, U: np.ndarray, k,
+                     a_sets: list[list[int]], sq_t, lin_t: int
                      ) -> list[list[Candidate]]:
     """Batched twin of ``decision._region_trunc_candidates`` for every region:
-    surviving (a, b-interval) choices under truncations ``(sq_t, lin_t)``."""
+    surviving (a, b-interval) choices under truncations ``(sq_t, lin_t)``.
+
+    ``k`` and ``sq_t`` accept either a scalar (one spec) or a per-region
+    vector — the fleet engine stacks regions of several specs, each at its
+    own precision slack / square-truncation state, into one call. Per-row
+    values reproduce the scalar expressions exactly.
+    """
     L = np.asarray(L)
     U = np.asarray(U)
     b, n = L.shape
@@ -427,14 +539,21 @@ def trunc_candidates(L: np.ndarray, U: np.ndarray, k: int,
     if rid.size == 0:
         return out
     x = np.arange(n, dtype=np.int64)
-    sq = ((x >> sq_t) << sq_t) ** 2
-    lo_all = L.astype(np.int64) << k
-    hi_all = ((U.astype(np.int64) + 1) << k) - 1
+    k_arr = np.asarray(k, np.int64)
+    sq_t_arr = np.asarray(sq_t, np.int64)
+    if sq_t_arr.ndim:
+        sq = ((x[None, :] >> sq_t_arr[:, None]) << sq_t_arr[:, None]) ** 2
+    else:
+        sq = ((x >> int(sq_t_arr)) << int(sq_t_arr)) ** 2
+    kb = k_arr[:, None] if k_arr.ndim else k_arr
+    lo_all = L.astype(np.int64) << kb
+    hi_all = ((U.astype(np.int64) + 1) << kb) - 1
     nb = n >> lin_t if lin_t else n
     for s, e in _chunks(len(rid), n):
         r_c, a_c = rid[s:e], a_arr[s:e]
-        v_lo = lo_all[r_c] - a_c[:, None] * sq[None, :]
-        v_hi = hi_all[r_c] - a_c[:, None] * sq[None, :]
+        sq_rows = sq[r_c] if sq.ndim == 2 else sq[None, :]
+        v_lo = lo_all[r_c] - a_c[:, None] * sq_rows
+        v_hi = hi_all[r_c] - a_c[:, None] * sq_rows
         if lin_t:
             v_lo = v_lo.reshape(len(r_c), nb, -1).max(axis=2)
             v_hi = v_hi.reshape(len(r_c), nb, -1).min(axis=2)

@@ -23,8 +23,7 @@ import math
 import numpy as np
 
 from repro.core import searches
-from repro.core.designspace import (Candidate, DesignSpace, c_interval,
-                                    minimal_k)
+from repro.core.designspace import Candidate, DesignSpace, minimal_k
 from repro.core.fixedpoint import (bit_length_of, interval_trailing_zeros,
                                    min_bits_in_interval, trailing_zeros)
 from repro.core.funcspec import FunctionSpec
@@ -369,9 +368,32 @@ def _run_decision_pooled(spec, lookup_bits, degree, impl, k_max, pool,
         lin_t, region_cands = j, trial
 
     # -- step 4: Algorithm 1 width minimization, a -> b -> c ---------------
+    return finalize_design(spec, lookup_bits, ds.L, ds.U, k, deg, sq_t, lin_t,
+                           region_cands, linear_possible)
+
+
+def finalize_design(spec, lookup_bits: int, L: np.ndarray, U: np.ndarray,
+                    k: int, deg: int, sq_t: int, lin_t: int,
+                    region_cands: list[list[Candidate]],
+                    linear_possible: bool,
+                    alg1_fn=None) -> tuple[TableDesign, DecisionReport] | None:
+    """Step 4 of the §III procedure: Algorithm-1 width minimization over the
+    surviving candidates (a -> b -> c), first-survivor pick per region, and
+    the final exhaustive verification.
+
+    ``alg1_fn`` must be *value-identical* to :func:`alg1_interval_precision`
+    (the default); the fleet engine injects its vectorized twin
+    (``repro.core.fleet.fleet_alg1``), property-tested as bit-identical.
+    """
+    alg1 = alg1_fn if alg1_fn is not None else alg1_interval_precision
+    n_regions = 1 << lookup_bits
+    w = spec.in_bits - lookup_bits
+    # The interval sets fed to Algorithm 1 skip union() normalization: the
+    # width search only takes min/max over each set's intervals, which is
+    # insensitive to merge order (same point set either way).
     # a widths
-    a_meta = alg1_interval_precision([
-        IntervalSet.union([IntervalSet.single(c.a, c.a) for c in region_cands[r]])
+    a_meta = alg1([
+        IntervalSet(tuple((c.a, c.a) for c in region_cands[r]))
         for r in range(n_regions)
     ])
     region_cands = [
@@ -383,8 +405,8 @@ def _run_decision_pooled(spec, lookup_bits, degree, impl, k_max, pool,
     if any(not c for c in region_cands):
         return None
     # b widths over the union of surviving b-intervals
-    b_meta = alg1_interval_precision([
-        IntervalSet.union([IntervalSet.single(c.b_min, c.b_max) for c in cands])
+    b_meta = alg1([
+        IntervalSet(tuple((c.b_min, c.b_max) for c in cands))
         for cands in region_cands
     ])
     # prune b to representable values; keep (a, bs) with survivors
@@ -409,26 +431,38 @@ def _run_decision_pooled(spec, lookup_bits, degree, impl, k_max, pool,
     if any(not row for row in pruned):
         return None
 
-    # c width over exact c-intervals of surviving (a, b) pairs
+    # c width over exact c-intervals of surviving (a, b) pairs — one int64
+    # sweep over every (region, a, b) triple at once (identical expressions
+    # to ``c_interval``, batched over a leading pair axis)
     x = np.arange(1 << w, dtype=np.int64)
     sqv = _trunc(x, sq_t) ** 2
     linv = _trunc(x, lin_t)
-
-    def c_iv(r: int, a: int, b: int) -> tuple[int, int]:
-        return c_interval(ds.L[r], ds.U[r], a, b, k, sq=sqv, lin=linv)
+    rid_l: list[int] = []
+    av_l: list[int] = []
+    bv_l: list[int] = []
+    offsets = []
+    for r in range(n_regions):
+        offsets.append(len(rid_l))
+        for a, bs in pruned[r]:
+            for b in bs:
+                rid_l.append(r)
+                av_l.append(a)
+                bv_l.append(b)
+    rid = np.asarray(rid_l, np.int64)
+    poly = (np.asarray(av_l, np.int64)[:, None] * sqv[None, :]
+            + np.asarray(bv_l, np.int64)[:, None] * linv[None, :])
+    c_lo = ((L.astype(np.int64) << k)[rid] - poly).max(axis=1)
+    c_hi = (((U.astype(np.int64) + 1) << k)[rid] - poly).min(axis=1) - 1
 
     c_sets = []
     for r in range(n_regions):
-        ivs = []
-        for a, bs in pruned[r]:
-            for b in bs:
-                lo, hi = c_iv(r, a, b)
-                if lo <= hi:
-                    ivs.append(IntervalSet.single(lo, hi))
+        end = offsets[r + 1] if r + 1 < n_regions else len(rid_l)
+        ivs = tuple((int(c_lo[j]), int(c_hi[j]))
+                    for j in range(offsets[r], end) if c_lo[j] <= c_hi[j])
         if not ivs:
             return None
-        c_sets.append(IntervalSet.union(ivs))
-    c_meta = alg1_interval_precision(c_sets)
+        c_sets.append(IntervalSet(ivs))
+    c_meta = alg1(c_sets)
 
     # final pick: first surviving (a, b, c) per region
     av = np.zeros(n_regions, dtype=np.int64)
@@ -436,9 +470,11 @@ def _run_decision_pooled(spec, lookup_bits, degree, impl, k_max, pool,
     cv = np.zeros(n_regions, dtype=np.int64)
     for r in range(n_regions):
         done = False
+        j = offsets[r]
         for a, bs in pruned[r]:
             for b in bs:
-                lo, hi = c_iv(r, a, b)
+                lo, hi = int(c_lo[j]), int(c_hi[j])
+                j += 1
                 if lo > hi:
                     continue
                 sign = 1 if hi >= 0 else -1

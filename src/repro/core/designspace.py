@@ -140,15 +140,18 @@ def c_interval(L: np.ndarray, U: np.ndarray, a: int, b: int, k: int,
     return int(lo.max()), int(hi.min()) - 1
 
 
-def a_candidates(space: RegionSpace, k: int, cap: int = A_ENUM_CAP) -> list[int]:
-    """Integer a values strictly inside (2^k a_lo, 2^k a_hi), small |a| first."""
+def a_window(space: RegionSpace, k: int, cap: int = A_ENUM_CAP
+             ) -> tuple[int, int] | None:
+    """The capped contiguous window [a_min, a_max] of admissible integer a
+    values strictly inside (2^k a_lo, 2^k a_hi) — the exact SET that
+    :func:`a_candidates` enumerates; ``None`` when empty."""
     scale = float(1 << k)
     lo = space.a_lo * scale
     hi = space.a_hi * scale
     a_min = int(math.floor(lo)) + 1 if np.isfinite(lo) else -A_UNCONSTRAINED
     a_max = int(math.ceil(hi)) - 1 if np.isfinite(hi) else A_UNCONSTRAINED
     if a_min > a_max:
-        return []
+        return None
     if a_max - a_min + 1 > cap:
         # keep the magnitude-ordered prefix around 0 or the nearest end
         center = min(max(0, a_min), a_max)
@@ -156,9 +159,34 @@ def a_candidates(space: RegionSpace, k: int, cap: int = A_ENUM_CAP) -> list[int]
         a_min2 = max(a_min, center - half)
         a_max2 = min(a_max, a_min2 + cap - 1)
         a_min, a_max = a_min2, a_max2
-    vals = list(range(a_min, a_max + 1))
-    vals.sort(key=abs)
-    return vals
+    return a_min, a_max
+
+
+def a_magnitude_order(a_min: int, a_max: int):
+    """Yield [a_min, a_max] in the |a|-then-negative-first order of
+    ``sorted(range(a_min, a_max + 1), key=abs)`` (Python's stable sort puts
+    -m before +m), without materializing the window."""
+    if a_min > 0:
+        yield from range(a_min, a_max + 1)
+    elif a_max < 0:
+        yield from range(a_max, a_min - 1, -1)
+    else:
+        yield 0
+        m = 1
+        while -m >= a_min or m <= a_max:
+            if -m >= a_min:
+                yield -m
+            if m <= a_max:
+                yield m
+            m += 1
+
+
+def a_candidates(space: RegionSpace, k: int, cap: int = A_ENUM_CAP) -> list[int]:
+    """Integer a values strictly inside (2^k a_lo, 2^k a_hi), small |a| first."""
+    win = a_window(space, k, cap)
+    if win is None:
+        return []
+    return list(a_magnitude_order(*win))
 
 
 @dataclasses.dataclass

@@ -37,9 +37,14 @@ class RegionPool:
             self._pool = mp.get_context("fork").Pool(self.processes)
         return self
 
-    def __exit__(self, *exc):
+    def __exit__(self, exc_type=None, exc=None, tb=None):
         if self._pool is not None:
-            self._pool.terminate()
+            if exc_type is None:
+                # clean exit: let in-flight pooled work drain before joining
+                # (terminate() here used to kill submitted regions mid-map)
+                self._pool.close()
+            else:
+                self._pool.terminate()
             self._pool.join()
             self._pool = None
 

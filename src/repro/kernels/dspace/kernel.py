@@ -30,19 +30,12 @@ TILE = 128
 BIG = 3.4e38  # python float: becomes an inline constant, not a captured array
 
 
-def _envelope_kernel(l_ref, u_ref, me_ref, mo_ref, be_ref, bo_ref, *, n: int,
-                     tile_axis: int = 0):
-    """Inputs are rows padded to (1, 3n): real data in [n, 2n).
-
-    me/mo: m(t) even/odd; be/bo: M(t) even/odd. ``tile_axis`` is the grid
-    axis carrying the j-tile index (axis 1 when a leading region axis is
-    present, as in ``envelopes_parity_batched``).
-    """
-    j0 = pl.program_id(tile_axis) * TILE
+def _parity_reduce(l_row, u_row, j0, n: int):
+    """Shared kernel body: the per-offset parity-split center-stencil
+    reduction over one padded (1, 3n) row at tile start ``j0``. Returns
+    (m_even, m_odd, M_even, M_odd) tiles of shape (1, TILE)."""
     lane = jax.lax.broadcasted_iota(jnp.int32, (1, TILE), 1)
     j = j0 + lane  # global center indices, (1, TILE)
-    l_row = l_ref[...]  # (1, 3n) float32
-    u_row = u_ref[...]
 
     def body(e, carry):
         me, mo, be, bo = carry
@@ -71,11 +64,36 @@ def _envelope_kernel(l_ref, u_ref, me_ref, mo_ref, be_ref, bo_ref, *, n: int,
 
     init = (jnp.full((1, TILE), BIG, jnp.float32), jnp.full((1, TILE), BIG, jnp.float32),
             jnp.full((1, TILE), -BIG, jnp.float32), jnp.full((1, TILE), -BIG, jnp.float32))
-    me, mo, be, bo = jax.lax.fori_loop(0, n, body, init)
+    return jax.lax.fori_loop(0, n, body, init)
+
+
+def _envelope_kernel(l_ref, u_ref, me_ref, mo_ref, be_ref, bo_ref, *, n: int,
+                     tile_axis: int = 0):
+    """Inputs are rows padded to (1, 3n): real data in [n, 2n).
+
+    me/mo: m(t) even/odd; be/bo: M(t) even/odd. ``tile_axis`` is the grid
+    axis carrying the j-tile index (axis 1 when a leading region axis is
+    present, as in ``envelopes_parity_batched``).
+    """
+    j0 = pl.program_id(tile_axis) * TILE
+    me, mo, be, bo = _parity_reduce(l_ref[...], u_ref[...], j0, n)
     me_ref[...] = me
     mo_ref[...] = mo
     be_ref[...] = be
     bo_ref[...] = bo
+
+
+def _envelope_kernel_fleet(l_ref, u_ref, me_ref, mo_ref, be_ref, bo_ref, *,
+                           n: int):
+    """Fleet variant: blocks carry a (probe, region) prefix — grid axes are
+    (probe, region, j-tile) — and the row body is shared."""
+    j0 = pl.program_id(2) * TILE
+    me, mo, be, bo = _parity_reduce(l_ref[...].reshape(1, -1),
+                                    u_ref[...].reshape(1, -1), j0, n)
+    me_ref[...] = me.reshape(1, 1, TILE)
+    mo_ref[...] = mo.reshape(1, 1, TILE)
+    be_ref[...] = be.reshape(1, 1, TILE)
+    bo_ref[...] = bo.reshape(1, 1, TILE)
 
 
 def envelopes_parity(l_arr: jax.Array, u_arr: jax.Array,
@@ -100,6 +118,33 @@ def envelopes_parity(l_arr: jax.Array, u_arr: jax.Array,
         interpret=interpret,
     )(l2, u2)
     return me[0], mo[0], be[0], bo[0]
+
+
+def envelopes_parity_fleet(l_arr: jax.Array, u_arr: jax.Array,
+                           interpret: bool = True) -> tuple[jax.Array, ...]:
+    """Fleet-stacked variant: ``(P, B, n)`` probe stacks in, four
+    ``(P, B, n)`` parity envelopes out of ONE ``pallas_call`` with grid
+    ``(probe, region, n // TILE)``.
+
+    This is the §V scale move one level up from ``envelopes_parity_batched``:
+    the whole manifest's probes become one device program whose probe axis
+    the fleet engine shards across devices (kernels/dspace/ops.py).
+    """
+    p, b, n = l_arr.shape
+    assert n % TILE == 0 and n >= TILE, n
+    l2 = jnp.pad(l_arr.astype(jnp.float32), ((0, 0), (0, 0), (n, n)))
+    u2 = jnp.pad(u_arr.astype(jnp.float32), ((0, 0), (0, 0), (n, n)))
+    kernel = functools.partial(_envelope_kernel_fleet, n=n)
+    out_spec = pl.BlockSpec((1, 1, TILE), lambda q, r, i: (q, r, i))
+    shape = jax.ShapeDtypeStruct((p, b, n), jnp.float32)
+    return pl.pallas_call(
+        kernel,
+        grid=(p, b, n // TILE),
+        in_specs=[pl.BlockSpec((1, 1, 3 * n), lambda q, r, i: (q, r, 0))] * 2,
+        out_specs=[out_spec] * 4,
+        out_shape=[shape] * 4,
+        interpret=interpret,
+    )(l2, u2)
 
 
 def envelopes_parity_batched(l_arr: jax.Array, u_arr: jax.Array,

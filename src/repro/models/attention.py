@@ -222,32 +222,65 @@ def gqa_prefill(p: Params, x, positions, cfg, numerics, cache_len: int):
     o = attention_core(q, k, v, positions, positions, numerics,
                        causal=True, window=cfg.sliding_window)
     y = o.reshape(b, s, -1) @ p["wo"]
-    kc = jnp.zeros((b, cfg.n_kv_heads, cache_len, cfg.head_size), k.dtype)
+    s_eff = (min(cache_len, cfg.sliding_window)
+             if cfg.sliding_window is not None else cache_len)
+    kc = jnp.zeros((b, cfg.n_kv_heads, s_eff, cfg.head_size), k.dtype)
     vc = jnp.zeros_like(kc)
-    pos_buf = jnp.full((b, cache_len), -1, jnp.int32)
-    if cfg.sliding_window is not None and s > cfg.sliding_window:
-        w = cfg.sliding_window
-        k, v = k[:, -w:], v[:, -w:]
-        positions = positions[:, -w:]
-        s = w
+    pos_buf = jnp.full((b, s_eff), -1, jnp.int32)
+    if cfg.sliding_window is not None and s > s_eff:
+        # windowed caches keep the last s_eff tokens; prompts overflowing a
+        # non-windowed cache stay a hard (shape) error, never a silent clip
+        k, v = k[:, -s_eff:], v[:, -s_eff:]
+        positions = positions[:, -s_eff:]
     kc = jax.lax.dynamic_update_slice(kc, k.transpose(0, 2, 1, 3), (0, 0, 0, 0))
     vc = jax.lax.dynamic_update_slice(vc, v.transpose(0, 2, 1, 3), (0, 0, 0, 0))
     pos_buf = jax.lax.dynamic_update_slice(pos_buf, positions.astype(jnp.int32), (0, 0))
+    if cfg.sliding_window is not None and s > s_eff:
+        # decode slots windowed rows at position % s_eff; rotate the
+        # compacted tail so row r holds the position with p % s_eff == r —
+        # otherwise the first wrap-around decode overwrites live in-window
+        # KV instead of the expired row
+        shift = s % s_eff
+        kc = jnp.roll(kc, shift, axis=2)
+        vc = jnp.roll(vc, shift, axis=2)
+        pos_buf = jnp.roll(pos_buf, shift, axis=1)
     return y, KVCache(kc, vc, pos_buf)
+
+
+def _decode_positions(pos: jax.Array, b: int) -> tuple[jax.Array, jax.Array]:
+    """Normalize a decode position argument: scalar (uniform batch) or (B,)
+    per-slot vector. Returns (pos, positions (B, 1))."""
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = (jnp.broadcast_to(pos[None, None], (b, 1)) if pos.ndim == 0
+                 else pos.reshape(b, 1)).astype(jnp.int32)
+    return pos, positions
 
 
 def gqa_decode(p: Params, x: jax.Array, pos: jax.Array, cache: KVCache, cfg,
                numerics) -> tuple[jax.Array, KVCache]:
-    """x: (B, 1, d); pos: scalar int32 (uniform across batch)."""
+    """x: (B, 1, d); pos: scalar int32 (uniform across batch) or (B,)
+    per-slot positions (mixed-length continuous batching)."""
     b = x.shape[0]
-    positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    pos, positions = _decode_positions(pos, b)
     q, k, v = _gqa_qkv(p, x, positions, cfg)
     s_max = cache.k.shape[2]
-    slot = (pos % s_max).astype(jnp.int32) if cfg.sliding_window else pos.astype(jnp.int32)
-    kc = jax.lax.dynamic_update_slice(cache.k, k.transpose(0, 2, 1, 3), (0, 0, slot, 0))
-    vc = jax.lax.dynamic_update_slice(cache.v, v.transpose(0, 2, 1, 3), (0, 0, slot, 0))
-    pc = jax.lax.dynamic_update_slice(
-        cache.pos, positions, (0, slot))
+    slot = (pos % s_max).astype(jnp.int32) if cfg.sliding_window else pos
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    if pos.ndim == 0:
+        kc = jax.lax.dynamic_update_slice(cache.k, kt, (0, 0, slot, 0))
+        vc = jax.lax.dynamic_update_slice(cache.v, vt, (0, 0, slot, 0))
+        pc = jax.lax.dynamic_update_slice(cache.pos, positions, (0, slot))
+    else:
+        # per-slot write positions: one dynamic_update per batch row (vmap
+        # lowers these to a batched scatter)
+        upd = jax.vmap(lambda buf, new, s:
+                       jax.lax.dynamic_update_slice(buf, new, (0, s, 0)))
+        kc = upd(cache.k, kt, slot)
+        vc = upd(cache.v, vt, slot)
+        pc = jax.vmap(lambda buf, new, s:
+                      jax.lax.dynamic_update_slice(buf, new, (s,)))(
+            cache.pos, positions, slot)
     kv_pos = pc
     o = attention_core(q, kc.transpose(0, 2, 1, 3), vc.transpose(0, 2, 1, 3),
                        positions, kv_pos, numerics, causal=True,
@@ -343,13 +376,23 @@ def mla_prefill(p, x, positions, cfg, numerics, cache_len: int):
 
 
 def mla_decode(p, x, pos, cache: KVCache, cfg, numerics):
+    """pos: scalar int32 or (B,) per-slot positions (continuous batching)."""
     b = x.shape[0]
-    positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    pos, positions = _decode_positions(pos, b)
     q = _mla_q(p, x, positions, cfg, numerics)
     ckv, kr = _mla_kv_latent(p, x, positions, cfg, numerics)
-    ck = jax.lax.dynamic_update_slice(cache.k, ckv, (0, pos, 0))
-    krb = jax.lax.dynamic_update_slice(cache.v, kr, (0, pos, 0))
-    pc = jax.lax.dynamic_update_slice(cache.pos, positions, (0, pos))
+    if pos.ndim == 0:
+        ck = jax.lax.dynamic_update_slice(cache.k, ckv, (0, pos, 0))
+        krb = jax.lax.dynamic_update_slice(cache.v, kr, (0, pos, 0))
+        pc = jax.lax.dynamic_update_slice(cache.pos, positions, (0, pos))
+    else:
+        upd = jax.vmap(lambda buf, new, s:
+                       jax.lax.dynamic_update_slice(buf, new, (s, 0)))
+        ck = upd(cache.k, ckv, pos)
+        krb = upd(cache.v, kr, pos)
+        pc = jax.vmap(lambda buf, new, s:
+                      jax.lax.dynamic_update_slice(buf, new, (s,)))(
+            cache.pos, positions, pos)
     k, v = _mla_expand(p, ck, krb, cfg)  # chunked expansion would go here
     o = attention_core(q, k, v, positions, pc, numerics, causal=True,
                        kv_chunk=min(4096, k.shape[1]))

@@ -405,6 +405,27 @@ def cache_shapes(cfg, b: int, cache_len: int) -> ShapeTree:
     return out
 
 
+def splice_cache(cfg, pool: Params, one: Params, slot: int) -> Params:
+    """Write one request's prefilled cache (batch size 1) into ``slot`` of a
+    pooled cache along the *batch* axis.
+
+    Scanned segments stack their cache leaves with a leading layer axis
+    (``stack_specs``), so the batch axis is 1 there and 0 for unscanned
+    segments — a naive tree-wide ``axis=0`` splice would hit the layer axis
+    (and silently clamp the slot index to 0 for every slot past the layer
+    count, corrupting the whole pool).
+    """
+    out = {}
+    for i, seg in enumerate(layer_plan(cfg)):
+        name = f"seg{i}"
+        ax = 1 if seg.repeat > 1 else 0
+        out[name] = jax.tree.map(
+            lambda p, o: jax.lax.dynamic_update_slice_in_dim(
+                p, o.astype(p.dtype), slot, axis=ax),
+            pool[name], one[name])
+    return out
+
+
 def init_cache(cfg, b: int, cache_len: int) -> Params:
     return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype) if s.dtype != jnp.int32
                         else jnp.full(s.shape, -1, jnp.int32), cache_shapes(cfg, b, cache_len))
@@ -426,9 +447,11 @@ def prefill(p: Params, tokens: jax.Array, cfg, numerics, cache_len: int,
 
 def decode_step(p: Params, token: jax.Array, pos: jax.Array, caches, cfg,
                 numerics, cross=None):
-    """token: (B, 1) int32; pos: scalar int32. Returns (logits, new caches)."""
+    """token: (B, 1) int32; pos: scalar int32 (uniform across the batch) or
+    (B,) per-slot positions (continuous batching: each slot decodes at its own
+    next position). Returns (logits, new caches)."""
     b = token.shape[0]
-    positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    pos, positions = attn._decode_positions(pos, b)
     h = _embed_inputs(p, token, positions, cfg, numerics)
     h, caches, _ = backbone(p, h, positions, cfg, numerics, mode="decode",
                             caches=caches, cross_kv=cross, pos=pos)

@@ -34,8 +34,10 @@ from repro.numerics.ops import get_numerics
 
 
 def make_serve_step(cfg) -> Callable:
-    """decode_step(params, token (B,1), pos (), caches, cross=None,
-    library=None) -> (logits, caches). ``library`` is a jit-traced pytree:
+    """decode_step(params, token (B,1), pos () or (B,), caches, cross=None,
+    library=None) -> (logits, caches). ``pos`` may be a scalar (uniform
+    batch) or a per-slot position vector — continuous batching decodes every
+    live slot at its *own* next position. ``library`` is a jit-traced pytree:
     swapping artifacts does not retrace, and the leaf obeys the caller's
     sharding/donation just like params."""
 
@@ -77,8 +79,20 @@ class ServeEngine:
                  library: InterpLibrary | None = None):
         self.cfg, self.params = cfg, params
         self.slots, self.cache_len = slots, cache_len
+        if cfg.sliding_window is not None and cache_len < cfg.sliding_window:
+            # the wrapped decode slot (pos % cache) would overwrite KV rows
+            # that are still inside the attention window — silent context
+            # loss on every wrap; serving must retain the full window
+            raise ValueError(
+                f"cache_len {cache_len} < sliding_window "
+                f"{cfg.sliding_window}: a windowed engine must retain the "
+                f"full attention window")
         if cfg.numerics != "interp":
-            library = None
+            if library is not None:
+                raise ValueError(
+                    f"library passed to ServeEngine but cfg.numerics="
+                    f"{cfg.numerics!r} never consults it; drop the library "
+                    f"or serve with numerics='interp'")
         elif library is None:
             # The library manifest replaces the hand-maintained warm-up kind
             # set: Explorer.compile() packs every table the interp numerics
@@ -101,6 +115,27 @@ class ServeEngine:
         self._decode = jax.jit(make_serve_step(cfg))
 
     def submit(self, req: Request):
+        """Enqueue a request; rejects work that cannot fit the slot cache.
+
+        Without a sliding window, decode writes KV rows at absolute positions
+        ``len(prompt) .. len(prompt) + max_new - 2``; anything past
+        ``cache_len - 1`` would be silently clamped by the dynamic-slice
+        update (overwriting the last row again and again), so it is an error
+        here rather than corruption later. Sliding-window engines wrap their
+        (full-window, checked at construction) cache: prompts beyond the
+        window prefill position-aligned to the wrap slots, and decode length
+        is unbounded.
+        """
+        if self.cfg.sliding_window is None:
+            if len(req.prompt) > self.cache_len:
+                raise ValueError(
+                    f"request {req.rid}: prompt length {len(req.prompt)} "
+                    f"exceeds cache_len {self.cache_len}")
+            if len(req.prompt) + req.max_new - 1 > self.cache_len:
+                raise ValueError(
+                    f"request {req.rid}: prompt ({len(req.prompt)}) + "
+                    f"max_new ({req.max_new}) overflows cache_len "
+                    f"{self.cache_len}")
         self.queue.append(req)
 
     def _admit(self):
@@ -110,10 +145,9 @@ class ServeEngine:
                 logits, cache1, _ = self._prefill1(self.params, r.prompt[None, :],
                                                    library=self.library)
                 # splice this request's cache rows into slot s of the pool
-                self.caches = jax.tree.map(
-                    lambda pool, one: jax.lax.dynamic_update_slice_in_dim(
-                        pool, one.astype(pool.dtype), s, axis=0),
-                    self.caches, cache1)
+                # (batch axis differs per segment: tf.splice_cache knows the
+                # stacked-layer layout)
+                self.caches = tf.splice_cache(self.cfg, self.caches, cache1, s)
                 tok = int(jnp.argmax(logits[0, -1]))
                 r.out.append(tok)
                 self.req[s] = r
@@ -127,25 +161,30 @@ class ServeEngine:
                 self.finished.append(r)
                 self.req[s] = None
                 self.cur[s] = -1
+                self.pos[s] = 0
 
     def step(self):
-        """One engine tick: admit, batch-decode every live slot, retire."""
+        """One engine tick: admit, batch-decode every live slot, retire.
+
+        Each slot decodes at its *own* next position (``self.pos`` is passed
+        as a per-slot vector): a freshly admitted short-prompt request keeps
+        writing KV/state rows contiguously after its prefill instead of at
+        the batch-wide max position. Empty slots decode garbage at position 0
+        that is ignored and overwritten on admission (standard slot padding).
+        """
         self._admit()
         if all(r is None for r in self.req):
             return False
-        # uniform-position decode per tick: all live slots share max(pos);
-        # empty slots decode garbage that is ignored (standard slot padding)
-        pos = int(self.pos.max())
         toks = jnp.asarray(np.maximum(self.cur, 0)[:, None], jnp.int32)
         logits, self.caches = self._decode(self.params, toks,
-                                           jnp.asarray(pos, jnp.int32),
+                                           jnp.asarray(self.pos, jnp.int32),
                                            self.caches, library=self.library)
         nxt = np.asarray(jnp.argmax(logits[:, 0], -1), np.int32)
         for s, r in enumerate(self.req):
             if r is not None:
                 r.out.append(int(nxt[s]))
                 self.cur[s] = int(nxt[s])
-                self.pos[s] = pos + 1
+                self.pos[s] += 1
         self._retire()
         return True
 

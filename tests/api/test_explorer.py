@@ -243,6 +243,99 @@ def test_min_regions_r_max_cutoff():
         assert ex.min_regions(spec, r_max=true_min) == true_min
 
 
+# ------------------------------------------------------------ fleet engine
+
+def test_fleet_compile_bit_identical_to_serial(tmp_path):
+    """Golden: the manifest compiled through the fleet engine equals the
+    serial per-kind path — same metadata, same ROM, same disk artifacts."""
+    with Explorer(ExploreConfig(cache_dir=str(tmp_path / "fleet"))) as ex:
+        lib_fleet = ex.compile()
+    with Explorer(ExploreConfig(cache_dir=str(tmp_path / "serial"),
+                                fleet=False)) as ex:
+        lib_serial = ex.compile()
+    assert lib_fleet.kinds == lib_serial.kinds
+    assert lib_fleet.metas == lib_serial.metas
+    np.testing.assert_array_equal(np.asarray(lib_fleet.coeffs),
+                                  np.asarray(lib_serial.coeffs))
+    fleet_files = sorted(p.name for p in (tmp_path / "fleet").glob("*.json"))
+    serial_files = sorted(p.name for p in (tmp_path / "serial").glob("*.json"))
+    assert fleet_files == serial_files and fleet_files
+
+
+def test_fleet_compile_warm_cache_short_circuits(tmp_path):
+    """A second fleet compile must load every table from cache (no new disk
+    writes, identical objects from the session memo)."""
+    cfg = ExploreConfig(cache_dir=str(tmp_path))
+    with Explorer(cfg) as ex:
+        lib1 = ex.compile(["recip", "exp2neg"])
+        stamp = {p.name: p.stat().st_mtime_ns for p in tmp_path.glob("*.json")}
+        lib2 = ex.compile(["recip", "exp2neg"])
+        assert {p.name: p.stat().st_mtime_ns
+                for p in tmp_path.glob("*.json")} == stamp
+    np.testing.assert_array_equal(np.asarray(lib1.coeffs),
+                                  np.asarray(lib2.coeffs))
+
+
+def test_min_regions_many_matches_serial():
+    """Lockstep fleet min-R == per-spec min_regions for every registered
+    kind, and the verdicts land in the shared feasibility LRU."""
+    from repro.api.config import DEFAULTS
+
+    specs = [ExploreConfig(kind=k, bits=8).spec() for k in DEFAULTS]
+    with Explorer() as ex:
+        many = ex.min_regions_many(specs)
+        assert ex.feasible_stats["computed"] > 0
+        # every probe the lockstep answered is now a cache hit
+        hits0 = ex.feasible_stats["hits"]
+        again = ex.min_regions_many(specs)
+        assert again == many
+        assert ex.feasible_stats["hits"] > hits0
+    with Explorer() as ex2:
+        serial = [ex2.min_regions(s) for s in specs]
+    assert many == serial
+
+
+def test_explore_sweep_primes_envelopes_through_fleet():
+    """The height sweep computes every (spec, R) envelope in one fleet pass
+    before the per-R loop — the loop itself only hits the cache."""
+    spec = get_spec("recip", 8)
+    with Explorer() as ex:
+        res = ex.explore(spec, r_lo=2, r_hi=5)
+        assert [e.lookup_bits for e in res] == [2, 3, 4, 5]
+        stats = ex.envelope_stats
+        assert stats["computed"] == 4
+        assert stats["hits"] >= 4  # explore_r served from the primed cache
+
+
+def test_mesh_device_spaces_never_poison_exact_cache():
+    """Under mesh > 1 the fleet front half runs in float32 on device; those
+    spaces must not be primed under the exact batched engine's cache keys —
+    feasibility answers must not depend on call order."""
+    spec = get_spec("recip", 8)
+    with Explorer(ExploreConfig(mesh=2)) as ex:
+        spaces = ex._envelopes_fleet([(spec, 3)])
+        assert len(spaces[0]) == 8
+        assert ex.envelope_stats["computed"] == 0
+        assert not ex._spaces
+        # the exact verdict is computed fresh, not read from f32 spaces
+        assert ex.feasible(spec, 3) == ex.feasible(spec, 3)
+
+
+def test_feasible_cache_lru_stats():
+    spec = get_spec("recip", 8)
+    with Explorer() as ex:
+        ex._FEAS_CACHE_CAP = 2
+        ex.feasible(spec, 3)
+        ex.feasible(spec, 3)
+        ex.feasible(spec, 4)
+        ex.feasible(spec, 5)  # evicts R=3
+        stats = ex.feasible_stats
+        assert stats["computed"] == 3
+        assert stats["hits"] == 1
+        assert stats["evictions"] == 1
+        assert len(ex._feasible) == 2
+
+
 # ------------------------------------------------------------ result object
 
 def test_result_frontier_pareto_and_min_regions():

@@ -148,7 +148,10 @@ def test_checkpoint_round_trip(lib, tmp_path):
 
 def test_save_load_round_trip(lib, tmp_path):
     path = lib.save(tmp_path / "lib")
-    assert path.exists() and path.with_suffix(".npz").exists()
+    assert path.exists()
+    import json as json_mod
+    man = json_mod.loads(path.read_text())
+    assert (tmp_path / man["coeffs_file"]).exists()  # content-addressed ROM
     back = load_library(path)
     assert back.metas == lib.metas
     np.testing.assert_array_equal(np.asarray(back.coeffs),
@@ -158,11 +161,66 @@ def test_save_load_round_trip(lib, tmp_path):
                                   np.asarray(lib.eval_int(codes, "gelu")))
 
 
+def test_save_crash_never_tears_existing_artifact(lib, tmp_path, monkeypatch):
+    """A crash mid-ROM-write must leave the previous npz/json pair intact:
+    the npz goes through a tmp path + atomic rename, never in-place."""
+    path = lib.save(tmp_path / "lib")
+    ref = np.asarray(lib.coeffs).copy()
+
+    def torn_savez(f, **kw):
+        f.write(b"PK\x03\x04 partial garbage")  # half-written archive ...
+        raise RuntimeError("simulated crash mid-save")  # ... then the crash
+
+    monkeypatch.setattr(np, "savez", torn_savez)
+    with pytest.raises(RuntimeError, match="simulated crash"):
+        lib.save(tmp_path / "lib")
+    monkeypatch.undo()
+    assert not list(tmp_path.glob("*.tmp"))  # no tmp litter
+    back = load_library(path)  # old pair still consistent + loadable
+    np.testing.assert_array_equal(np.asarray(back.coeffs), ref)
+    assert back.metas == lib.metas
+
+
+def test_resave_crash_between_rom_and_manifest_keeps_old_artifact(
+        lib, tmp_path, monkeypatch):
+    """Re-saving over an existing artifact: a crash after the new ROM lands
+    but before the manifest swap must leave the OLD pair loadable — the
+    manifest references its ROM by content-addressed name, so the old json
+    never points at the new bytes."""
+    import pathlib
+
+    path = lib.save(tmp_path / "lib")
+    ref = np.asarray(lib.coeffs).copy()
+    changed = InterpLibrary(np.asarray(lib.coeffs) + 1, lib.metas)
+
+    real_write = pathlib.Path.write_text
+
+    def crash_on_manifest(self, *a, **kw):
+        if self.name.endswith(".json.tmp"):
+            raise RuntimeError("simulated crash before manifest swap")
+        return real_write(self, *a, **kw)
+
+    monkeypatch.setattr(pathlib.Path, "write_text", crash_on_manifest)
+    with pytest.raises(RuntimeError, match="before manifest swap"):
+        changed.save(tmp_path / "lib")
+    monkeypatch.undo()
+    back = load_library(path)  # old manifest -> old ROM, untouched
+    np.testing.assert_array_equal(np.asarray(back.coeffs), ref)
+    # a completed re-save supersedes cleanly and prunes the stale ROM
+    path2 = changed.save(tmp_path / "lib")
+    np.testing.assert_array_equal(np.asarray(load_library(path2).coeffs),
+                                  ref + 1)
+    assert len(list(tmp_path.glob("lib.*.npz"))) == 1
+
+
 def test_load_detects_corrupt_rom(lib, tmp_path):
+    import json as json_mod
+
     path = lib.save(tmp_path / "lib")
     coeffs = np.asarray(lib.coeffs).copy()
     coeffs[0, 0, 2] += 1
-    np.savez(tmp_path / "lib.npz", coeffs=coeffs)
+    rom = json_mod.loads(path.read_text())["coeffs_file"]
+    np.savez(open(tmp_path / rom, "wb"), coeffs=coeffs)
     with pytest.raises(ValueError, match="corrupt"):
         load_library(path)
 

@@ -1,0 +1,302 @@
+"""Fleet engine ≡ per-spec batched engine (the equivalence oracle).
+
+The padded (P, B_max, N_max) stacked program must reproduce
+``core.batched``'s per-spec results bit for bit under ragged (mixed R,
+mixed N) padding — including the mask/sentinel handling at slot boundaries
+— and the lockstep decision procedure must reproduce ``run_decision`` per
+kind, candidate for candidate.
+"""
+import numpy as np
+import pytest
+
+from repro.core import batched, fleet
+from repro.core import designspace as dsp
+from repro.core.decision import (DecisionPolicy, IntervalSet,
+                                 alg1_interval_precision, run_decision)
+from repro.core.funcspec import get_spec
+
+
+def _same_float(a, b):
+    return (a == b) or (np.isnan(a) and np.isnan(b))
+
+
+def _assert_spaces_equal(got, want, ctx):
+    assert len(got) == len(want), ctx
+    for r, (g, w) in enumerate(zip(got, want)):
+        assert np.array_equal(g.big_m, w.big_m), (ctx, r)
+        assert np.array_equal(g.small_m, w.small_m), (ctx, r)
+        assert _same_float(g.a_lo, w.a_lo), (ctx, r)
+        assert _same_float(g.a_hi, w.a_hi), (ctx, r)
+        assert g.feasible == w.feasible, (ctx, r)
+
+
+def _rand_bounds(rng, b, n, slack=4):
+    L = rng.integers(0, 80, (b, n)).astype(np.int64)
+    return L, L + rng.integers(0, slack, (b, n))
+
+
+# ------------------------------------------------------ stacked front half
+
+def test_stacked_ragged_bitwise_matches_batched():
+    """Property: mixed-R, mixed-N probes through ONE padded program equal
+    the per-probe batched engine bit for bit (inf column sentinels lose
+    every reduction; pad region rows are sliced away)."""
+    rng = np.random.default_rng(0)
+    shapes = [(4, 16), (8, 8), (2, 32), (16, 4), (8, 16), (1, 32), (4, 4)]
+    bounds = [_rand_bounds(rng, b, n, slack=3) for b, n in shapes]
+    stack = fleet.stack_bounds(bounds)
+    assert stack.L.shape == (7, 16, 32)
+    spaces = fleet.fleet_region_spaces_stacked(stack)
+    for i, (L, U) in enumerate(bounds):
+        _assert_spaces_equal(spaces[i], batched.region_spaces(L, U), i)
+
+
+def test_stacked_degenerate_widths():
+    """n == 1 and n == 2 probes inside a ragged stack keep the trivial-space
+    semantics of the per-spec engine."""
+    rng = np.random.default_rng(1)
+    bounds = [_rand_bounds(rng, 8, 1), _rand_bounds(rng, 4, 2),
+              _rand_bounds(rng, 2, 16)]
+    spaces = fleet.fleet_region_spaces_stacked(fleet.stack_bounds(bounds))
+    for i, (L, U) in enumerate(bounds):
+        _assert_spaces_equal(spaces[i], batched.region_spaces(L, U), i)
+
+
+def test_fleet_region_spaces_real_specs_mixed_r():
+    """Real spec probes at several R (the sweep/min-R traffic pattern)."""
+    pairs = [("recip", 8, 2), ("recip", 8, 5), ("exp2", 8, 3),
+             ("silu", 8, 4), ("recip", 8, 8)]
+    bounds = [get_spec(k, b).region_bounds(r) for k, b, r in pairs]
+    out = fleet.fleet_region_spaces(bounds)
+    for i, (L, U) in enumerate(bounds):
+        _assert_spaces_equal(out[i], batched.region_spaces(L, U), pairs[i])
+
+
+def test_fleet_feasible_mask_matches_per_probe():
+    rng = np.random.default_rng(2)
+    bounds = [_rand_bounds(rng, 8, 8, slack=2) for _ in range(6)]
+    bounds += [get_spec("recip", 8).region_bounds(r) for r in (1, 2, 3, 8)]
+    mask = fleet.fleet_feasible_mask(bounds)
+    for i, (L, U) in enumerate(bounds):
+        assert mask[i] == bool(batched.regions_feasible_mask(L, U).all()), i
+
+
+# ------------------------------------------------------------- fleet alg1
+
+def _rand_interval_sets(rng, n_regions, max_iv, lo, hi):
+    sets = []
+    for _ in range(n_regions):
+        ivs = []
+        for _ in range(rng.integers(1, max_iv + 1)):
+            a, b = sorted(rng.integers(lo, hi, 2).tolist())
+            ivs.append((int(a), int(b)))
+        sets.append(IntervalSet(tuple(ivs)))
+    return sets
+
+
+@pytest.mark.parametrize("lo,hi", [(-50, 50), (0, 1 << 20), (-(1 << 40), -3),
+                                   (-5, 5), (1, 2)])
+def test_fleet_alg1_bit_identical(lo, hi):
+    """Property: the vectorized Algorithm 1 picks the same (bits, shift,
+    signed) as the scalar routine on random interval unions spanning signs,
+    zeros and wide magnitudes."""
+    rng = np.random.default_rng(abs(lo) + abs(hi))
+    for trial in range(40):
+        sets = _rand_interval_sets(rng, int(rng.integers(1, 9)), 3, lo, hi)
+        assert fleet.fleet_alg1(sets) == alg1_interval_precision(sets), sets
+
+
+def test_fleet_alg1_zero_only_sets():
+    sets = [IntervalSet(((0, 0),)), IntervalSet(((0, 4),))]
+    assert fleet.fleet_alg1(sets) == alg1_interval_precision(sets)
+
+
+def test_fleet_alg1_huge_values_fall_back_to_scalar():
+    sets = [IntervalSet(((1 << 55, (1 << 55) + 7),))]
+    assert fleet.fleet_alg1(sets) == alg1_interval_precision(sets)
+
+
+# --------------------------------------------- batched helpers (fleet ops)
+
+def test_a_window_matches_a_candidates_set():
+    spec = get_spec("recip", 8)
+    L, U = spec.region_bounds(3)
+    for space in batched.region_spaces(L, U):
+        for k in (0, 4, 9, 14):
+            vals = dsp.a_candidates(space, k)
+            win = dsp.a_window(space, k)
+            if not vals:
+                assert win is None
+                continue
+            assert sorted(vals) == list(range(win[0], win[1] + 1))
+            assert list(dsp.a_magnitude_order(*win)) == vals
+
+
+def test_candidates_feasible_matches_design_candidates():
+    """The wave-based existence check agrees with full generation on every
+    region, including infeasible (exhausting) ones."""
+    spec = get_spec("recip", 8)
+    for lookup_bits in (1, 2, 3):
+        L, U = spec.region_bounds(lookup_bits)
+        spaces = batched.region_spaces(L, U)
+        for k in (0, 2, 5, 8):
+            for force_linear in (False, True):
+                full = batched.design_candidates(spaces, L, U, k, force_linear)
+                okv = batched.candidates_feasible(spaces, L, U, k, force_linear)
+                assert list(okv) == [len(c) > 0 for c in full], \
+                    (lookup_bits, k, force_linear)
+
+
+def test_trunc_candidates_vector_k_and_sq_matches_scalar():
+    """Per-row (k, sq_t) vectors reproduce per-kind scalar calls: stacking
+    two kinds' regions at different ladder states is the fleet trunc step."""
+    spec_a = get_spec("recip", 8)
+    spec_b = get_spec("exp2", 8)
+    r = 3
+    parts = []
+    for spec, k, sq_t in ((spec_a, 6, 0), (spec_b, 9, 2)):
+        L, U = spec.region_bounds(r)
+        ds = dsp.minimal_k(spec, r, engine="batched")
+        assert ds is not None
+        a_sets = [[c.a for c in row] for row in ds.candidates]
+        parts.append((L, U, ds.k, a_sets, sq_t))
+    for lin_t in (0, 1):
+        ref = []
+        for L, U, k, a_sets, sq_t in parts:
+            ref.extend(batched.trunc_candidates(L, U, k, a_sets, sq_t, lin_t))
+        b = 1 << r
+        got = batched.trunc_candidates(
+            np.concatenate([p[0] for p in parts]),
+            np.concatenate([p[1] for p in parts]),
+            np.repeat([p[2] for p in parts], b),
+            [row for p in parts for row in p[3]],
+            np.repeat([p[4] for p in parts], b), lin_t)
+        assert got == ref, lin_t
+
+
+# ------------------------------------------------------ lockstep decisions
+
+def test_fleet_decisions_bit_identical_to_run_decision():
+    """The tentpole equivalence: a same-shape probe group through the
+    lockstep procedure yields each kind's serial design exactly."""
+    kinds = ["recip", "exp2", "log2", "silu", "sigmoid", "gelu"]
+    specs = [get_spec(k, 8) for k in kinds]
+    r = 3
+    bounds = [s.region_bounds(r) for s in specs]
+    spaces = fleet.fleet_region_spaces(bounds)
+    results = fleet.fleet_decisions(specs, r, bounds, spaces,
+                                    policy=DecisionPolicy())
+    for spec, res in zip(specs, results):
+        ref = run_decision(spec, r, engine="batched")
+        assert (res is None) == (ref is None), spec.name
+        if ref is None:
+            continue
+        d1, r1 = ref
+        d2, r2 = res
+        assert (d1.k, d1.degree, d1.sq_trunc, d1.lin_trunc) == \
+            (d2.k, d2.degree, d2.sq_trunc, d2.lin_trunc), spec.name
+        assert d1.lut_widths == d2.lut_widths, spec.name
+        assert np.array_equal(d1.a, d2.a), spec.name
+        assert np.array_equal(d1.b, d2.b), spec.name
+        assert np.array_equal(d1.c, d2.c), spec.name
+        assert r1.linear_possible == r2.linear_possible, spec.name
+
+
+@pytest.mark.parametrize("degree", [1, 2])
+def test_fleet_decisions_forced_degree(degree):
+    specs = [get_spec("recip", 8), get_spec("exp2", 8)]
+    r = 4
+    bounds = [s.region_bounds(r) for s in specs]
+    spaces = fleet.fleet_region_spaces(bounds)
+    results = fleet.fleet_decisions(specs, r, bounds, spaces, degree=degree,
+                                    policy=DecisionPolicy())
+    for spec, res in zip(specs, results):
+        ref = run_decision(spec, r, degree=degree, engine="batched")
+        assert (res is None) == (ref is None), spec.name
+        if ref is not None:
+            assert np.array_equal(ref[0].c, res[0].c), spec.name
+            assert ref[0].degree == res[0].degree == degree
+
+
+def test_fleet_decisions_policy_without_truncation():
+    """A pallas-style policy (no truncation maximization) locksteps too."""
+    pol = DecisionPolicy(maximize_sq_trunc=False, maximize_lin_trunc=False)
+    specs = [get_spec("recip", 8), get_spec("sigmoid", 8)]
+    r = 3
+    bounds = [s.region_bounds(r) for s in specs]
+    spaces = fleet.fleet_region_spaces(bounds)
+    results = fleet.fleet_decisions(specs, r, bounds, spaces, policy=pol)
+    for spec, res in zip(specs, results):
+        ref = run_decision(spec, r, engine="batched", policy=pol)
+        assert (res is None) == (ref is None)
+        if ref is not None:
+            assert ref[0].sq_trunc == res[0].sq_trunc == 0
+            assert np.array_equal(ref[0].c, res[0].c)
+
+
+# ------------------------------------------------- pool lifecycle (PR fix)
+
+def test_region_pool_clean_exit_drains_work():
+    """Clean context exit close()s the pool (letting submitted work drain)
+    instead of terminate()ing it; the exception path still terminates."""
+    from repro.core.pmap import RegionPool
+
+    with RegionPool(2) as p:
+        out = p.map(abs, [-3, -1, 4, -7])
+        assert out == [3, 1, 4, 7]
+    assert p._pool is None
+    p2 = RegionPool(2)
+    p2.__enter__()
+    try:
+        raise RuntimeError("boom")
+    except RuntimeError:
+        p2.__exit__(RuntimeError, None, None)
+    assert p2._pool is None
+
+
+# ----------------------------------------------------- device-path (f32)
+
+def test_fleet_device_path_steep_table_a_interval():
+    """Regression: TILE-pad t-slots (and other widths' sentinel columns)
+    must be sliced off before the device a-interval reduction — their
+    ~±2^30/(2e) envelopes would otherwise win the dd max against steep
+    tables and inflate a_lo."""
+    from repro.kernels.dspace.ops import (fleet_region_envelopes_device,
+                                          region_envelopes_device)
+
+    x = np.arange(16, dtype=np.int64)
+    L = (-(1 << 24) * x).reshape(1, 16)
+    U = L + 8
+    one = region_envelopes_device(L, U, interpret=True)
+    fl = fleet_region_envelopes_device(L[None], U[None], shards=1,
+                                       interpret=True)
+    np.testing.assert_allclose(fl[2], one[2], rtol=1e-5)  # a_lo
+    np.testing.assert_allclose(fl[3], one[3], rtol=1e-5)  # a_hi
+    # ragged stack: sharing a device call with a narrower probe must not
+    # change either probe's results (no cross-width sentinel contamination
+    # — each width group gets its own kernel launch)
+    nb = _rand_bounds(np.random.default_rng(5), 4, 8)
+    ragged = fleet.fleet_region_spaces_device(
+        fleet.stack_bounds([(L, U), nb]), interpret=True)
+    for i, b in enumerate([(L, U), nb]):
+        alone = fleet.fleet_region_spaces_device(fleet.stack_bounds([b]),
+                                                 interpret=True)[0]
+        for d, e in zip(ragged[i], alone):
+            assert d.feasible == e.feasible, i
+            assert np.array_equal(d.big_m, e.big_m), i
+            assert _same_float(d.a_lo, e.a_lo) and _same_float(d.a_hi, e.a_hi), i
+
+
+def test_fleet_device_path_interpret_matches_exact_verdicts():
+    """The stacked device program (interpret mode off-TPU) agrees with the
+    exact engine on feasibility and to f32 tolerance on envelopes."""
+    pairs = [("recip", 8, 3), ("exp2", 8, 4)]
+    bounds = [get_spec(k, b).region_bounds(r) for k, b, r in pairs]
+    stack = fleet.stack_bounds(bounds)
+    dev = fleet.fleet_region_spaces_device(stack, interpret=True)
+    exact = fleet.fleet_region_spaces_stacked(stack)
+    for i in range(len(bounds)):
+        for d, e in zip(dev[i], exact[i]):
+            assert d.feasible == e.feasible, pairs[i]
+            np.testing.assert_allclose(d.big_m[1:], e.big_m[1:], rtol=2e-5)
+            np.testing.assert_allclose(d.small_m[1:], e.small_m[1:], rtol=2e-5)
