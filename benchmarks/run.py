@@ -13,12 +13,14 @@
 | fig3_lub_sweep    | Figs 2-3 area-delay vs LUT height      |
 | kernels_bench     | TPU adaptation: kernels + table accuracy |
 | serve_path        | fused-library vs per-table decode numerics |
+| decode_fused      | fused serve tick vs serial decode path |
 | roofline_report   | SRoofline table from the dry-run sweep |
 
 After a run that produced them, the claim21 + batched_engine rows are
 folded into ``artifacts/bench/BENCH_2.json``, the serve_path rows into
-``BENCH_3.json``, and the fleet_compile rows into ``BENCH_4.json`` — the
-per-PR perf snapshots tracked by the CI bench-smoke job.
+``BENCH_3.json``, the fleet_compile rows into ``BENCH_4.json``, and the
+decode_fused rows into ``BENCH_5.json`` — the per-PR perf snapshots
+tracked by the CI bench-smoke job.
 """
 from __future__ import annotations
 
@@ -42,6 +44,9 @@ _SNAPSHOTS = {
     },
     "BENCH_4.json": {
         "fleet_compile": ("fleet_compile", "fleet_min_regions"),
+    },
+    "BENCH_5.json": {
+        "decode_fused": ("decode_fused",),
     },
 }
 
@@ -78,15 +83,17 @@ def main() -> None:
     if args.quick:
         os.environ["BENCH_QUICK"] = "1"
 
-    from benchmarks import (batched_engine, claim21, fig3_lub_sweep,
-                            fleet_compile, kernels_bench, roofline_report,
-                            scaling, serve_path, table1, table2)
+    from benchmarks import (batched_engine, claim21, decode_fused,
+                            fig3_lub_sweep, fleet_compile, kernels_bench,
+                            roofline_report, scaling, serve_path, table1,
+                            table2)
     mods = {
         "table1": table1, "table2": table2, "claim21": claim21,
         "scaling": scaling, "batched_engine": batched_engine,
         "fleet_compile": fleet_compile,
         "fig3_lub_sweep": fig3_lub_sweep, "kernels_bench": kernels_bench,
-        "serve_path": serve_path, "roofline_report": roofline_report,
+        "serve_path": serve_path, "decode_fused": decode_fused,
+        "roofline_report": roofline_report,
     }
     only = set(args.only.split(",")) if args.only else None
     if only and not only <= set(mods):

@@ -141,6 +141,18 @@ class TableDesign:
             c_meta=CoeffMeta(**d["c_meta"]),
         )
 
+    @property
+    def fits_int32(self) -> bool:
+        """Whether every coefficient fits the kernels' int32 ROM. Designs
+        that don't (e.g. wide-output reciprocals) evaluate on the emulated
+        int64 jnp path (DESIGN.md §7.5, ``interp_eval_wide``)."""
+        fits = self._device_cache.get("fits")
+        if fits is None:
+            mat = np.stack([self.a, self.b, self.c], axis=1)
+            fits = bool(np.abs(mat).max() < 2**31)
+            self._device_cache["fits"] = fits
+        return fits
+
     def packed_coeffs(self) -> np.ndarray:
         """(2^R, 3) int32 coefficient matrix for the Pallas kernels.
 
@@ -181,4 +193,26 @@ class TableDesign:
             if isinstance(dev, jax.core.Tracer):
                 return dev
             self._device_cache["coeffs"] = dev
+        return dev
+
+    def device_coeffs_wide(self):
+        """Cached device-side (2^R, 3, 2) int32 [hi, lo] word pairs of the
+        int64 coefficients — the operand of ``interp_eval_wide``, the exact
+        evaluation path for designs whose coefficients exceed int32."""
+        import jax
+        import jax.numpy as jnp  # local: core stays importable without jax
+
+        dev = self._device_cache.get("wide")
+        if dev is None:
+            mat = self._device_cache.get("wide_host")
+            if mat is None:
+                m64 = np.stack([self.a, self.b, self.c], axis=1)
+                hi = (m64 >> 32).astype(np.int32)
+                lo = (m64 & 0xFFFFFFFF).astype(np.uint32).view(np.int32)
+                mat = np.stack([hi, lo], axis=-1)
+                self._device_cache["wide_host"] = mat
+            dev = jnp.asarray(mat)
+            if isinstance(dev, jax.core.Tracer):  # see device_coeffs
+                return dev
+            self._device_cache["wide"] = dev
         return dev

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.interp.kernel import _lut_rom
 from repro.kernels.softmax.kernel import _lut
 
 BLOCK_Q = 128
@@ -30,19 +31,21 @@ NEG = -1e30
 M_FLOOR = -1e20
 
 
-def _table_exp_neg(t, coeffs, meta):
-    """2^(-t) for t >= 0 via the exp2neg table (exact power-of-2 scaling)."""
+def _table_exp_neg(t, lut, meta):
+    """2^(-t) for t >= 0 via the exp2neg table (exact power-of-2 scaling).
+    ``lut``: int32 codes -> integer table output (per-table or library-ROM
+    closure — one copy of the glue for both kernel variants)."""
     t = jnp.minimum(t, 126.0)
     n = jnp.floor(t)
     frac = t - n
     eb = meta["in_bits"]
     codes = jnp.clip(jnp.round(frac * (1 << eb)).astype(jnp.int32),
                      0, (1 << eb) - 1)
-    tab = _lut(codes, coeffs, **meta["eval"]).astype(jnp.float32)
+    tab = lut(codes).astype(jnp.float32)
     return tab * (2.0 ** -meta["out_bits"]) * jnp.exp2(-n)
 
 
-def _table_recip(s, coeffs, meta):
+def _table_recip(s, lut, meta):
     """1/s for s > 0 via IEEE-754 mantissa split + reciprocal table."""
     bits = jax.lax.bitcast_convert_type(s, jnp.int32)
     expo = jnp.bitwise_and(jax.lax.shift_right_logical(bits, 23), 255) - 127
@@ -51,19 +54,24 @@ def _table_recip(s, coeffs, meta):
     half = 1 << (23 - rb - 1)
     rcodes = jnp.clip(jax.lax.shift_right_logical(mant + half, 23 - rb),
                       0, (1 << rb) - 1)
-    rtab = _lut(rcodes, coeffs, **meta["eval"]).astype(jnp.float32)
+    rtab = lut(rcodes).astype(jnp.float32)
     return rtab * (2.0 ** -(rb + 1)) * jnp.exp2(-expo.astype(jnp.float32))
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, ecoef_ref, rcoef_ref, out_ref, *,
-                  causal: bool, scale: float, exp_meta: dict,
-                  recip_meta: dict, block_k: int):
-    qi = pl.program_id(1)
-    q = q_ref[0].astype(jnp.float32) * scale  # (BQ, D)
+def _flash_loop(q, k_ref, v_ref, out_ref, lut_exp, lut_recip, exp_meta: dict,
+                recip_meta: dict, block_k: int, mask_chunk, chunk_live):
+    """The online-softmax flash recurrence shared by the per-table and
+    library-bound kernels: kv-chunked score/renormalize/PV loop with
+    `pl.when`-style liveness skipping, then the reciprocal epilogue.
+
+    ``mask_chunk(j, s)`` masks one (BQ, BK) score chunk (or returns it
+    untouched); ``chunk_live(j)`` returns a traced liveness bool for the
+    ``lax.cond`` skip, or None to always run the chunk. One copy of the
+    m/l/acc update — the two kernel variants differ only in masking and
+    table-read closures and cannot drift."""
     sk = k_ref.shape[1]
     nk = sk // block_k
     bq = q.shape[0]
-    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
 
     def body(j, carry):
         m_i, l_i, acc = carry
@@ -72,14 +80,11 @@ def _flash_kernel(q_ref, k_ref, v_ref, ecoef_ref, rcoef_ref, out_ref, *,
         vb = jax.lax.dynamic_slice_in_dim(v_ref[0], j * block_k, block_k)
         s = jax.lax.dot_general(q, kb, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)  # (BQ, BK)
-        if causal:
-            k_pos = j * block_k + jax.lax.broadcasted_iota(
-                jnp.int32, (1, block_k), 1)
-            s = jnp.where(q_pos >= k_pos, s, NEG)
+        s = mask_chunk(j, s)
         m_new = jnp.maximum(jnp.maximum(m_i, jnp.max(s, -1, keepdims=True)),
                             M_FLOOR)
-        p = _table_exp_neg((m_new - s) * LOG2E, ecoef_ref[...], exp_meta)
-        corr = _table_exp_neg((m_new - m_i) * LOG2E, ecoef_ref[...], exp_meta)
+        p = _table_exp_neg((m_new - s) * LOG2E, lut_exp, exp_meta)
+        corr = _table_exp_neg((m_new - m_i) * LOG2E, lut_exp, exp_meta)
         l_new = l_i * corr + jnp.sum(p, -1, keepdims=True)
         pv = jax.lax.dot_general(p.astype(vb.dtype), vb,
                                  (((1,), (0,)), ((), ())),
@@ -87,18 +92,97 @@ def _flash_kernel(q_ref, k_ref, v_ref, ecoef_ref, rcoef_ref, out_ref, *,
         return m_new, l_new, acc * corr + pv
 
     def guarded(j, carry):
-        if not causal:
+        live = chunk_live(j)
+        if live is None:
             return body(j, carry)
-        # B1 inside the kernel: skip chunks strictly above the diagonal
-        live = (j * block_k) <= (qi * bq + bq - 1)
         return jax.lax.cond(live, lambda c: body(j, c), lambda c: c, carry)
 
     init = (jnp.full((bq, 1), M_FLOOR, jnp.float32),
             jnp.zeros((bq, 1), jnp.float32),
             jnp.zeros((bq, v_ref.shape[-1]), jnp.float32))
     m_i, l_i, acc = jax.lax.fori_loop(0, nk, guarded, init)
-    recip = _table_recip(jnp.maximum(l_i, 1e-30), rcoef_ref[...], recip_meta)
+    recip = _table_recip(jnp.maximum(l_i, 1e-30), lut_recip, recip_meta)
     out_ref[0] = (acc * recip).astype(out_ref.dtype)
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, ecoef_ref, rcoef_ref, out_ref, *,
+                  causal: bool, scale: float, exp_meta: dict,
+                  recip_meta: dict, block_k: int):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale  # (BQ, D)
+    bq = q.shape[0]
+    q_pos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, 1), 0)
+
+    def mask_chunk(j, s):
+        if not causal:
+            return s
+        k_pos = j * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (1, block_k), 1)
+        return jnp.where(q_pos >= k_pos, s, NEG)
+
+    def chunk_live(j):
+        if not causal:
+            return None
+        # B1 inside the kernel: skip chunks strictly above the diagonal
+        return (j * block_k) <= (qi * bq + bq - 1)
+
+    _flash_loop(q, k_ref, v_ref, out_ref,
+                lambda c: _lut(c, ecoef_ref[...], **exp_meta["eval"]),
+                lambda c: _lut(c, rcoef_ref[...], **recip_meta["eval"]),
+                exp_meta, recip_meta, block_k, mask_chunk, chunk_live)
+
+
+def _flash_lib_kernel(q_ref, k_ref, v_ref, qpos_ref, kpos_ref, rom_ref,
+                      out_ref, *, causal: bool, window: int | None,
+                      scale: float, r_max: int, exp_meta: dict,
+                      recip_meta: dict, block_k: int):
+    """Library-bound flash attention with explicit position operands.
+
+    Both transcendentals read the whole-library ROM (`_lut_rom` at their
+    static func ids) — the approximation datapath is inlined into the
+    attention kernel, not a lookup service between ops. ``qpos_ref`` /
+    ``kpos_ref`` carry *absolute* positions per row: decode against a
+    partially-filled KV cache masks dead slots (pos < 0), applies causality
+    by position (not buffer index), and honors a sliding window — the same
+    contract as ``models.attention._mask``.
+    """
+    q = q_ref[0].astype(jnp.float32) * scale  # (BQ, D)
+    qp = qpos_ref[0]  # (BQ,) int32, -1 = padded query row
+    rom = rom_ref[...]
+    imax = jnp.iinfo(jnp.int32).max
+
+    def kpos(j):
+        return jax.lax.dynamic_slice_in_dim(kpos_ref[0], j * block_k, block_k)
+
+    def mask_chunk(j, s):
+        kpb = kpos(j)
+        ok = (kpb >= 0)[None, :]
+        if causal:
+            ok = jnp.logical_and(ok, qp[:, None] >= kpb[None, :])
+        if window is not None:
+            ok = jnp.logical_and(ok, qp[:, None] - kpb[None, :] < window)
+        return jnp.where(ok, s, NEG)
+
+    def chunk_live(j):
+        # chunk liveness from the position operands (the per-table kernel's
+        # B1 by grid index can't see cache occupancy): dead if every slot is
+        # empty, entirely in the causal future, or outside the window
+        kpb = kpos(j)
+        need = jnp.any(kpb >= 0)
+        if causal:
+            need = jnp.logical_and(
+                need, jnp.min(jnp.where(kpb < 0, imax, kpb)) <= jnp.max(qp))
+        if window is not None:
+            qmin = jnp.min(jnp.where(qp < 0, imax, qp))
+            need = jnp.logical_and(need, jnp.max(kpb) > qmin - window)
+        return need
+
+    _flash_loop(q, k_ref, v_ref, out_ref,
+                lambda c: _lut_rom(c, rom, fid=exp_meta["fid"], r_max=r_max,
+                                   **exp_meta["eval"]),
+                lambda c: _lut_rom(c, rom, fid=recip_meta["fid"],
+                                   r_max=r_max, **recip_meta["eval"]),
+                exp_meta, recip_meta, block_k, mask_chunk, chunk_live)
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
@@ -131,3 +215,48 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
         out_shape=jax.ShapeDtypeStruct((n, sq, d), v.dtype),
         interpret=interpret,
     )(q, k, v, exp_coeffs, recip_coeffs)
+
+
+def flash_attention_lib(q: jax.Array, k: jax.Array, v: jax.Array,
+                        q_pos: jax.Array, kv_pos: jax.Array, rom: jax.Array,
+                        exp_meta: dict, recip_meta: dict, *, r_max: int,
+                        causal: bool = True, window: int | None = None,
+                        scale: float | None = None, kv_group: int = 1,
+                        block_q: int = BLOCK_Q, block_k: int = BLOCK_K,
+                        interpret: bool = True) -> jax.Array:
+    """q: (N, Sq, D); k: (N // kv_group, Sk, Dk); v: (N // kv_group, Sk,
+    Dv); q_pos: (N, Sq) int32 (-1 = padded row); kv_pos: (N // kv_group,
+    Sk) int32 (-1 = dead cache slot); rom: the library ROM flattened to
+    (F * r_max, 3). N = batch x query heads; GQA is expressed through
+    ``kv_group`` = heads per kv head — query program i reads kv stripe
+    ``i // kv_group`` via the BlockSpec index map, so grouped K/V are
+    never materialized per query head. Sq % block_q == 0, Sk % block_k == 0.
+    """
+    n, sq, d = q.shape
+    sk, dv = k.shape[1], v.shape[-1]
+    g = kv_group
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk)
+    assert n % g == 0 and k.shape[0] == n // g, (n, g, k.shape)
+    assert q_pos.shape == (n, sq) and kv_pos.shape == (n // g, sk), \
+        (q_pos.shape, kv_pos.shape)
+    scale = (d ** -0.5) if scale is None else scale
+    kernel = functools.partial(_flash_lib_kernel, causal=causal,
+                               window=window, scale=scale, r_max=r_max,
+                               exp_meta=exp_meta, recip_meta=recip_meta,
+                               block_k=block_k)
+    n_rows = rom.shape[0]
+    return pl.pallas_call(
+        kernel,
+        grid=(n, sq // block_q),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, sk, k.shape[-1]), lambda i, j: (i // g, 0, 0)),
+            pl.BlockSpec((1, sk, dv), lambda i, j: (i // g, 0, 0)),
+            pl.BlockSpec((1, block_q), lambda i, j: (i, j)),
+            pl.BlockSpec((1, sk), lambda i, j: (i // g, 0)),
+            pl.BlockSpec((n_rows, 3), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, dv), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, sq, dv), v.dtype),
+        interpret=interpret,
+    )(q, k, v, q_pos.astype(jnp.int32), kv_pos.astype(jnp.int32), rom)

@@ -1,14 +1,90 @@
-"""Jitted public wrapper for the table-numerics flash-attention kernel."""
+"""Jitted public wrappers for the table-numerics flash-attention kernels
+(per-table designs, or the whole-library ROM with explicit positions)."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.table import TableDesign
-from repro.kernels.flashattn.kernel import flash_attention
-from repro.kernels.flashattn.ref import flash_attention_ref
-from repro.kernels.softmax.ops import _meta
+from repro.kernels.flashattn.kernel import flash_attention, flash_attention_lib
+from repro.kernels.flashattn.ref import (flash_attention_lib_ref,
+                                         flash_attention_ref)
+from repro.kernels.softmax.ops import _meta, lib_meta
 from repro.api import get_table
+
+
+def _block(n: int) -> int:
+    """Largest power-of-two tile in [8, 128] dividing n (n % 8 == 0)."""
+    for b in (128, 64, 32, 16):
+        if n % b == 0:
+            return b
+    return 8
+
+
+def attention_fused_library(q: jax.Array, k: jax.Array, v: jax.Array,
+                            library, *, causal: bool = True,
+                            scale: float | None = None,
+                            window: int | None = None,
+                            q_pos: jax.Array | None = None,
+                            kv_pos: jax.Array | None = None,
+                            use_kernel: bool | None = None,
+                            interpret: bool | None = None) -> jax.Array:
+    """(B, Sq, H, D) attention through the library-bound fused kernel.
+
+    The library ROM is the single table operand (exp + recip read at their
+    static func ids in-kernel). ``q_pos`` / ``kv_pos``: (B, S*) absolute
+    positions (-1 = dead KV slot), the decode-against-cache contract of
+    ``models.attention.attention_core``; ``None`` means the training layout
+    (``arange``). GQA passes k/v with their own (fewer) heads — the kernel
+    maps each query-head program onto its kv stripe by index (never
+    materializing the expansion); Dk may differ from Dv (MLA).
+    ``use_kernel=None`` picks the Pallas kernel on TPU and the unchunked
+    jnp oracle elsewhere; the kernel path pads Sq/Sk to tile multiples
+    with masked (-1) positions.
+    """
+    b, sq, h, d = q.shape
+    sk, kvh, dv = k.shape[1], k.shape[2], v.shape[-1]
+    assert h % kvh == 0, (h, kvh)
+    g = h // kvh
+    em, rm = lib_meta(library, "exp2neg"), lib_meta(library, "recip")
+    if q_pos is None:
+        q_pos = jnp.broadcast_to(jnp.arange(sq, dtype=jnp.int32), (b, sq))
+    if kv_pos is None:
+        kv_pos = jnp.broadcast_to(jnp.arange(sk, dtype=jnp.int32), (b, sk))
+    qn = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kn = k.transpose(0, 2, 1, 3).reshape(b * kvh, sk, k.shape[-1])
+    vn = v.transpose(0, 2, 1, 3).reshape(b * kvh, sk, dv)
+    qp = jnp.repeat(q_pos.astype(jnp.int32), h, axis=0)  # (B*H, Sq)
+    kp = jnp.repeat(kv_pos.astype(jnp.int32), kvh, axis=0)
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu"
+    if not use_kernel:
+        # the unchunked oracle takes one kv stripe per query row
+        if g > 1:
+            kn = jnp.repeat(kn.reshape(b, kvh, sk, -1), g, axis=1
+                            ).reshape(b * h, sk, -1)
+            vn = jnp.repeat(vn.reshape(b, kvh, sk, -1), g, axis=1
+                            ).reshape(b * h, sk, -1)
+            kp = jnp.repeat(kp, g, axis=0)
+        o = flash_attention_lib_ref(qn, kn, vn, qp, kp, library.coeffs, em,
+                                    rm, causal=causal, window=window,
+                                    scale=scale)
+        return o.reshape(b, h, sq, dv).transpose(0, 2, 1, 3)
+    pad_q, pad_k = (-sq) % 8, (-sk) % 8
+    if pad_q:
+        qn = jnp.pad(qn, ((0, 0), (0, pad_q), (0, 0)))
+        qp = jnp.pad(qp, ((0, 0), (0, pad_q)), constant_values=-1)
+    if pad_k:
+        kn = jnp.pad(kn, ((0, 0), (0, pad_k), (0, 0)))
+        vn = jnp.pad(vn, ((0, 0), (0, pad_k), (0, 0)))
+        kp = jnp.pad(kp, ((0, 0), (0, pad_k)), constant_values=-1)
+    interpret = (jax.default_backend() != "tpu") if interpret is None else interpret
+    o = flash_attention_lib(
+        qn, kn, vn, qp, kp, library.coeffs.reshape(-1, 3), em, rm,
+        r_max=library.coeffs.shape[1], causal=causal, window=window,
+        scale=scale, kv_group=g, block_q=_block(sq + pad_q),
+        block_k=_block(sk + pad_k), interpret=interpret)
+    return o[:, :sq].reshape(b, h, sq, dv).transpose(0, 2, 1, 3)
 
 
 def attention_fused(q: jax.Array, k: jax.Array, v: jax.Array, *,

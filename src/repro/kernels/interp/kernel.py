@@ -38,12 +38,95 @@ def _interp_kernel(codes_ref, coeffs_ref, out_ref, *, eval_bits: int, k: int,
         onehot, coeffs, (((1,), (0,)), ((), ())),
         preferred_element_type=jnp.int32,
     ).reshape(codes.shape + (3,))
+    out_ref[...] = poly_tail(sel, x, k=k, sq_trunc=sq_trunc,
+                             lin_trunc=lin_trunc, degree=degree)
+
+
+def poly_tail(sel: jax.Array, x: jax.Array, *, k: int, sq_trunc: int,
+              lin_trunc: int, degree: int) -> jax.Array:
+    """The Figure-1 fixed-point tail shared by every in-kernel table read:
+    truncated square/linear terms, int32 Horner accumulate, arithmetic
+    shift by k. One copy — the per-table (`_lut`) and library-ROM
+    (`_lut_rom`) gathers feed the same datapath and cannot drift."""
     xs = jax.lax.shift_left(jax.lax.shift_right_logical(x, sq_trunc), sq_trunc)
     xl = jax.lax.shift_left(jax.lax.shift_right_logical(x, lin_trunc), lin_trunc)
     acc = sel[..., 1] * xl + sel[..., 2]
     if degree == 2:
         acc = acc + sel[..., 0] * xs * xs
-    out_ref[...] = jax.lax.shift_right_arithmetic(acc, k)
+    return jax.lax.shift_right_arithmetic(acc, k)
+
+
+def _lut(codes: jax.Array, coeffs: jax.Array, *, eval_bits: int, k: int,
+         sq_trunc: int, lin_trunc: int, degree: int) -> jax.Array:
+    """One-hot table evaluation on int32 codes (any 2-D shape): region
+    index from the code's top bits, a one-hot MXU contraction over the
+    coefficient rows, then the shared fixed-point tail."""
+    n_regions = coeffs.shape[0]
+    r = jax.lax.shift_right_logical(codes, eval_bits)
+    x = jnp.bitwise_and(codes, (1 << eval_bits) - 1)
+    flat_r = r.reshape(-1)
+    iota = jax.lax.broadcasted_iota(jnp.int32, (flat_r.shape[0], n_regions), 1)
+    onehot = (flat_r[:, None] == iota).astype(jnp.int32)
+    sel = jax.lax.dot_general(onehot, coeffs, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.int32
+                              ).reshape(codes.shape + (3,))
+    return poly_tail(sel, x, k=k, sq_trunc=sq_trunc, lin_trunc=lin_trunc,
+                     degree=degree)
+
+
+def _lut_rom(codes: jax.Array, rom: jax.Array, *, fid: int, r_max: int,
+             eval_bits: int, k: int, sq_trunc: int, lin_trunc: int,
+             degree: int) -> jax.Array:
+    """Table evaluation against a library ROM (static function id).
+
+    ``rom`` is an :class:`repro.api.InterpLibrary` coefficient ROM flattened
+    to ``(F * r_max, 3)`` int32; rows ``[fid * r_max, fid * r_max + 2^R)``
+    hold the function's ``packed_coeffs`` and the padding rows are zero.
+    ``fid``/``r_max`` are static, so the function's rows are a *static
+    slice* of the ROM operand and the read is exactly ``_lut`` on them —
+    bit-identical to the per-table kernels, and the one-hot contraction
+    pays r_max columns, not F·r_max. The consuming fused kernels (softmax /
+    rmsnorm / flashattn) thread the whole library ROM as ONE operand and
+    evaluate each transcendental in-registers instead of launching a
+    standalone table kernel between ops.
+    """
+    rows = jax.lax.slice_in_dim(rom, fid * r_max, (fid + 1) * r_max)
+    return _lut(codes, rows, eval_bits=eval_bits, k=k, sq_trunc=sq_trunc,
+                lin_trunc=lin_trunc, degree=degree)
+
+
+def _rom_kernel(codes_ref, rom_ref, out_ref, *, fid: int, r_max: int,
+                eval_bits: int, k: int, sq_trunc: int, lin_trunc: int,
+                degree: int):
+    out_ref[...] = _lut_rom(codes_ref[...], rom_ref[...], fid=fid,
+                            r_max=r_max, eval_bits=eval_bits, k=k,
+                            sq_trunc=sq_trunc, lin_trunc=lin_trunc,
+                            degree=degree)
+
+
+def rom_eval_2d(codes: jax.Array, rom: jax.Array, *, fid: int, r_max: int,
+                eval_bits: int, k: int, sq_trunc: int, lin_trunc: int,
+                degree: int, interpret: bool = True) -> jax.Array:
+    """Golden-test harness for ``_lut_rom``: evaluate one function of a
+    flattened ``(F * r_max, 3)`` ROM on (rows, 128) codes through the same
+    in-kernel datapath the fused consumers use."""
+    rows, lanes = codes.shape
+    assert lanes == LANES and rows % BLOCK_ROWS == 0, codes.shape
+    n_rows = rom.shape[0]
+    kernel = functools.partial(_rom_kernel, fid=fid, r_max=r_max,
+                               eval_bits=eval_bits, k=k, sq_trunc=sq_trunc,
+                               lin_trunc=lin_trunc, degree=degree)
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // BLOCK_ROWS,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((n_rows, 3), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+        interpret=interpret,
+    )(codes, rom)
 
 
 def _library_kernel(codes_ref, fids_ref, coeffs_ref, meta_ref, out_ref, *,

@@ -10,7 +10,8 @@ import jax.numpy as jnp
 from repro.core.table import TableDesign
 from repro.kernels.interp.kernel import (BLOCK_ROWS, LANES, interp_eval_2d,
                                          library_eval_2d)
-from repro.kernels.interp.ref import interp_eval_ref, library_eval_ref
+from repro.kernels.interp.ref import (interp_eval_ref, interp_eval_wide,
+                                      library_eval_ref)
 
 
 def _on_tpu() -> bool:
@@ -33,8 +34,20 @@ def _eval_padded(codes, coeffs, *, eval_bits, k, sq_trunc, lin_trunc, degree,
 
 def table_eval(codes: jax.Array, design: TableDesign,
                use_kernel: bool = True, interpret: bool | None = None) -> jax.Array:
-    """Evaluate ``design`` on int32 codes; Pallas kernel or jnp-ref path."""
+    """Evaluate ``design`` on int32 codes; Pallas kernel or jnp-ref path.
+
+    Designs whose coefficients exceed int32 (wide-output reciprocals) take
+    the emulated-int64 jnp path regardless of ``use_kernel`` — the int32
+    ROM cannot hold them, and the historical fallback silently wrapped them
+    through ``device_coeffs()`` (ROADMAP regression, DESIGN.md §7.5).
+    """
     codes = codes.astype(jnp.int32)
+    if not design.fits_int32:
+        return interp_eval_wide(codes, design.device_coeffs_wide(),
+                                eval_bits=design.eval_bits, k=design.k,
+                                sq_trunc=design.sq_trunc,
+                                lin_trunc=design.lin_trunc,
+                                degree=design.degree)
     if not use_kernel:
         return interp_eval_ref(codes, design.device_coeffs(),
                                eval_bits=design.eval_bits,

@@ -37,3 +37,92 @@ def interp_eval_ref(codes: jax.Array, coeffs: jax.Array, *, eval_bits: int,
     if degree == 2:
         acc = acc + sel[..., 0] * xs * xs
     return jax.lax.shift_right_arithmetic(acc, k)
+
+
+# ---------------------------------------------------------------------------
+# Emulated-int64 ("wide") exact evaluation — DESIGN.md §7.5's fallback for
+# designs whose coefficients exceed int32 (e.g. wide-output reciprocals).
+# jax runs with x64 disabled, so a literal jnp.int64 path would silently
+# downcast; instead every 64-bit value is a (hi, lo) pair of 32-bit words
+# and all arithmetic is exact modulo 2^64 — which equals the true signed
+# result because ``TableDesign.eval_int`` (the numpy oracle) already
+# guarantees the accumulator fits int64.
+# ---------------------------------------------------------------------------
+
+
+def _u32(x: jax.Array) -> jax.Array:
+    """Reinterpret an int32 bit pattern as uint32 (no value conversion)."""
+    return jax.lax.bitcast_convert_type(x.astype(jnp.int32), jnp.uint32)
+
+
+def _i32(x: jax.Array) -> jax.Array:
+    return jax.lax.bitcast_convert_type(x, jnp.int32)
+
+
+def _umul32(a: jax.Array, b: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Full 64-bit product of two uint32 arrays -> (hi, lo) uint32 words."""
+    mask = jnp.uint32(0xFFFF)
+    a0, a1 = a & mask, a >> 16
+    b0, b1 = b & mask, b >> 16
+    p00, p11 = a0 * b0, a1 * b1
+    mid = a0 * b1 + a1 * b0  # may wrap: reconstruct the carry below
+    carry_mid = (mid < a0 * b1).astype(jnp.uint32)
+    lo = p00 + (mid << 16)
+    carry_lo = (lo < p00).astype(jnp.uint32)
+    hi = p11 + (mid >> 16) + (carry_mid << 16) + carry_lo
+    return hi, lo
+
+
+def _add64(ah, al, bh, bl) -> tuple[jax.Array, jax.Array]:
+    lo = al + bl
+    hi = ah + bh + (lo < al).astype(jnp.uint32)
+    return hi, lo
+
+
+def _mul64_64(ah, al, bh, bl) -> tuple[jax.Array, jax.Array]:
+    """Low 64 bits of a 64x64-bit product (exact when the true signed
+    product fits int64; two's-complement multiplication mod 2^64 equals the
+    signed product mod 2^64, so no sign correction is needed)."""
+    hi, lo = _umul32(al, bl)
+    hi = hi + al * bh + ah * bl  # cross terms: only their low words survive
+    return hi, lo
+
+
+def _shra64(h: jax.Array, l: jax.Array, k: int) -> jax.Array:
+    """Arithmetic >> k (static, 0 <= k <= 63) of (hi, lo); returns the low
+    word of the result as int32 — the design contract keeps post-shift
+    outputs within out_bits < 32."""
+    if k == 0:
+        return _i32(l)
+    hs = _i32(h)
+    if k < 32:
+        return _i32((l >> k) | (h << (32 - k)))
+    return jax.lax.shift_right_arithmetic(hs, min(k - 32, 31))
+
+
+def interp_eval_wide(codes: jax.Array, coeffs_wide: jax.Array, *,
+                     eval_bits: int, k: int, sq_trunc: int, lin_trunc: int,
+                     degree: int) -> jax.Array:
+    """Exact table evaluation with 64-bit coefficients, x64-off safe.
+
+    ``coeffs_wide``: (2^R, 3, 2) int32 — ``[..., 0]`` the high and
+    ``[..., 1]`` the low word of each int64 coefficient (two's complement,
+    ``TableDesign.device_coeffs_wide``). Bit-identical to the numpy
+    ``TableDesign.eval_int`` for any design whose accumulator fits int64,
+    which the exhaustive ``verify`` sweep already presumes.
+    """
+    codes = codes.astype(jnp.int32)
+    r = jax.lax.shift_right_logical(codes, eval_bits)
+    x = jnp.bitwise_and(codes, (1 << eval_bits) - 1)
+    xs = jax.lax.shift_left(jax.lax.shift_right_logical(x, sq_trunc), sq_trunc)
+    xl = jax.lax.shift_left(jax.lax.shift_right_logical(x, lin_trunc), lin_trunc)
+    sel = coeffs_wide[r]  # (..., 3, 2)
+    zero = jnp.zeros_like(_u32(x))
+    # b * lin(x): 64 x 32 (x >= 0, so its high word is zero)
+    acc = _mul64_64(_u32(sel[..., 1, 0]), _u32(sel[..., 1, 1]), zero, _u32(xl))
+    acc = _add64(*acc, _u32(sel[..., 2, 0]), _u32(sel[..., 2, 1]))
+    if degree == 2:
+        sq = _umul32(_u32(xs), _u32(xs))  # sq(x)^2 may itself exceed int32
+        acc = _add64(*acc, *_mul64_64(_u32(sel[..., 0, 0]),
+                                      _u32(sel[..., 0, 1]), *sq))
+    return _shra64(*acc, k)

@@ -17,8 +17,11 @@ from repro.kernels.softmax.kernel import _lut
 BLOCK_ROWS = 8
 
 
-def _rmsnorm_kernel(x_ref, gamma_ref, coef_ref, out_ref, *, meta: dict, eps: float):
-    x = x_ref[...].astype(jnp.float32)  # (BLOCK_ROWS, D)
+def _rmsnorm_body(x, gamma, lut, meta: dict, eps: float, out_dtype):
+    """Fused RMSNorm math over an abstract in-kernel rsqrt table read (per-
+    table ``_lut`` or library-ROM ``_lut_rom`` closure); one copy of the
+    float glue shared by both kernel variants."""
+    x = x.astype(jnp.float32)  # (BLOCK_ROWS, D)
     ms = jnp.mean(x * x, axis=-1, keepdims=True) + eps  # > 0
     bits = jax.lax.bitcast_convert_type(ms, jnp.int32)
     e = jnp.bitwise_and(jax.lax.shift_right_logical(bits, 23), 255) - 127
@@ -31,9 +34,53 @@ def _rmsnorm_kernel(x_ref, gamma_ref, coef_ref, out_ref, *, meta: dict, eps: flo
     even = jnp.bitwise_and(e, 1) == 0  # e even -> v = 1.mant in [1,2): segment 0
     codes = jnp.where(even, frac_code, halfcode + frac_code)
     h = jnp.where(even, e // 2, (e - 1) // 2)
-    tab = _lut(codes.astype(jnp.int32), coef_ref[...], **meta["eval"]).astype(jnp.float32)
+    tab = lut(codes.astype(jnp.int32)).astype(jnp.float32)
     rs = tab * (2.0 ** -meta["out_bits"]) * jnp.exp2(-h.astype(jnp.float32))
-    out_ref[...] = (x * rs * gamma_ref[...].astype(jnp.float32)).astype(out_ref.dtype)
+    return (x * rs * gamma.astype(jnp.float32)).astype(out_dtype)
+
+
+def _rmsnorm_kernel(x_ref, gamma_ref, coef_ref, out_ref, *, meta: dict, eps: float):
+    out_ref[...] = _rmsnorm_body(
+        x_ref[...], gamma_ref[...],
+        lambda c: _lut(c, coef_ref[...], **meta["eval"]),
+        meta, eps, out_ref.dtype)
+
+
+def _rmsnorm_lib_kernel(x_ref, gamma_ref, rom_ref, out_ref, *, r_max: int,
+                        meta: dict, eps: float):
+    """Library-bound fused RMSNorm: the rsqrt read is a `_lut_rom` gather at
+    its static func id against the whole-library ROM operand."""
+    from repro.kernels.interp.kernel import _lut_rom
+
+    out_ref[...] = _rmsnorm_body(
+        x_ref[...], gamma_ref[...],
+        lambda c: _lut_rom(c, rom_ref[...], fid=meta["fid"], r_max=r_max,
+                           **meta["eval"]),
+        meta, eps, out_ref.dtype)
+
+
+def fused_rmsnorm_lib(x: jax.Array, gamma: jax.Array, rom: jax.Array,
+                      meta: dict, *, r_max: int, eps: float = 1e-6,
+                      interpret: bool = True) -> jax.Array:
+    """x: (rows, D), rows % BLOCK_ROWS == 0, D % 128 == 0; rom: library
+    coefficient ROM flattened to (F * r_max, 3) int32."""
+    rows, d = x.shape
+    assert rows % BLOCK_ROWS == 0 and d % 128 == 0, x.shape
+    n_rows = rom.shape[0]
+    kernel = functools.partial(_rmsnorm_lib_kernel, r_max=r_max, meta=meta,
+                               eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // BLOCK_ROWS,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((n_rows, 3), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=interpret,
+    )(x, gamma.reshape(1, d), rom)
 
 
 def fused_rmsnorm(x: jax.Array, gamma: jax.Array, coeffs: jax.Array, meta: dict,

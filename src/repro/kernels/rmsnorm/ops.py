@@ -1,14 +1,43 @@
-"""Jitted wrapper for the fused approx-RMSNorm kernel."""
+"""Jitted wrappers for the fused approx-RMSNorm kernels (per-table design
+operand, or the whole-library ROM operand)."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.table import TableDesign
-from repro.kernels.rmsnorm.kernel import BLOCK_ROWS, fused_rmsnorm
-from repro.kernels.rmsnorm.ref import fused_rmsnorm_ref
-from repro.kernels.softmax.ops import _meta
+from repro.kernels.rmsnorm.kernel import (BLOCK_ROWS, fused_rmsnorm,
+                                          fused_rmsnorm_lib)
+from repro.kernels.rmsnorm.ref import fused_rmsnorm_lib_ref, fused_rmsnorm_ref
+from repro.kernels.softmax.ops import _meta, lib_meta
 from repro.api import get_table
+
+
+def approx_rmsnorm_library(x: jax.Array, gamma: jax.Array, library,
+                           eps: float = 1e-6, use_kernel: bool | None = None,
+                           interpret: bool | None = None) -> jax.Array:
+    """Library-bound fused RMSNorm: the rsqrt table is read in-kernel from
+    the compiled library's ROM operand (static func id). ``use_kernel=None``
+    picks the Pallas kernel on TPU with 128-lane-aligned features, the
+    bit-identical jnp ROM-gather oracle elsewhere."""
+    meta = lib_meta(library, "rsqrt")
+    shape = x.shape
+    d = shape[-1]
+    rows = x.size // d
+    xf = x.reshape(rows, d)
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu" and d % 128 == 0
+    if not use_kernel:
+        return fused_rmsnorm_lib_ref(xf, gamma, library.coeffs, meta,
+                                     eps).reshape(shape)
+    pad = (-rows) % BLOCK_ROWS
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)), constant_values=1.0)
+    interpret = (jax.default_backend() != "tpu") if interpret is None else interpret
+    r_max = library.coeffs.shape[1]
+    out = fused_rmsnorm_lib(xf, gamma, library.coeffs.reshape(-1, 3), meta,
+                            r_max=r_max, eps=eps, interpret=interpret)
+    return out[:rows].reshape(shape)
 
 
 def approx_rmsnorm_fused(x: jax.Array, gamma: jax.Array,

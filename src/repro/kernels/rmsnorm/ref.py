@@ -5,6 +5,14 @@ import jax
 import jax.numpy as jnp
 
 
+def fused_rmsnorm_lib_ref(x, gamma, coeffs, meta, eps=1e-6):
+    """jnp oracle of the library-bound fused RMSNorm kernel: slice the rsqrt
+    rows out of the padded (F, R_max, 3) ROM, then the identical glue."""
+    from repro.kernels.softmax.ref import _rom_rows
+
+    return fused_rmsnorm_ref(x, gamma, _rom_rows(coeffs, meta), meta, eps)
+
+
 def fused_rmsnorm_ref(x, gamma, coeffs, meta, eps=1e-6):
     xf = x.astype(jnp.float32)
     ms = jnp.mean(xf * xf, axis=-1, keepdims=True) + eps

@@ -21,40 +21,30 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+# the one-hot table read lives next to the ROM variant; re-exported here
+# for the historical import path (rmsnorm/flashattn kernels, tests)
+from repro.kernels.interp.kernel import _lut  # noqa: F401
+
 BLOCK_ROWS = 8
 LOG2E = 1.4426950408889634
 
 
-def _lut(codes: jax.Array, coeffs: jax.Array, *, eval_bits: int, k: int,
-         sq_trunc: int, lin_trunc: int, degree: int) -> jax.Array:
-    """One-hot table evaluation on int32 codes (any 2-D shape)."""
-    n_regions = coeffs.shape[0]
-    r = jax.lax.shift_right_logical(codes, eval_bits)
-    x = jnp.bitwise_and(codes, (1 << eval_bits) - 1)
-    flat_r = r.reshape(-1)
-    iota = jax.lax.broadcasted_iota(jnp.int32, (flat_r.shape[0], n_regions), 1)
-    onehot = (flat_r[:, None] == iota).astype(jnp.int32)
-    sel = jax.lax.dot_general(onehot, coeffs, (((1,), (0,)), ((), ())),
-                              preferred_element_type=jnp.int32
-                              ).reshape(codes.shape + (3,))
-    xs = jax.lax.shift_left(jax.lax.shift_right_logical(x, sq_trunc), sq_trunc)
-    xl = jax.lax.shift_left(jax.lax.shift_right_logical(x, lin_trunc), lin_trunc)
-    acc = sel[..., 1] * xl + sel[..., 2]
-    if degree == 2:
-        acc = acc + sel[..., 0] * xs * xs
-    return jax.lax.shift_right_arithmetic(acc, k)
+def _softmax_body(x, lut_exp, lut_recip, exp_meta: dict, recip_meta: dict,
+                  out_dtype):
+    """Fused softmax math, parameterized over the two in-kernel table reads.
 
-
-def _softmax_kernel(x_ref, ecoef_ref, rcoef_ref, out_ref, *, exp_meta: dict,
-                    recip_meta: dict):
-    x = x_ref[...].astype(jnp.float32)  # (BLOCK_ROWS, D)
+    ``lut_exp`` / ``lut_recip`` map int32 codes to the table's integer
+    output — either a per-table ``_lut`` or a library-ROM ``_lut_rom``
+    closure. Exactly one implementation of the float glue exists, so the
+    per-table and library-bound kernels cannot drift."""
+    x = x.astype(jnp.float32)  # (BLOCK_ROWS, D)
     m = jnp.max(x, axis=-1, keepdims=True)
     t = jnp.minimum((m - x) * LOG2E, 126.0)
     n = jnp.floor(t)
     frac = t - n
     eb = exp_meta["in_bits"]
     codes = jnp.clip(jnp.round(frac * (1 << eb)).astype(jnp.int32), 0, (1 << eb) - 1)
-    tab = _lut(codes, ecoef_ref[...], **exp_meta["eval"]).astype(jnp.float32)
+    tab = lut_exp(codes).astype(jnp.float32)
     e = tab * (2.0 ** -exp_meta["out_bits"]) * jnp.exp2(-n)
     s = jnp.sum(e, axis=-1, keepdims=True)  # > 0
     # IEEE-754 split: s = 1.mant * 2^(E-127); reciprocal table wants 1.x codes
@@ -65,9 +55,59 @@ def _softmax_kernel(x_ref, ecoef_ref, rcoef_ref, out_ref, *, exp_meta: dict,
     half = 1 << (23 - rb - 1)
     rcodes = jnp.clip(jax.lax.shift_right_logical(mant + half, 23 - rb),
                       0, (1 << rb) - 1)
-    rtab = _lut(rcodes, rcoef_ref[...], **recip_meta["eval"]).astype(jnp.float32)
+    rtab = lut_recip(rcodes).astype(jnp.float32)
     recip = rtab * (2.0 ** -(rb + 1)) * jnp.exp2(-expo.astype(jnp.float32))
-    out_ref[...] = (e * recip).astype(out_ref.dtype)
+    return (e * recip).astype(out_dtype)
+
+
+def _softmax_kernel(x_ref, ecoef_ref, rcoef_ref, out_ref, *, exp_meta: dict,
+                    recip_meta: dict):
+    out_ref[...] = _softmax_body(
+        x_ref[...],
+        lambda c: _lut(c, ecoef_ref[...], **exp_meta["eval"]),
+        lambda c: _lut(c, rcoef_ref[...], **recip_meta["eval"]),
+        exp_meta, recip_meta, out_ref.dtype)
+
+
+def _softmax_lib_kernel(x_ref, rom_ref, out_ref, *, r_max: int,
+                        exp_meta: dict, recip_meta: dict):
+    """Library-bound fused softmax: ONE ROM operand for both tables; the
+    exp and recip reads are `_lut_rom` gathers at their static func ids —
+    the whole softmax (including both transcendentals) is a single kernel
+    with no intermediate HBM round-trip."""
+    from repro.kernels.interp.kernel import _lut_rom
+
+    rom = rom_ref[...]
+    out_ref[...] = _softmax_body(
+        x_ref[...],
+        lambda c: _lut_rom(c, rom, fid=exp_meta["fid"], r_max=r_max,
+                           **exp_meta["eval"]),
+        lambda c: _lut_rom(c, rom, fid=recip_meta["fid"], r_max=r_max,
+                           **recip_meta["eval"]),
+        exp_meta, recip_meta, out_ref.dtype)
+
+
+def fused_softmax_lib(x: jax.Array, rom: jax.Array, exp_meta: dict,
+                      recip_meta: dict, *, r_max: int,
+                      interpret: bool = True) -> jax.Array:
+    """x: (rows, D) with rows % BLOCK_ROWS == 0, D % 128 == 0; rom: the
+    library coefficient ROM flattened to (F * r_max, 3) int32."""
+    rows, d = x.shape
+    assert rows % BLOCK_ROWS == 0 and d % 128 == 0, x.shape
+    kernel = functools.partial(_softmax_lib_kernel, r_max=r_max,
+                               exp_meta=exp_meta, recip_meta=recip_meta)
+    n_rows = rom.shape[0]
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // BLOCK_ROWS,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, d), lambda i: (i, 0)),
+            pl.BlockSpec((n_rows, 3), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=interpret,
+    )(x, rom)
 
 
 def fused_softmax(x: jax.Array, exp_coeffs: jax.Array, recip_coeffs: jax.Array,

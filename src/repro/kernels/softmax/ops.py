@@ -1,12 +1,14 @@
-"""Jitted wrapper for the fused approx-softmax kernel."""
+"""Jitted wrappers for the fused approx-softmax kernels (per-table design
+operands, or one library ROM operand for the whole datapath)."""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.table import TableDesign
-from repro.kernels.softmax.kernel import BLOCK_ROWS, fused_softmax
-from repro.kernels.softmax.ref import fused_softmax_ref
+from repro.kernels.softmax.kernel import (BLOCK_ROWS, fused_softmax,
+                                          fused_softmax_lib)
+from repro.kernels.softmax.ref import fused_softmax_lib_ref, fused_softmax_ref
 from repro.api import get_table
 
 
@@ -22,6 +24,53 @@ def _meta(design: TableDesign) -> dict:
             "degree": design.degree,
         },
     }
+
+
+def lib_meta(library, kind: str) -> dict:
+    """The kernel meta dict of one library slot: the per-table ``_meta``
+    fields plus the function's static ROM row offset (``fid``)."""
+    m = library.meta(kind)
+    return {
+        "in_bits": m.in_bits,
+        "out_bits": m.out_bits,
+        "fid": library.func_id(kind),
+        "eval": {
+            "eval_bits": m.eval_bits,
+            "k": m.k,
+            "sq_trunc": m.sq_trunc,
+            "lin_trunc": m.lin_trunc,
+            "degree": m.degree,
+        },
+    }
+
+
+def approx_softmax_library(x: jax.Array, library, use_kernel: bool | None = None,
+                           interpret: bool | None = None) -> jax.Array:
+    """Library-bound fused softmax over the last axis.
+
+    One ROM operand (the compiled :class:`repro.api.InterpLibrary` pytree
+    leaf) feeds both in-kernel table reads — exp at its static func id,
+    recip at its own — so a softmax is ONE kernel launch instead of a
+    gather→eval→elementwise chain per transcendental. ``use_kernel=None``
+    picks the Pallas kernel on TPU (128-lane aligned features) and the
+    bit-identical jnp ROM-gather oracle elsewhere."""
+    em, rm = lib_meta(library, "exp2neg"), lib_meta(library, "recip")
+    shape = x.shape
+    d = shape[-1]
+    rows = x.size // d
+    xf = x.reshape(rows, d)
+    r_max = library.coeffs.shape[1]
+    rom = library.coeffs.reshape(-1, 3)
+    if use_kernel is None:
+        use_kernel = jax.default_backend() == "tpu" and d % 128 == 0
+    if not use_kernel:
+        return fused_softmax_lib_ref(xf, library.coeffs, em, rm).reshape(shape)
+    pad = (-rows) % BLOCK_ROWS
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    interpret = (jax.default_backend() != "tpu") if interpret is None else interpret
+    out = fused_softmax_lib(xf, rom, em, rm, r_max=r_max, interpret=interpret)
+    return out[:rows].reshape(shape)
 
 
 def approx_softmax_fused(x: jax.Array,

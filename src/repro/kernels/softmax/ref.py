@@ -7,6 +7,22 @@ import jax.numpy as jnp
 LOG2E = 1.4426950408889634
 
 
+def _rom_rows(coeffs, meta: dict):
+    """Slice one function's live rows out of a padded (F, R_max, 3) ROM."""
+    n_regions = 1 << (meta["in_bits"] - meta["eval"]["eval_bits"])
+    return coeffs[meta["fid"], :n_regions]
+
+
+def fused_softmax_lib_ref(x, coeffs, exp_meta, recip_meta):
+    """jnp oracle of the library-bound fused softmax kernel: gather the two
+    functions' rows from the padded ROM, then the identical glue — bit-
+    identical to the per-table oracle because the padded ROM holds exactly
+    ``packed_coeffs`` in rows [0, 2^R)."""
+    return fused_softmax_ref(x, _rom_rows(coeffs, exp_meta),
+                             _rom_rows(coeffs, recip_meta), exp_meta,
+                             recip_meta)
+
+
 def fused_softmax_ref(x, exp_coeffs, recip_coeffs, exp_meta, recip_meta):
     def lut(codes, coeffs, eval_bits, k, sq_trunc, lin_trunc, degree):
         r = jax.lax.shift_right_logical(codes, eval_bits)

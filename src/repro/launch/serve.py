@@ -36,6 +36,11 @@ def main():
                     help="serve from this saved InterpLibrary (json/npz base)")
     ap.add_argument("--save-library", default=None,
                     help="persist the engine's compiled library here")
+    ap.add_argument("--serial", action="store_true",
+                    help="per-op dispatch path (the pre-fused oracle) "
+                         "instead of the fused single-dispatch tick")
+    ap.add_argument("--horizon", type=int, default=8,
+                    help="fused tick: max decode steps per dispatch")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -50,7 +55,8 @@ def main():
     library = InterpLibrary.load(args.library) if args.library else None
     params = tf.init_params(jax.random.key(args.seed), cfg)
     eng = ServeEngine(cfg, params, slots=args.slots, cache_len=args.cache_len,
-                      library=library)
+                      library=library, fused=not args.serial,
+                      horizon=args.horizon)
     if args.save_library and eng.library is not None:
         print(f"saved library -> {eng.library.save(args.save_library)}")
     rng = np.random.default_rng(args.seed)
@@ -63,7 +69,9 @@ def main():
     dt = time.perf_counter() - t0
     total_tokens = sum(len(r.out) for r in done)
     print(f"served {len(done)} requests, {total_tokens} tokens "
-          f"in {dt:.2f}s ({total_tokens/dt:.1f} tok/s incl. compile)")
+          f"in {dt:.2f}s ({total_tokens/dt:.1f} tok/s incl. compile; "
+          f"{eng.stats['dispatches']} dispatches / "
+          f"{eng.stats['decode_steps']} decode steps)")
     for r in done[:3]:
         print(f"  req {r.rid}: {r.out[:8]}...")
 

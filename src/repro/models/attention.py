@@ -58,6 +58,15 @@ def attention_core(q: jax.Array, k: jax.Array, v: jax.Array,
     _, sk, kvh, dk = k.shape
     dv = v.shape[-1]
     g = h // kvh
+    fused = getattr(numerics, "fused_attention", None)
+    if fused is not None:
+        # fused numerics inline the whole datapath (scores, table-backed
+        # exp/recip, PV product) into one kernel; None = unsupported layout,
+        # fall through to the chunked glue path
+        out = fused(q, k, v, q_pos, kv_pos, causal=causal, window=window,
+                    scale=softmax_scale)
+        if out is not None:
+            return out
     scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(d)
     q = q.reshape(b, sq, kvh, g, d)
 

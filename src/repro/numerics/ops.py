@@ -36,7 +36,19 @@ LOG2E = 1.4426950408889634
 
 
 def table_eval_int(codes: jax.Array, design: TableDesign) -> jax.Array:
-    """Evaluate a table on int32 input codes (exact integer semantics)."""
+    """Evaluate a table on int32 input codes (exact integer semantics).
+
+    Designs whose coefficients exceed int32 route to the emulated-int64
+    path (DESIGN.md §7.5) instead of silently wrapping through the int32
+    device cache."""
+    if not design.fits_int32:
+        from repro.kernels.interp.ref import interp_eval_wide
+
+        return interp_eval_wide(codes, design.device_coeffs_wide(),
+                                eval_bits=design.eval_bits, k=design.k,
+                                sq_trunc=design.sq_trunc,
+                                lin_trunc=design.lin_trunc,
+                                degree=design.degree)
     w = design.eval_bits
     coeffs = design.device_coeffs()
     r = jax.lax.shift_right_logical(codes, w)
@@ -292,17 +304,94 @@ class InterpNumerics:
         return (xf * self.rsqrt_pos(var) * gamma).astype(x.dtype)
 
 
-BACKENDS = {"exact": ExactNumerics, "interp": InterpNumerics}
+class FusedInterpNumerics(InterpNumerics):
+    """Library-bound interp numerics with fused-kernel lowering.
+
+    Same certified tables, different datapath: softmax, rmsnorm and the
+    attention inner loop lower to the library-bound fused kernels
+    (``kernels/{softmax,rmsnorm,flashattn}``) — the ROM gather and the
+    fixed-point Horner evaluation happen *inside* the consuming kernel, so
+    a decode layer is O(1) kernel launches instead of a gather→eval→
+    elementwise chain per transcendental. Off-TPU the same ops run through
+    the fused jnp oracles (bit-identical integer datapath, identical glue).
+
+    Float-level caveat: the fused reciprocal/rsqrt glue derives table codes
+    by IEEE-754 bit twiddles where the unfused glue uses ``frexp`` — the
+    int datapath is bit-identical (golden-tested per kind against
+    ``table_eval_int``), but composite float outputs may differ by one
+    table ulp from :class:`InterpNumerics`. The engine-level oracles
+    therefore compare fused-vs-fused runs.
+    """
+
+    name = "interp"
+    fused = True
+
+    def __init__(self, library):
+        if library is None:
+            raise ValueError(
+                "FusedInterpNumerics needs a compiled InterpLibrary: the "
+                "fused kernels thread its ROM as an operand (compile one "
+                "with Explorer.compile() or pass fused=False)")
+        super().__init__(library)
+
+    def softmax(self, x, axis: int = -1):
+        if axis not in (-1, x.ndim - 1):
+            return super().softmax(x, axis=axis)
+        # local import: kernels.flashattn.ref imports this module
+        from repro.kernels.softmax.ops import approx_softmax_library
+
+        return approx_softmax_library(x, self.library).astype(x.dtype)
+
+    def rmsnorm(self, x, gamma, eps: float = 1e-6):
+        from repro.kernels.rmsnorm.ops import approx_rmsnorm_library
+
+        return approx_rmsnorm_library(x, gamma, self.library,
+                                      eps=eps).astype(x.dtype)
+
+    def fused_attention(self, q, k, v, q_pos, kv_pos, *, causal, window,
+                        scale):
+        """The ``attention_core`` fast path: whole-datapath flash attention
+        with the library ROM inlined. Returns None (caller falls back to
+        the chunked glue path) when the layout is unsupported."""
+        from repro.kernels.flashattn.ops import attention_fused_library
+
+        b, sq, h, d = q.shape
+        kvh = k.shape[2]
+        if h % kvh:
+            return None
+        if k.shape[1] > 4096:
+            # the kernel holds the whole K/V stripe per program (the
+            # flashattn VMEM bound); longer contexts keep the chunked
+            # memory-bounded glue path on every backend
+            return None
+        if sq * k.shape[1] > (1 << 22) and jax.default_backend() != "tpu":
+            # the off-TPU oracle materializes the (N, Sq, Sk) score block;
+            # long-context prefill stays on the chunked glue path there
+            return None
+        # grouped kv heads pass through unexpanded: the kernel maps each
+        # query-head program onto its kv stripe by index
+        return attention_fused_library(q, k, v, self.library, causal=causal,
+                                       window=window, scale=scale,
+                                       q_pos=q_pos, kv_pos=kv_pos)
 
 
-def get_numerics(cfg_or_name="exact", library=None):
+BACKENDS = {"exact": ExactNumerics, "interp": InterpNumerics,
+            "interp-fused": FusedInterpNumerics}
+
+
+def get_numerics(cfg_or_name="exact", library=None, fused: bool = False):
     """Resolve a numerics backend *instance* for a model config (or a plain
     backend name). ``library`` binds the interp backend to a compiled
     :class:`repro.api.InterpLibrary`; the exact backend gets the trivial
-    instance (no tables to bind)."""
+    instance (no tables to bind). ``fused=True`` (or the explicit
+    ``"interp-fused"`` name) selects the fused-kernel lowering — softmax /
+    rmsnorm / attention evaluate the library ROM *inside* the consuming
+    kernel; it requires a bound library."""
     name = getattr(cfg_or_name, "numerics", cfg_or_name)
     if name == "exact":
         return ExactNumerics()
+    if name == "interp-fused" or (name == "interp" and fused):
+        return FusedInterpNumerics(library)
     if name == "interp":
         return InterpNumerics(library)
     raise KeyError(f"unknown numerics backend {name!r}")

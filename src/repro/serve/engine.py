@@ -17,6 +17,15 @@ zero exploration calls) and threads it through the jitted prefill/decode
 steps as an explicit pytree argument, alongside params and caches. That is
 what makes the deployed tables shardable (replicated leaf), donatable and
 checkpointable instead of ambient global state.
+
+Since ISSUE 5 the default engine path is *fused* (DESIGN.md §12): one
+jitted multi-slot tick per chunk of decode steps — greedy argmax and the
+per-slot position bump happen inside the program, the KV cache (and slot
+state) buffers are **donated** so XLA updates them in place instead of
+copying every tick, and interp numerics lower through the library-bound
+fused kernels (ROM gather + Horner inside softmax/rmsnorm/attention). The
+serial per-op path (`fused=False`) is kept as the dispatch-per-op oracle
+and benchmark baseline.
 """
 from __future__ import annotations
 
@@ -33,28 +42,108 @@ from repro.models import transformer as tf
 from repro.numerics.ops import get_numerics
 
 
-def make_serve_step(cfg) -> Callable:
+def _interp(cfg) -> bool:
+    """Does this config's numerics backend consult an InterpLibrary?
+    Covers both the plain and the explicitly-fused backend names."""
+    return cfg.numerics in ("interp", "interp-fused")
+
+
+def make_serve_step(cfg, fused: bool = False) -> Callable:
     """decode_step(params, token (B,1), pos () or (B,), caches, cross=None,
     library=None) -> (logits, caches). ``pos`` may be a scalar (uniform
     batch) or a per-slot position vector — continuous batching decodes every
     live slot at its *own* next position. ``library`` is a jit-traced pytree:
     swapping artifacts does not retrace, and the leaf obeys the caller's
-    sharding/donation just like params."""
+    sharding/donation just like params. ``fused=True`` lowers interp
+    numerics through the library-bound fused kernels."""
 
     def step(params, token, pos, caches, cross=None, library=None):
-        numerics = get_numerics(cfg, library)
+        numerics = get_numerics(cfg, library, fused=fused)
         return tf.decode_step(params, token, pos, caches, cfg, numerics, cross=cross)
 
     return step
 
 
-def make_prefill(cfg, cache_len: int) -> Callable:
+def make_prefill(cfg, cache_len: int, fused: bool = False) -> Callable:
     def pf(params, tokens, frontend_emb=None, enc_frames=None, library=None):
-        numerics = get_numerics(cfg, library)
+        numerics = get_numerics(cfg, library, fused=fused)
         return tf.prefill(params, tokens, cfg, numerics, cache_len,
                           frontend_emb=frontend_emb, enc_frames=enc_frames)
 
     return pf
+
+
+def make_engine_admit(cfg, cache_len: int) -> Callable:
+    """Fused admission: prefill + pool splice + greedy first token + slot-
+    state update in ONE dispatch.
+
+    admit(params, prompt (1,S), pool, slot (), tok (B,1), pos (B,),
+    live (B,), library=None) -> (first_token (), pool, tok, pos, live).
+    ``pool`` and the slot-state vectors are donated by the engine — an
+    admission splices the new request's cache rows in place and flips its
+    slot live without a host round-trip per update (the eager ``.at[].set``
+    path recompiled per concrete index/token value).
+    """
+
+    def admit(params, prompt, pool, slot, tok, pos, live, library=None):
+        numerics = get_numerics(cfg, library,
+                                fused=_interp(cfg))
+        logits, cache1, _ = tf.prefill(params, prompt, cfg, numerics,
+                                       cache_len)
+        pool = tf.splice_cache(cfg, pool, cache1, slot)
+        first = jnp.argmax(logits[0, -1]).astype(jnp.int32)
+        tok = tok.at[slot, 0].set(first)
+        pos = pos.at[slot].set(prompt.shape[1])
+        live = live.at[slot].set(True)
+        return first, pool, tok, pos, live
+
+    return admit
+
+
+def make_engine_tick(cfg, steps: int) -> Callable:
+    """The fused serve tick: ``steps`` greedy decode steps for every live
+    slot in ONE dispatch.
+
+    tick(params, tok (B,1), pos (B,), live (B,), caches, cross=None,
+    library=None) -> (toks (steps, B), tok, pos, caches). The decode →
+    argmax → feed-back loop runs as a ``lax.scan`` inside the program, so
+    the host neither uploads tokens nor round-trips logits between steps;
+    dead slots (live=False) keep decoding placeholder garbage at a frozen
+    position that admission later overwrites (standard slot padding).
+    Interp numerics lower through the library-bound fused kernels."""
+
+    def tick(params, tok, pos, live, caches, cross=None, library=None):
+        numerics = get_numerics(cfg, library, fused=_interp(cfg))
+
+        def body(carry, _):
+            tok, pos, caches = carry
+            logits, caches = tf.decode_step(params, tok, pos, caches, cfg,
+                                            numerics, cross=cross)
+            nxt = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
+            nxt = jnp.where(live, nxt, tok[:, 0])
+            pos = jnp.where(live, pos + 1, pos)
+            return (nxt[:, None], pos, caches), nxt
+
+        (tok, pos, caches), toks = jax.lax.scan(body, (tok, pos, caches),
+                                                None, length=steps)
+        return toks, tok, pos, caches
+
+    return tick
+
+
+# Jitted executables shared across engines (keyed by the frozen config):
+# re-constructing a ServeEngine must not retrace the decode program, and
+# the fused tick donates the cache + slot-state buffers so each chunk
+# updates them in place instead of copying the pool.
+_JIT_CACHE: dict = {}
+
+
+def _cached_jit(key: tuple, builder: Callable, **jit_kw) -> Callable:
+    fn = _JIT_CACHE.get(key)
+    if fn is None:
+        fn = jax.jit(builder(), **jit_kw)
+        _JIT_CACHE[key] = fn
+    return fn
 
 
 @dataclasses.dataclass
@@ -73,12 +162,22 @@ class ServeEngine:
     ``None`` compiles the default manifest through the process session at
     construction (generation, if the disk cache is cold, happens here — not
     inside the first jitted step). Exact-numerics engines carry no library.
+
+    ``fused`` (default): each engine tick is ONE donated-buffer dispatch
+    covering up to ``horizon`` decode steps (``make_engine_tick``); interp
+    numerics run the library-bound fused kernels. ``fused=False`` keeps the
+    ISSUE-3/4 serial path — one decode dispatch plus a host argmax round-
+    trip per token — as the oracle and benchmark baseline. ``self.stats``
+    counts host→device program dispatches and device→host transfers either
+    way (the numbers ``benchmarks/decode_fused.py`` reports).
     """
 
     def __init__(self, cfg, params, slots: int, cache_len: int,
-                 library: InterpLibrary | None = None):
+                 library: InterpLibrary | None = None, fused: bool = True,
+                 horizon: int = 8):
         self.cfg, self.params = cfg, params
         self.slots, self.cache_len = slots, cache_len
+        self.fused, self.horizon = bool(fused), max(1, int(horizon))
         if cfg.sliding_window is not None and cache_len < cfg.sliding_window:
             # the wrapped decode slot (pos % cache) would overwrite KV rows
             # that are still inside the attention window — silent context
@@ -87,7 +186,7 @@ class ServeEngine:
                 f"cache_len {cache_len} < sliding_window "
                 f"{cfg.sliding_window}: a windowed engine must retain the "
                 f"full attention window")
-        if cfg.numerics != "interp":
+        if not _interp(cfg):
             if library is not None:
                 raise ValueError(
                     f"library passed to ServeEngine but cfg.numerics="
@@ -103,16 +202,52 @@ class ServeEngine:
             # constructing the engine — or pass a compiled/loaded library.
             library = default_explorer().compile()
         self.library = library
-        self.numerics = get_numerics(cfg, library)
+        self.numerics = get_numerics(
+            cfg, library, fused=self.fused and _interp(cfg))
         self.caches = tf.init_cache(cfg, slots, cache_len)
         self.pos = np.zeros(slots, np.int32)  # next position per slot
         self.cur = np.full(slots, -1, np.int32)  # current token per slot
         self.req: list[Request | None] = [None] * slots
         self.queue: collections.deque[Request] = collections.deque()
         self.finished: list[Request] = []
+        self.stats = {"dispatches": 0, "transfers": 0, "ticks": 0,
+                      "decode_steps": 0}
+        # device-resident slot state (fused path): current token, next
+        # position, liveness — donated through the tick alongside the caches
+        self._tok_dev = jnp.zeros((slots, 1), jnp.int32)
+        self._pos_dev = jnp.zeros((slots,), jnp.int32)
+        self._live_dev = jnp.zeros((slots,), jnp.bool_)
 
-        self._prefill1 = jax.jit(make_prefill(cfg, cache_len))
-        self._decode = jax.jit(make_serve_step(cfg))
+        self._prefill1 = _cached_jit(("prefill", cfg, cache_len),
+                                     lambda: make_prefill(cfg, cache_len))
+        self._decode = _cached_jit(("decode", cfg),
+                                   lambda: make_serve_step(cfg))
+        # admission splice: donate the pool so slot insertion is in place
+        self._splice = _cached_jit(
+            ("splice", cfg),
+            lambda: (lambda pool, one, slot:
+                     tf.splice_cache(cfg, pool, one, slot)),
+            donate_argnums=(0,))
+        # fused admission: prefill + splice + first-token argmax + slot
+        # state, one dispatch, pool and slot-state buffers donated
+        self._admit_fused = _cached_jit(
+            ("admit", cfg, cache_len),
+            lambda: make_engine_admit(cfg, cache_len),
+            donate_argnums=(2, 4, 5, 6))
+        # retire flips one slot's liveness (traced index: one trace total,
+        # unlike the eager .at[].set which recompiles per concrete index)
+        self._set_live = _cached_jit(
+            ("set_live",),
+            lambda: (lambda live, slot, val: live.at[slot].set(val)),
+            donate_argnums=(0,))
+
+    def _tick_fn(self, steps: int) -> Callable:
+        """Jitted fused tick for a chunk of ``steps`` decode steps; caches
+        and slot-state buffers (token/pos) are donated — decode updates the
+        pool in place every tick instead of copying it."""
+        return _cached_jit(("tick", self.cfg, steps),
+                           lambda: make_engine_tick(self.cfg, steps),
+                           donate_argnums=(1, 2, 4))
 
     def submit(self, req: Request):
         """Enqueue a request; rejects work that cannot fit the slot cache.
@@ -142,13 +277,24 @@ class ServeEngine:
         for s in range(self.slots):
             if self.req[s] is None and self.queue:
                 r = self.queue.popleft()
-                logits, cache1, _ = self._prefill1(self.params, r.prompt[None, :],
-                                                   library=self.library)
-                # splice this request's cache rows into slot s of the pool
-                # (batch axis differs per segment: tf.splice_cache knows the
-                # stacked-layer layout)
-                self.caches = tf.splice_cache(self.cfg, self.caches, cache1, s)
-                tok = int(jnp.argmax(logits[0, -1]))
+                if self.fused:
+                    # one dispatch: prefill + in-place pool splice + greedy
+                    # first token + slot-state update (donated buffers)
+                    (first, self.caches, self._tok_dev, self._pos_dev,
+                     self._live_dev) = self._admit_fused(
+                        self.params, r.prompt[None, :], self.caches, s,
+                        self._tok_dev, self._pos_dev, self._live_dev,
+                        library=self.library)
+                    tok = int(first)
+                else:
+                    logits, cache1, _ = self._prefill1(
+                        self.params, r.prompt[None, :], library=self.library)
+                    # splice this request's cache rows into slot s of the
+                    # pool (batch axis differs per segment: tf.splice_cache
+                    # knows the stacked-layer layout); the pool buffer is
+                    # donated — the insertion is in place, not a pool copy
+                    self.caches = self._splice(self.caches, cache1, s)
+                    tok = int(jnp.argmax(logits[0, -1]))
                 r.out.append(tok)
                 self.req[s] = r
                 self.pos[s] = len(r.prompt)
@@ -162,8 +308,10 @@ class ServeEngine:
                 self.req[s] = None
                 self.cur[s] = -1
                 self.pos[s] = 0
+                if self.fused:
+                    self._live_dev = self._set_live(self._live_dev, s, False)
 
-    def step(self):
+    def step(self, max_steps: int = 1):
         """One engine tick: admit, batch-decode every live slot, retire.
 
         Each slot decodes at its *own* next position (``self.pos`` is passed
@@ -171,15 +319,60 @@ class ServeEngine:
         writing KV/state rows contiguously after its prefill instead of at
         the batch-wide max position. Empty slots decode garbage at position 0
         that is ignored and overwritten on admission (standard slot padding).
+
+        A fused engine batches up to ``max_steps`` decode steps into the
+        tick (``run`` passes ``self.horizon``) — bounded by the smallest
+        remaining budget among live slots, so no in-flight request
+        overshoots its ``max_new`` mid-chunk and the freed slot admits at
+        the next tick (after ``_admit`` drains the queue into free slots, a
+        chunk never delays an admission that could have happened). The one
+        historical edge is shared with the serial path: a request whose
+        admission token already fills its budget (``max_new <= 1``) still
+        decodes once before retiring. The default ``step()`` performs
+        exactly one decode step either way.
         """
         self._admit()
         if all(r is None for r in self.req):
             return False
+        if not self.fused:
+            return self._step_serial()
+        remaining = min(r.max_new - len(r.out)
+                        for r in self.req if r is not None)
+        steps = max(1, min(max_steps, remaining))
+        # quantize to the largest power of two <= steps: retirement tails
+        # then reuse log2(horizon)+1 compiled tick programs (1, 2, 4, ...)
+        # instead of jitting one decode-scan per distinct tail length
+        steps = 1 << (steps.bit_length() - 1)
+        toks, self._tok_dev, self._pos_dev, self.caches = self._tick_fn(steps)(
+            self.params, self._tok_dev, self._pos_dev, self._live_dev,
+            self.caches, library=self.library)
+        self.stats["dispatches"] += 1  # the tick program
+        out = np.asarray(toks)  # (steps, B): ONE device->host transfer
+        self.stats["transfers"] += 1
+        self.stats["ticks"] += 1
+        self.stats["decode_steps"] += steps
+        for s, r in enumerate(self.req):
+            if r is not None:
+                r.out.extend(int(t) for t in out[:, s])
+                self.cur[s] = int(out[-1, s])
+                self.pos[s] += steps
+        self._retire()
+        return True
+
+    def _step_serial(self):
+        """The ISSUE-3/4 per-op tick: token upload, one decode dispatch, a
+        host argmax round-trip — kept as the fused path's oracle/baseline."""
         toks = jnp.asarray(np.maximum(self.cur, 0)[:, None], jnp.int32)
-        logits, self.caches = self._decode(self.params, toks,
-                                           jnp.asarray(self.pos, jnp.int32),
+        pos = jnp.asarray(self.pos, jnp.int32)
+        self.stats["transfers"] += 2  # token + position upload
+        logits, self.caches = self._decode(self.params, toks, pos,
                                            self.caches, library=self.library)
+        self.stats["dispatches"] += 1  # decode program
         nxt = np.asarray(jnp.argmax(logits[:, 0], -1), np.int32)
+        self.stats["dispatches"] += 1  # eager argmax program
+        self.stats["transfers"] += 1  # next-token download
+        self.stats["ticks"] += 1
+        self.stats["decode_steps"] += 1
         for s, r in enumerate(self.req):
             if r is not None:
                 r.out.append(int(nxt[s]))
@@ -191,6 +384,6 @@ class ServeEngine:
     def run(self, max_ticks: int = 10_000) -> list[Request]:
         t = 0
         while (self.queue or any(r is not None for r in self.req)) and t < max_ticks:
-            self.step()
+            self.step(self.horizon)
             t += 1
         return self.finished

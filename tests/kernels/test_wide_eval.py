@@ -1,0 +1,145 @@
+"""Emulated-int64 ("wide") evaluation: the DESIGN.md §7.5 fallback for
+designs whose coefficients exceed int32.
+
+Regression (ROADMAP, flagged by the PR-4 review): the non-kernel fallback
+fed ``device_coeffs()`` — a hard int32 cast — to ``interp_eval_ref``, so a
+wide-output reciprocal silently evaluated with wrapped coefficients instead
+of taking the promised int64 path. ``test_wide_recip_exact_vs_numpy_oracle``
+fails on the pre-fix code.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.table import CoeffMeta, TableDesign
+from repro.kernels.interp.ops import table_eval
+from repro.kernels.interp.ref import (_add64, _shra64, _u32, _umul32,
+                                      interp_eval_wide)
+from repro.numerics.ops import table_eval_int
+
+
+def _wide_recip_design(in_bits: int = 12, R: int = 4) -> TableDesign:
+    """A wide-output-reciprocal-shaped design: linear fits of
+    V = 2^(2b+1) / (2^b + Z) per region with b = 17, whose c column (~36
+    bits) and b column (>31 bits when scaled by 2^k) exceed int32."""
+    b_out = 17
+    k = 18
+    n = 1 << R
+    w = in_bits - R
+    z0 = (np.arange(n, dtype=np.float64) * (1 << w))  # region left edges
+    z1 = z0 + (1 << w)
+    f0 = 2.0 ** (2 * b_out + 1) / (2.0 ** b_out + z0)
+    f1 = 2.0 ** (2 * b_out + 1) / (2.0 ** b_out + z1)
+    slope = np.round((f1 - f0) / (1 << w) * (1 << k)).astype(np.int64)
+    c = np.round(f0 * (1 << k)).astype(np.int64)
+    assert np.abs(c).max() >= 2**31, "test premise: c exceeds int32"
+    return TableDesign(
+        name="recip_wide_test", in_bits=in_bits, out_bits=b_out + 1,
+        lookup_bits=R, k=k, degree=1, sq_trunc=0, lin_trunc=0,
+        a=np.zeros(n, np.int64), b=slope, c=c,
+        a_meta=CoeffMeta(1, 0, False),
+        b_meta=CoeffMeta(int(np.abs(slope).max()).bit_length(), 0, True),
+        c_meta=CoeffMeta(int(c.max()).bit_length(), 0, False))
+
+
+def test_wide_recip_exact_vs_numpy_oracle():
+    """table_eval on an oversized design must equal the exhaustive numpy
+    int64 oracle — on BOTH the use_kernel paths (the int32 ROM can't hold
+    the coefficients, so both route to the wide jnp path)."""
+    d = _wide_recip_design()
+    assert not d.fits_int32
+    codes = np.arange(1 << d.in_bits, dtype=np.int64)
+    ref = d.eval_int(codes)
+    assert np.abs(ref).max() < 2**31  # outputs fit int32: contract holds
+    got = np.asarray(table_eval(jnp.asarray(codes, jnp.int32), d,
+                                use_kernel=False)).astype(np.int64)
+    np.testing.assert_array_equal(got, ref)
+    got_k = np.asarray(table_eval(jnp.asarray(codes, jnp.int32), d,
+                                  use_kernel=True)).astype(np.int64)
+    np.testing.assert_array_equal(got_k, ref)
+    # the numerics-layer gather path routes wide too
+    got_n = np.asarray(table_eval_int(jnp.asarray(codes, jnp.int32), d)
+                       ).astype(np.int64)
+    np.testing.assert_array_equal(got_n, ref)
+    # proof the test has teeth: the pre-fix path (int32 device cache fed to
+    # interp_eval_ref) silently wraps and disagrees with the oracle
+    from repro.kernels.interp.ref import interp_eval_ref
+
+    wrapped = np.asarray(interp_eval_ref(
+        jnp.asarray(codes, jnp.int32), d.device_coeffs(),
+        eval_bits=d.eval_bits, k=d.k, sq_trunc=d.sq_trunc,
+        lin_trunc=d.lin_trunc, degree=d.degree)).astype(np.int64)
+    assert not np.array_equal(wrapped, ref)
+
+
+def test_wide_quadratic_and_large_k():
+    """Quadratic wide design (a*sq^2 crossing 32 bits) and a k >= 32 shift."""
+    rng = np.random.default_rng(0)
+    in_bits, R = 12, 4
+    n = 1 << R
+    a = rng.integers(-(1 << 21), 1 << 21, n).astype(np.int64)
+    b = -rng.integers(1 << 32, 1 << 33, n).astype(np.int64)
+    c = rng.integers(1 << 36, 1 << 37, n).astype(np.int64)
+    codes = np.arange(1 << in_bits, dtype=np.int64)
+    for k, degree in [(14, 2), (33, 1), (32, 2)]:
+        d = TableDesign(
+            name=f"wide_k{k}", in_bits=in_bits, out_bits=8, lookup_bits=R,
+            k=k, degree=degree, sq_trunc=1, lin_trunc=0,
+            a=a if degree == 2 else np.zeros(n, np.int64), b=b, c=c,
+            a_meta=CoeffMeta(22, 0, True), b_meta=CoeffMeta(33, 0, True),
+            c_meta=CoeffMeta(37, 0, False))
+        got = np.asarray(table_eval(jnp.asarray(codes, jnp.int32), d,
+                                    use_kernel=False)).astype(np.int64)
+        np.testing.assert_array_equal(got, d.eval_int(codes), err_msg=f"k={k}")
+
+
+def test_wide_eval_is_jittable():
+    d = _wide_recip_design()
+    codes = jnp.arange(1 << d.in_bits, dtype=jnp.int32)
+    wide = d.device_coeffs_wide()
+    f = jax.jit(lambda c: interp_eval_wide(
+        c, wide, eval_bits=d.eval_bits, k=d.k, sq_trunc=d.sq_trunc,
+        lin_trunc=d.lin_trunc, degree=d.degree))
+    np.testing.assert_array_equal(np.asarray(f(codes)).astype(np.int64),
+                                  d.eval_int(np.asarray(codes, np.int64)))
+
+
+def test_doubleword_primitives_vs_numpy_int64():
+    """Property check of the word-level ops against numpy int64/uint64."""
+    rng = np.random.default_rng(1)
+    a = rng.integers(-(2**31), 2**31, 4096).astype(np.int64)
+    b = rng.integers(-(2**31), 2**31, 4096).astype(np.int64)
+    au, bu = (x.astype(np.uint64) & 0xFFFFFFFF for x in (a, b))
+    hi, lo = _umul32(_u32(jnp.asarray(a, jnp.int32)),
+                     _u32(jnp.asarray(b, jnp.int32)))
+    prod = au * bu  # unsigned 64-bit product of the 32-bit patterns
+    np.testing.assert_array_equal(np.asarray(lo).astype(np.uint64),
+                                  prod & 0xFFFFFFFF)
+    np.testing.assert_array_equal(np.asarray(hi).astype(np.uint64),
+                                  prod >> np.uint64(32))
+    # add with carry: random u64 pairs, wrapped sum
+    def words(v):
+        return (jnp.asarray((v >> np.uint64(32)).astype(np.uint32)),
+                jnp.asarray((v & np.uint64(0xFFFFFFFF)).astype(np.uint32)))
+
+    x = rng.integers(0, 2**64, 4096, dtype=np.uint64)
+    y = rng.integers(0, 2**64, 4096, dtype=np.uint64)
+    hh, ll = _add64(*words(x), *words(y))
+    s = x + y  # numpy wraps mod 2^64
+    np.testing.assert_array_equal(np.asarray(ll).astype(np.uint64),
+                                  s & np.uint64(0xFFFFFFFF))
+    np.testing.assert_array_equal(np.asarray(hh).astype(np.uint64),
+                                  s >> np.uint64(32))
+    # arithmetic shift of signed 64-bit values
+    v = rng.integers(-(2**62), 2**62, 4096)
+    vh = jnp.asarray((v >> 32).astype(np.int64).astype(np.uint32).view(np.int32))
+    vl = jnp.asarray((v & 0xFFFFFFFF).astype(np.uint32).view(np.int32))
+    for k in (0, 1, 13, 31, 32, 40, 63):
+        got = np.asarray(_shra64(_u32(vh), _u32(vl), k)).astype(np.int64)
+        want = v >> k
+        # _shra64 returns the low word: compare modulo 2^32, sign-extended
+        np.testing.assert_array_equal(got, ((want + 2**31) % 2**32) - 2**31,
+                                      err_msg=f"k={k}")
