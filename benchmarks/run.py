@@ -20,7 +20,13 @@ After a run that produced them, the claim21 + batched_engine rows are
 folded into ``artifacts/bench/BENCH_2.json``, the serve_path rows into
 ``BENCH_3.json``, the fleet_compile rows into ``BENCH_4.json``, and the
 decode_fused rows into ``BENCH_5.json`` — the per-PR perf snapshots
-tracked by the CI bench-smoke job.
+tracked by the CI bench-smoke job. (``BENCH_6.json`` is written by the
+DSE study CLI, ``repro.launch.dse --emit-bench``, not by this runner.)
+
+Snapshots go through ``repro.dse.record.update_snapshot``: every file is
+schema-versioned and stamped with the seed, jax version and device
+platform it was produced under, and a pre-existing unversioned snapshot
+is backed up (``*.pre-schema.json``) instead of silently overwritten.
 """
 from __future__ import annotations
 
@@ -32,6 +38,9 @@ import sys
 import time
 
 ART = pathlib.Path(__file__).resolve().parents[1] / "artifacts" / "bench"
+
+BENCH_SEED = 0  # every benchmark module keys its PRNGs off seed 0
+QUICK_RUN = False  # set by main(); stamped into snapshot meta
 
 # snapshot file -> {module -> tables folded into it}
 _SNAPSHOTS = {
@@ -56,6 +65,8 @@ def _emit_snapshots(ran: set) -> None:
     # per-table JSONs from an earlier run must not be stamped into the
     # snapshot), but keep the other modules' existing tables — a partial
     # --only run must not truncate the tracked snapshots
+    from repro.dse.record import update_snapshot
+
     for snap, sources in _SNAPSHOTS.items():
         snap_path = ART / snap
         fresh = {}
@@ -67,9 +78,8 @@ def _emit_snapshots(ran: set) -> None:
                 if path.exists():
                     fresh[name] = json.loads(path.read_text())
         if fresh:
-            out = json.loads(snap_path.read_text()) if snap_path.exists() else {}
-            out.update(fresh)
-            snap_path.write_text(json.dumps(out, indent=1))
+            update_snapshot(snap_path, fresh, seed=BENCH_SEED,
+                            meta_extra={"quick": QUICK_RUN})
             print(f"\nwrote {snap_path} (refreshed {sorted(fresh)})")
 
 
@@ -82,6 +92,8 @@ def main() -> None:
     args = ap.parse_args()
     if args.quick:
         os.environ["BENCH_QUICK"] = "1"
+    global QUICK_RUN
+    QUICK_RUN = args.quick
 
     from benchmarks import (batched_engine, claim21, decode_fused,
                             fig3_lub_sweep, fleet_compile, kernels_bench,

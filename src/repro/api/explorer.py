@@ -330,6 +330,29 @@ class Explorer:
                         self._space_evictions += 1
             return out
 
+    def prime_envelopes(self, pairs) -> None:
+        """Bulk-prime the envelope cache for many (spec, lookup_bits) pairs
+        as one fleet program — the batch-probe entry point the DSE study
+        layer uses before walking its trials serially off the warm cache.
+
+        No-op (the per-pair path will compute lazily) when the fleet is
+        disabled, the engine isn't ``batched``, or ``mesh > 1`` (sharded
+        f32 spaces never enter the exact engine's cache — see
+        :meth:`_envelopes_fleet`).
+        """
+        if not (self.config.fleet and self.config.engine == "batched"):
+            return
+        if self.config.mesh and self.config.mesh > 1:
+            return
+        uniq, seen = [], set()
+        for spec, r in pairs:
+            key = (*self._spec_key(spec), r)
+            if key not in seen:
+                seen.add(key)
+                uniq.append((spec, r))
+        if uniq:
+            self._envelopes_fleet(uniq)
+
     def feasible(self, spec: FunctionSpec, lookup_bits: int,
                  impl: str | None = None, engine: str | None = None) -> bool:
         """Eqns 9-10 over every region: does ANY piecewise quadratic exist?

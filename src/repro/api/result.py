@@ -12,6 +12,7 @@ import dataclasses
 from typing import Any
 
 from repro.core.decision import DecisionReport
+from repro.core.pareto import pareto_indices
 from repro.core.table import TableDesign
 
 
@@ -62,15 +63,13 @@ class DesignSpaceResult:
         return min(self.entries, key=lambda e: e.objective)
 
     def pareto(self) -> list[ExploreEntry]:
-        """Non-dominated entries over (area, delay), ascending area."""
-        pts = sorted(self.entries, key=lambda e: (e.area, e.delay))
-        front: list[ExploreEntry] = []
-        best_delay = float("inf")
-        for e in pts:
-            if e.delay < best_delay:
-                front.append(e)
-                best_delay = e.delay
-        return front
+        """Non-dominated entries over (area, delay), ascending area.
+
+        Delegates to :func:`repro.core.pareto.pareto_indices` — the same
+        frontier logic the DSE study layer uses over its 4-objective
+        vectors (DESIGN.md §13)."""
+        idx = pareto_indices([(e.area, e.delay) for e in self.entries])
+        return [self.entries[i] for i in idx]
 
     @property
     def minimal_regions(self) -> ExploreEntry | None:

@@ -1,0 +1,38 @@
+"""repro.dse — persistent, resumable design-space-exploration studies.
+
+The paper gives *complete* knowledge of each table's piecewise-polynomial
+space; this package makes exploration of the **full stack** — table kind,
+LUT height, degree, bit widths, hardware target, region engine, fused vs
+serial serving, decode horizon, batch — persistent and resumable. A
+:class:`Study` evaluates every :class:`TrialParams` of a
+:class:`SearchSpace` exactly once, journals each verdict to an append-only
+on-disk store (fsync'd, torn-write safe), and emits the multi-objective
+Pareto frontier over (area, delay, accuracy margin, decode tokens/sec) as
+a committed artifact that ``launch/dse.py check`` regresses against.
+
+Layout (DESIGN.md §13):
+
+  trial.py     TrialParams / TrialRecord — one full-stack configuration
+               and its journaled verdict (schema-versioned)
+  space.py     SearchSpace grids + the smoke/default presets
+  store.py     StudyStore — fsync'd jsonl journal + compacted snapshot
+  probe.py     ServeProbe — measured decode tokens/sec via ServeEngine
+  study.py     Study — resumable evaluation loop over an Explorer session
+  frontier.py  frontier artifact build / save / regression compare
+  record.py    schema-versioned snapshot helper shared with benchmarks
+"""
+from repro.dse.frontier import (build_frontier, compare_frontiers,
+                                load_frontier, save_frontier)
+from repro.dse.probe import ServeProbe
+from repro.dse.record import RECORD_SCHEMA, run_meta, update_snapshot
+from repro.dse.space import SearchSpace, default_space, smoke_space
+from repro.dse.store import StoreCorrupt, StudyStore
+from repro.dse.study import Study
+from repro.dse.trial import TrialParams, TrialRecord
+
+__all__ = [
+    "RECORD_SCHEMA", "SearchSpace", "ServeProbe", "StoreCorrupt", "Study",
+    "StudyStore", "TrialParams", "TrialRecord", "build_frontier",
+    "compare_frontiers", "default_space", "load_frontier", "run_meta",
+    "save_frontier", "smoke_space", "update_snapshot",
+]

@@ -1,0 +1,144 @@
+"""Measured decode throughput for DSE trials, via the real serve engine.
+
+Each distinct serving shape — (arch, fused, horizon, batch) — is driven
+through an actual :class:`ServeEngine` continuous-batching run (the same
+machinery ``benchmarks/decode_fused.py`` measures), serving interp
+numerics from the compiled default library. Results are cached per shape:
+a study whose table axes fan out over many (kind, R) values pays for each
+serving shape once.
+
+Two scoring modes:
+
+  modeled   (default) tokens/sec from the engine's *deterministic* dispatch
+            and transfer counters under a fixed per-dispatch cost model.
+            The engine genuinely runs — the counters are measurements of
+            the program structure — but the score is bit-reproducible
+            across runs and hosts, which is what lets a resumed study's
+            frontier match an uninterrupted run byte-for-byte and lets CI
+            regress against a committed frontier artifact.
+  wall      wall-clock tokens/sec (best of ``repeats``), for humans sizing
+            real hardware; never used for the frontier contract. In this
+            mode the library is compiled at the trial's own LUT height, so
+            R reaches the measured datapath.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any
+
+import numpy as np
+
+# deterministic cost model (seconds) for the modeled score: one host->device
+# program dispatch vs one device<->host transfer. Absolute values only scale
+# the axis; ratios match the dispatch-dominated CPU/TPU serving regime the
+# fused tick was built for (DESIGN.md §12).
+DISPATCH_COST_S = 1e-4
+TRANSFER_COST_S = 2e-5
+
+MODES = ("modeled", "wall", "none")
+
+
+class ServeProbe:
+    """Shared serve-throughput prober for one study."""
+
+    def __init__(self, mode: str = "modeled", *, seed: int = 0,
+                 requests: int = 3, prompt_len: int = 8, max_new: int = 8,
+                 cache_len: int = 64, repeats: int = 2):
+        if mode not in MODES:
+            raise ValueError(f"unknown probe mode {mode!r}; one of {MODES}")
+        self.mode = mode
+        self.seed, self.repeats = seed, repeats
+        self.requests, self.prompt_len = requests, prompt_len
+        self.max_new, self.cache_len = max_new, cache_len
+        self.runs = 0
+        self.hits = 0
+        self._cache: dict[tuple, dict[str, Any]] = {}
+        self._models: dict[str, tuple] = {}  # arch -> (cfg, params)
+        self._libraries: dict[Any, Any] = {}
+
+    # -- internals ---------------------------------------------------------
+    def _key(self, p) -> tuple:
+        key = (p.arch, p.fused, p.horizon, p.batch)
+        if self.mode == "wall":
+            key += (p.lookup_bits,)  # R reaches the measured ROM
+        return key
+
+    def _model(self, arch: str):
+        if arch not in self._models:
+            import jax
+
+            from repro.configs.base import get_smoke_config
+            from repro.models import transformer as tf
+
+            cfg = get_smoke_config(arch).replace(numerics="interp")
+            params = tf.init_params(jax.random.key(self.seed), cfg)
+            self._models[arch] = (cfg, params)
+        return self._models[arch]
+
+    def _library(self, lookup_bits: int | None):
+        if lookup_bits not in self._libraries:
+            from repro.api import default_explorer
+
+            kw = {} if lookup_bits is None else {"lookup_bits": lookup_bits}
+            self._libraries[lookup_bits] = default_explorer().compile(**kw)
+        return self._libraries[lookup_bits]
+
+    def _serve_once(self, p) -> tuple[float, dict[str, int], int]:
+        from repro.serve.engine import Request, ServeEngine
+
+        cfg, params = self._model(p.arch)
+        lib = self._library(p.lookup_bits if self.mode == "wall" else None)
+        cache_len = max(self.cache_len, cfg.sliding_window or 0)
+        eng = ServeEngine(cfg, params, slots=p.batch, cache_len=cache_len,
+                          library=lib, fused=p.fused, horizon=p.horizon)
+        rng = np.random.default_rng(self.seed)
+        for i in range(self.requests):
+            prompt = rng.integers(0, cfg.vocab_size,
+                                  self.prompt_len).astype(np.int32)
+            eng.submit(Request(i, prompt, max_new=self.max_new))
+        t0 = time.perf_counter()
+        done = eng.run()
+        dt = time.perf_counter() - t0
+        return dt, dict(eng.stats), sum(len(r.out) for r in done)
+
+    # -- public ------------------------------------------------------------
+    def measure(self, p) -> dict[str, Any]:
+        """Throughput metrics for trial params ``p`` (cached per shape).
+
+        Returns ``{"tokens_per_s", "dispatches_per_token",
+        "transfers_per_token", "throughput_mode"}`` plus (wall mode only)
+        the raw wall tokens/sec under ``"wall_tokens_per_s"`` — only the
+        deterministic fields belong in ``TrialRecord.metrics``.
+        """
+        if self.mode == "none":
+            return {}
+        key = self._key(p)
+        if key in self._cache:
+            self.hits += 1
+            return dict(self._cache[key])
+        self.runs += 1
+        best_wall = float("inf")
+        stats: dict[str, int] = {}
+        tokens = 0
+        for _ in range(self.repeats if self.mode == "wall" else 1):
+            dt, stats, tokens = self._serve_once(p)
+            best_wall = min(best_wall, dt)
+        steps = max(stats.get("decode_steps", 0), 1)
+        modeled_t = (stats.get("dispatches", 0) * DISPATCH_COST_S
+                     + stats.get("transfers", 0) * TRANSFER_COST_S)
+        out: dict[str, Any] = {
+            "throughput_mode": self.mode,
+            "dispatches_per_token": stats.get("dispatches", 0) / steps,
+            "transfers_per_token": stats.get("transfers", 0) / steps,
+        }
+        if self.mode == "modeled":
+            out["tokens_per_s"] = steps / max(modeled_t, 1e-12)
+        else:
+            out["tokens_per_s"] = tokens / max(best_wall, 1e-12)
+            out["wall_tokens_per_s"] = out["tokens_per_s"]
+        self._cache[key] = out
+        return dict(out)
+
+    @property
+    def stats(self) -> dict[str, int]:
+        return {"runs": self.runs, "hits": self.hits}

@@ -1,0 +1,163 @@
+"""Torn-write-safe study persistence: fsync'd jsonl journal + snapshot.
+
+Discipline (same as ``InterpLibrary.save``, DESIGN.md §10): every journal
+append is one ``\\n``-terminated JSON line flushed and ``fsync``'d before
+the trial is considered durable; compaction writes the full record set to
+``snapshot.json`` via tmp + fsync + atomic rename and only then resets the
+journal. Crash anywhere leaves a recoverable store:
+
+  * killed mid-append → the torn final line is detected (no newline, or
+    JSON parse failure on the *last* line only) and dropped; every earlier
+    record survives. A torn line mid-file is real corruption and raises
+    :class:`StoreCorrupt` instead of silently losing the tail.
+  * killed between snapshot rename and journal reset → records exist in
+    both; load dedups by trial key (first wins — re-journaled records are
+    bit-identical by the determinism contract in trial.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+from typing import Any
+
+from repro.dse.trial import TrialRecord
+
+JOURNAL = "journal.jsonl"
+SNAPSHOT = "snapshot.json"
+SNAPSHOT_SCHEMA = 1
+
+
+class StoreCorrupt(RuntimeError):
+    """The on-disk study store is damaged beyond a torn tail."""
+
+
+class StudyStore:
+    """Append-only trial store under one study directory."""
+
+    def __init__(self, root: str | pathlib.Path):
+        self.root = pathlib.Path(root)
+        self.journal_path = self.root / JOURNAL
+        self.snapshot_path = self.root / SNAPSHOT
+        self._fh = None  # lazily opened append handle
+        self.torn_tail_drops = 0  # incomplete final lines discarded on load
+
+    # -- lifecycle ---------------------------------------------------------
+    def __enter__(self) -> "StudyStore":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def close(self) -> None:
+        if self._fh is not None:
+            self._fh.close()
+            self._fh = None
+
+    # -- append ------------------------------------------------------------
+    def _trim_torn_tail(self) -> None:
+        """Repair an unterminated journal tail before appending: a complete
+        record missing only its newline gets terminated; a torn fragment is
+        truncated away (it was never durable — the append that wrote it
+        died before fsync returned)."""
+        if not self.journal_path.exists():
+            return
+        with open(self.journal_path, "rb+") as f:
+            data = f.read()
+            if not data or data.endswith(b"\n"):
+                return
+            cut = data.rfind(b"\n") + 1
+            try:
+                json.loads(data[cut:].decode("utf-8"))
+            except (UnicodeDecodeError, json.JSONDecodeError):
+                f.truncate(cut)
+            else:
+                f.write(b"\n")
+
+    def append(self, record: TrialRecord) -> None:
+        """Durably journal one record: write line, flush, fsync."""
+        if self._fh is None:
+            self.root.mkdir(parents=True, exist_ok=True)
+            self._trim_torn_tail()
+            self._fh = open(self.journal_path, "a", encoding="utf-8")
+        line = json.dumps(record.to_dict(), sort_keys=True,
+                          separators=(",", ":"))
+        self._fh.write(line + "\n")
+        self._fh.flush()
+        os.fsync(self._fh.fileno())
+
+    # -- load --------------------------------------------------------------
+    def _journal_records(self) -> list[dict[str, Any]]:
+        if not self.journal_path.exists():
+            return []
+        raw = self.journal_path.read_text(encoding="utf-8")
+        if not raw:
+            return []
+        lines = raw.split("\n")
+        if lines[-1] == "":
+            lines.pop()  # the usual case: journal ends with a newline
+        out = []
+        last = len(lines) - 1
+        for i, line in enumerate(lines):
+            if line == "":
+                continue
+            try:
+                out.append(json.loads(line))
+            except json.JSONDecodeError as e:
+                if i == last:
+                    # the final line only: a torn append (with or without
+                    # its newline) is recoverable tail damage
+                    self.torn_tail_drops += 1
+                    continue
+                raise StoreCorrupt(
+                    f"{self.journal_path}: undecodable journal line "
+                    f"{i + 1} (not the tail — refusing to drop committed "
+                    f"trials)") from e
+        return out
+
+    def _snapshot_records(self) -> list[dict[str, Any]]:
+        if not self.snapshot_path.exists():
+            return []
+        try:
+            snap = json.loads(self.snapshot_path.read_text(encoding="utf-8"))
+        except json.JSONDecodeError as e:
+            # snapshots are written atomically (tmp + rename): a damaged one
+            # was never a valid snapshot, not a torn write
+            raise StoreCorrupt(f"{self.snapshot_path}: undecodable") from e
+        if snap.get("schema") != SNAPSHOT_SCHEMA:
+            raise StoreCorrupt(f"{self.snapshot_path}: schema "
+                               f"{snap.get('schema')!r} != {SNAPSHOT_SCHEMA}")
+        return list(snap.get("records") or [])
+
+    def load(self) -> dict[str, TrialRecord]:
+        """All durable records, keyed by trial key (snapshot, then journal;
+        first occurrence wins — see the crash-window note above)."""
+        out: dict[str, TrialRecord] = {}
+        for d in self._snapshot_records() + self._journal_records():
+            rec = TrialRecord.from_dict(d)
+            out.setdefault(rec.params.key, rec)
+        return out
+
+    # -- compaction --------------------------------------------------------
+    def compact(self) -> None:
+        """Fold the journal into ``snapshot.json`` and reset the journal.
+
+        Write order is crash-safe: snapshot tmp → fsync → rename (the new
+        snapshot is durable before the journal shrinks), then the journal
+        is reset via an atomic empty-file rename. A crash between the two
+        leaves duplicates, which ``load`` dedups.
+        """
+        records = self.load()
+        self.close()  # the append handle's offset dies with the old journal
+        self.root.mkdir(parents=True, exist_ok=True)
+        snap = {"schema": SNAPSHOT_SCHEMA,
+                "records": [r.to_dict() for r in records.values()]}
+        tmp = self.snapshot_path.with_suffix(".json.tmp")
+        with open(tmp, "w", encoding="utf-8") as f:
+            f.write(json.dumps(snap, sort_keys=True, separators=(",", ":")))
+            f.flush()
+            os.fsync(f.fileno())
+        tmp.replace(self.snapshot_path)
+        jtmp = self.journal_path.with_suffix(".jsonl.tmp")
+        jtmp.write_text("")
+        jtmp.replace(self.journal_path)

@@ -1,0 +1,169 @@
+"""DSE launcher CLI: persistent, resumable Pareto studies (DESIGN.md §13).
+
+    PYTHONPATH=src python -m repro.launch.dse run    --study artifacts/dse/study6 --preset smoke
+    PYTHONPATH=src python -m repro.launch.dse resume --study artifacts/dse/study6
+    PYTHONPATH=src python -m repro.launch.dse report --study artifacts/dse/study6
+    PYTHONPATH=src python -m repro.launch.dse check  --study artifacts/dse/study6 \\
+        --against artifacts/dse/FRONTIER_6.json
+
+``run`` creates (or extends) the study and evaluates every un-journaled
+trial; ``resume`` is ``run`` restricted to an existing study dir (space,
+probe mode and seed come from its ``study.json``) — with ``--assert-no-exec``
+it exits nonzero if any trial had to be executed, which is how CI proves
+the resume path replays instead of recomputing. ``report`` prints the
+frontier; ``check`` compares the study's frontier against a committed
+artifact and exits 1 on regression.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+from repro.dse import (Study, compare_frontiers, load_frontier,
+                       update_snapshot)
+from repro.dse.space import PRESETS, SearchSpace
+from repro.dse.study import FRONTIER_FILE
+
+BENCH_DIR = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "bench"
+BENCH_SNAPSHOT = "BENCH_6.json"
+
+
+def _load_space(args) -> SearchSpace | None:
+    if getattr(args, "space_json", None):
+        return SearchSpace.from_dict(
+            json.loads(pathlib.Path(args.space_json).read_text()))
+    if getattr(args, "preset", None):
+        return PRESETS[args.preset]()
+    return None
+
+
+def _print_summary(study: Study) -> dict:
+    row = study.summary()
+    print(f"study {row['study']}: {row['trials_recorded']}/"
+          f"{row['trials_total']} trials recorded "
+          f"({row['trials_infeasible']} infeasible) — this run executed "
+          f"{row['executed_this_run']}, replayed {row['replayed_this_run']}; "
+          f"serve probes {row['probe_runs']} run / "
+          f"{row['probe_cache_hits']} cached")
+    for target, n in row["frontier_points"].items():
+        print(f"  frontier[{target}]: {n} points")
+    return row
+
+
+def _emit_bench(row: dict) -> None:
+    path = BENCH_DIR / BENCH_SNAPSHOT
+    update_snapshot(path, {"dse_summary": [row]}, seed=row.get("seed"))
+    print(f"folded summary into {path}")
+
+
+def cmd_run(args, resume_only: bool = False) -> int:
+    space = None if resume_only else _load_space(args)
+    root = pathlib.Path(args.study)
+    if resume_only and not (root / "study.json").exists():
+        print(f"no study at {root} (run `dse run` first)", file=sys.stderr)
+        return 2
+    with Study(root, space, measure=getattr(args, "measure", None),
+               seed=getattr(args, "seed", None)) as study:
+        study.run(max_trials=args.max_trials, compact=args.compact)
+        row = _print_summary(study)
+        if args.emit_bench:
+            _emit_bench({**row, "seed": study.seed})
+        if getattr(args, "assert_no_exec", False) and row["executed_this_run"]:
+            print(f"RESUME REGRESSION: {row['executed_this_run']} trials "
+                  f"re-executed (expected 0)", file=sys.stderr)
+            return 1
+    return 0
+
+
+def cmd_report(args) -> int:
+    root = pathlib.Path(args.study)
+    front = load_frontier(root / FRONTIER_FILE)
+    names = front["objectives"]
+    print(f"objectives: {names}  "
+          f"(trials: {front['trials']['completed']} completed, "
+          f"{front['trials']['infeasible']} infeasible)")
+    for target, pts in front["groups"].items():
+        print(f"\n## {target} ({len(pts)} frontier points)\n")
+        cols = ["kind", "R", "degree", "fused", "batch"] + list(names)
+        print("| " + " | ".join(cols) + " |")
+        print("|" + "---|" * len(cols))
+        for pt in pts:
+            p = pt["params"]
+            row = [p["kind"], p["lookup_bits"], pt["metrics"].get("degree"),
+                   p["fused"], p["batch"]]
+            row += [f"{v:.4g}" for v in pt["objectives"]]
+            print("| " + " | ".join(str(v) for v in row) + " |")
+    return 0
+
+
+def cmd_check(args) -> int:
+    fresh_path = pathlib.Path(args.study) / FRONTIER_FILE
+    if not fresh_path.exists():
+        print(f"no frontier at {fresh_path} — run the study to completion "
+              f"first", file=sys.stderr)
+        return 2
+    fresh = load_frontier(fresh_path)
+    committed = load_frontier(args.against)
+    problems = compare_frontiers(fresh, committed)
+    if problems:
+        print(f"FRONTIER REGRESSION vs {args.against}:", file=sys.stderr)
+        for p in problems:
+            print(f"  - {p}", file=sys.stderr)
+        return 1
+    n = sum(len(v) for v in committed["groups"].values())
+    print(f"frontier check OK: all {n} committed points attained")
+    return 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(prog="repro.launch.dse")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    def common(p, with_space: bool):
+        p.add_argument("--study", required=True, help="study directory")
+        p.add_argument("--max-trials", type=int, default=None)
+        p.add_argument("--compact", action="store_true",
+                       help="fold the journal into snapshot.json afterwards")
+        p.add_argument("--emit-bench", action="store_true",
+                       help=f"fold a summary row into "
+                            f"artifacts/bench/{BENCH_SNAPSHOT}")
+        if with_space:
+            p.add_argument("--preset", choices=sorted(PRESETS),
+                           default="smoke")
+            p.add_argument("--space-json", default=None,
+                           help="SearchSpace JSON file (overrides --preset)")
+            p.add_argument("--measure", choices=("modeled", "wall", "none"),
+                           default=None)
+            p.add_argument("--seed", type=int, default=None)
+
+    p_run = sub.add_parser("run", help="create/extend a study")
+    common(p_run, with_space=True)
+
+    p_res = sub.add_parser("resume", help="continue an existing study")
+    common(p_res, with_space=False)
+    p_res.add_argument("--assert-no-exec", action="store_true",
+                       help="fail if any trial had to be (re-)executed")
+
+    p_rep = sub.add_parser("report", help="print the frontier tables")
+    p_rep.add_argument("--study", required=True)
+
+    p_chk = sub.add_parser("check",
+                           help="regression-check vs a committed frontier")
+    p_chk.add_argument("--study", required=True)
+    p_chk.add_argument("--against", required=True,
+                       help="committed frontier artifact path")
+
+    args = ap.parse_args(argv)
+    if args.cmd == "run":
+        return cmd_run(args)
+    if args.cmd == "resume":
+        return cmd_run(args, resume_only=True)
+    if args.cmd == "report":
+        return cmd_report(args)
+    return cmd_check(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

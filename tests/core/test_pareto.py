@@ -1,0 +1,110 @@
+"""core.pareto: the shared multi-objective frontier (ISSUE 6).
+
+The 2-D behaviour is pinned to the seed's inline sort-and-scan algorithm
+(kept here as the oracle) — ``DesignSpaceResult.pareto`` was rewired onto
+``pareto_indices`` and must not change output. The k-D generalization is
+property-tested against the domination definition directly.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.api.result import DesignSpaceResult, ExploreEntry
+from repro.core.pareto import dominates, pareto_front, pareto_indices
+
+
+def _oracle_2d(points: list[tuple[float, float]]) -> list[tuple[float, float]]:
+    """The seed's DesignSpaceResult.pareto algorithm, verbatim."""
+    front, best_delay = [], float("inf")
+    for p in sorted(points):
+        if p[1] < best_delay:
+            front.append(p)
+            best_delay = p[1]
+    return front
+
+
+def test_empty_and_singleton():
+    assert pareto_indices([]) == []
+    assert pareto_indices([(3.0, 4.0)]) == [0]
+
+
+def test_matches_2d_oracle_random():
+    rng = np.random.default_rng(0)
+    for n in (1, 2, 5, 40):
+        for _ in range(20):
+            # quantized coords force plenty of ties and duplicates
+            pts = [tuple(map(float, p))
+                   for p in rng.integers(0, 6, size=(n, 2))]
+            assert pareto_front(pts) == _oracle_2d(pts)
+
+
+def test_duplicates_keep_first_index():
+    pts = [(1.0, 1.0), (1.0, 1.0), (2.0, 0.5)]
+    assert pareto_indices(pts) == [0, 2]
+
+
+def test_3d_invariants_random():
+    rng = np.random.default_rng(1)
+    for _ in range(30):
+        pts = [tuple(map(float, p))
+               for p in rng.integers(0, 5, size=(25, 3))]
+        kept = pareto_indices(pts)
+        kept_set = set(kept)
+        # kept points: not weakly dominated by any distinct-valued point
+        for i in kept:
+            assert not any(dominates(pts[j], pts[i])
+                           for j in range(len(pts)) if pts[j] != pts[i])
+        # every dropped point is weakly dominated by some kept point
+        for j in range(len(pts)):
+            if j not in kept_set:
+                assert any(dominates(pts[i], pts[j]) for i in kept)
+        # ordering: ascending objective vectors
+        assert [pts[i] for i in kept] == sorted(pts[i] for i in kept)
+
+
+def test_dominates_arity_mismatch():
+    with pytest.raises(ValueError):
+        dominates((1.0,), (1.0, 2.0))
+    with pytest.raises(ValueError):
+        pareto_indices([(1.0, 2.0), (1.0,)])
+
+
+@given(st.lists(st.tuples(st.integers(0, 8), st.integers(0, 8)), max_size=30))
+@settings(max_examples=60, deadline=None)
+def test_property_matches_2d_oracle(pts):
+    pts = [tuple(map(float, p)) for p in pts]
+    assert pareto_front(pts) == _oracle_2d(pts)
+
+
+@given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, 5),
+                          st.integers(0, 5)), max_size=25))
+@settings(max_examples=60, deadline=None)
+def test_property_kd_sound_and_complete(pts):
+    pts = [tuple(map(float, p)) for p in pts]
+    kept = pareto_indices(pts)
+    kept_set = set(kept)
+    for j in range(len(pts)):
+        if j in kept_set:
+            # nothing strictly better exists
+            assert not any(dominates(pts[i], pts[j]) and pts[i] != pts[j]
+                           for i in range(len(pts)) if i != j)
+        else:
+            assert any(dominates(pts[i], pts[j]) for i in kept)
+
+
+def _entry(area: float, delay: float) -> ExploreEntry:
+    # pareto() only touches .area/.delay; design/report stay out of play
+    return ExploreEntry(design=None, report=None, area=area, delay=delay,
+                        runtime_s=0.0, objective=area * delay)
+
+
+def test_design_space_result_rewired():
+    entries = [_entry(1, 5), _entry(2, 3), _entry(2, 4), _entry(3, 3),
+               _entry(4, 1), _entry(4, 1)]
+    res = DesignSpaceResult("spec", "asic", entries, None)
+    front = [(e.area, e.delay) for e in res.pareto()]
+    assert front == _oracle_2d([(e.area, e.delay) for e in entries])
+    assert front == [(1, 5), (2, 3), (4, 1)]

@@ -1,0 +1,138 @@
+"""StudyStore: fsync'd journal appends, torn-write recovery, compaction."""
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from repro.dse.store import StoreCorrupt, StudyStore
+from repro.dse.trial import TrialParams, TrialRecord
+
+
+def _rec(i: int) -> TrialRecord:
+    p = TrialParams(kind="recip", lookup_bits=4 + i, target="asic")
+    return TrialRecord(p, "ok",
+                       metrics={"area": float(10 * i), "delay": 2.0,
+                                "accuracy_margin": i},
+                       objectives=[float(10 * i), 2.0, -float(i)],
+                       timing={"eval_s": 0.1 * i})
+
+
+def test_roundtrip(tmp_path):
+    with StudyStore(tmp_path / "s") as store:
+        for i in range(4):
+            store.append(_rec(i))
+    loaded = StudyStore(tmp_path / "s").load()
+    assert len(loaded) == 4
+    for i in range(4):
+        rec = loaded[_rec(i).params.key]
+        assert rec.metrics == _rec(i).metrics
+        assert rec.objectives == _rec(i).objectives
+        assert rec.ok
+
+
+def test_appends_are_fsynced(tmp_path, monkeypatch):
+    import repro.dse.store as store_mod
+
+    calls = []
+    real_fsync = store_mod.os.fsync
+    monkeypatch.setattr(store_mod.os, "fsync",
+                        lambda fd: (calls.append(fd), real_fsync(fd))[1])
+    with StudyStore(tmp_path / "s") as store:
+        store.append(_rec(0))
+        store.append(_rec(1))
+    assert len(calls) == 2  # one fsync per durable append
+
+
+def test_torn_tail_without_newline_dropped(tmp_path):
+    store = StudyStore(tmp_path / "s")
+    for i in range(3):
+        store.append(_rec(i))
+    store.close()
+    # simulate a kill mid-append: a partial record with no newline
+    with open(store.journal_path, "a") as f:
+        f.write('{"schema": 1, "key": "torn", "par')
+    reloaded = StudyStore(tmp_path / "s")
+    assert len(reloaded.load()) == 3
+    assert reloaded.torn_tail_drops == 1
+    # appending after the torn tail truncates the fragment first: the new
+    # record must not merge into it
+    reloaded.append(_rec(7))
+    assert len(StudyStore(tmp_path / "s").load()) == 4
+
+
+def test_unterminated_but_complete_record_kept(tmp_path):
+    store = StudyStore(tmp_path / "s")
+    store.append(_rec(0))
+    store.append(_rec(1))
+    store.close()
+    # strip only the final newline: the record itself is complete
+    data = store.journal_path.read_bytes()
+    store.journal_path.write_bytes(data[:-1])
+    reloaded = StudyStore(tmp_path / "s")
+    assert len(reloaded.load()) == 2  # not dropped
+    reloaded.append(_rec(2))  # trim path terminates, never truncates it
+    assert len(StudyStore(tmp_path / "s").load()) == 3
+
+
+def test_torn_final_line_with_newline_dropped(tmp_path):
+    store = StudyStore(tmp_path / "s")
+    for i in range(2):
+        store.append(_rec(i))
+    store.close()
+    with open(store.journal_path, "a") as f:
+        f.write('{"schema": 1, "key": "half\n')
+    reloaded = StudyStore(tmp_path / "s")
+    assert len(reloaded.load()) == 2
+    assert reloaded.torn_tail_drops == 1
+
+
+def test_mid_file_corruption_raises(tmp_path):
+    store = StudyStore(tmp_path / "s")
+    for i in range(3):
+        store.append(_rec(i))
+    store.close()
+    lines = store.journal_path.read_text().splitlines()
+    lines[1] = lines[1][:10]  # damage a NON-tail line
+    store.journal_path.write_text("\n".join(lines) + "\n")
+    with pytest.raises(StoreCorrupt):
+        StudyStore(tmp_path / "s").load()
+
+
+def test_compaction(tmp_path):
+    store = StudyStore(tmp_path / "s")
+    for i in range(5):
+        store.append(_rec(i))
+    before = store.load()
+    store.compact()
+    assert store.snapshot_path.exists()
+    assert store.journal_path.read_text() == ""
+    assert not list(store.root.glob("*.tmp"))
+    after = StudyStore(tmp_path / "s").load()
+    assert after.keys() == before.keys()
+    assert all(after[k].to_dict() == before[k].to_dict() for k in after)
+    # appends keep working post-compaction and merge with the snapshot
+    store.append(_rec(9))
+    assert len(StudyStore(tmp_path / "s").load()) == 6
+
+
+def test_crash_between_snapshot_and_journal_reset_dedups(tmp_path):
+    store = StudyStore(tmp_path / "s")
+    for i in range(3):
+        store.append(_rec(i))
+    journal_bytes = store.journal_path.read_text()
+    store.compact()
+    # crash window: snapshot renamed, journal reset lost — records doubled
+    store.journal_path.write_text(journal_bytes)
+    assert len(StudyStore(tmp_path / "s").load()) == 3
+
+
+def test_snapshot_schema_guard(tmp_path):
+    store = StudyStore(tmp_path / "s")
+    store.append(_rec(0))
+    store.compact()
+    doc = json.loads(store.snapshot_path.read_text())
+    doc["schema"] = 99
+    store.snapshot_path.write_text(json.dumps(doc))
+    with pytest.raises(StoreCorrupt):
+        StudyStore(tmp_path / "s").load()

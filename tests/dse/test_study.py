@@ -1,0 +1,169 @@
+"""Study resume semantics, kill-mid-write recovery, frontier regression.
+
+The acceptance contract of ISSUE 6: a study killed mid-run and resumed
+produces a BIT-IDENTICAL frontier artifact to an uninterrupted run, with
+zero completed trials re-executed (asserted via the executed/replayed
+counters), and the check mode flags an injected frontier regression.
+
+These tests run with ``measure="none"`` (proxy objectives only) so no
+serve engine is compiled; the modeled-throughput probe has its own test
+at the bottom (one tiny engine, cached across trials).
+"""
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from repro.dse import (SearchSpace, Study, compare_frontiers, load_frontier,
+                       smoke_space)
+from repro.dse.study import accuracy_margin_ulp
+
+
+def _space() -> SearchSpace:
+    # 8-bit recip keeps exploration sub-second per trial; two targets so the
+    # frontier has two unit systems (groups); R=3 is typically infeasible,
+    # exercising the infeasible-records path deterministically either way
+    return SearchSpace(kinds=("recip",), lookup_bits=(3, 4, 5, 6),
+                       targets=("asic", "pallas-tpu"), bits=(8,),
+                       fused=(True,), horizons=(4,), batches=(2,))
+
+
+N = 8  # |_space()|
+
+
+def _run_full(root, **kw):
+    with Study(root, _space(), measure="none", name="t", **kw) as study:
+        study.run()
+        return study
+
+
+def test_full_run_counts_and_artifacts(tmp_path):
+    study = _run_full(tmp_path / "a")
+    assert study.stats["executed"] == N
+    assert study.stats["replayed"] == 0
+    assert study.frontier_path().exists()
+    front = load_frontier(study.frontier_path())
+    assert front["objectives"] == ["area", "delay", "neg_accuracy_margin"]
+    assert set(front["groups"]) <= {"asic", "pallas-tpu"}
+    assert all(front["groups"].values())  # every group non-empty
+    # objective sanity: margins are >= 0 for verified designs
+    for pts in front["groups"].values():
+        for pt in pts:
+            assert pt["metrics"]["accuracy_margin"] >= 0
+            assert pt["objectives"][2] == -pt["metrics"]["accuracy_margin"]
+
+
+def test_resume_replays_zero_trials(tmp_path):
+    _run_full(tmp_path / "a")
+    bytes_before = (tmp_path / "a" / "frontier.json").read_bytes()
+    # space=None: everything (space, measure, seed) comes from study.json
+    with Study(tmp_path / "a") as resumed:
+        resumed.run()
+        assert resumed.stats["executed"] == 0
+        assert resumed.stats["replayed"] == N
+    assert (tmp_path / "a" / "frontier.json").read_bytes() == bytes_before
+
+
+def test_kill_mid_run_resume_bit_identical(tmp_path):
+    ref = _run_full(tmp_path / "a")
+    # interrupted run: 3 trials land, then the process dies mid-append
+    with Study(tmp_path / "b", _space(), measure="none", name="t") as part:
+        part.run(max_trials=3)
+        assert part.stats["executed"] == 3
+        journal = part.store.journal_path
+    with open(journal, "a") as f:
+        f.write('{"schema": 1, "key": "killed-mid-')  # torn tail, no newline
+    assert not (tmp_path / "b" / "frontier.json").exists()
+    with Study(tmp_path / "b") as resumed:
+        resumed.run()
+        assert resumed.stats["replayed"] == 3  # zero completed re-executed
+        assert resumed.stats["executed"] == N - 3
+    assert (tmp_path / "b" / "frontier.json").read_bytes() == \
+        ref.frontier_path().read_bytes()
+
+
+def test_compaction_preserves_frontier(tmp_path):
+    study = _run_full(tmp_path / "a")
+    bytes_before = study.frontier_path().read_bytes()
+    with Study(tmp_path / "a") as again:
+        again.run(compact=True)
+    assert (tmp_path / "a" / "snapshot.json").exists()
+    with Study(tmp_path / "a") as resumed:
+        resumed.run()
+        assert resumed.stats["executed"] == 0
+        assert resumed.stats["replayed"] == N
+    assert study.frontier_path().read_bytes() == bytes_before
+
+
+def test_check_flags_injected_regression(tmp_path):
+    study = _run_full(tmp_path / "a")
+    fresh = load_frontier(study.frontier_path())
+    # self-comparison: healthy
+    assert compare_frontiers(fresh, fresh) == []
+    # inject an unattainable committed point: area/delay 0 with a huge margin
+    committed = json.loads(json.dumps(fresh))
+    committed["groups"]["asic"].append({
+        "params": {"kind": "recip", "lookup_bits": 2},
+        "metrics": {},
+        "objectives": [0.0, 0.0, -1e9],
+    })
+    problems = compare_frontiers(fresh, committed)
+    assert len(problems) == 1 and "no longer attained" in problems[0]
+    # axis change is its own loud failure
+    renamed = dict(fresh, objectives=list(fresh["objectives"]) + ["extra"])
+    assert "objective axes changed" in compare_frontiers(renamed, fresh)[0]
+    # a vanished target group is flagged
+    missing = json.loads(json.dumps(fresh))
+    del missing["groups"]["asic"]
+    assert any("vanished" in p for p in compare_frontiers(missing, fresh))
+
+
+def test_measure_change_refused(tmp_path):
+    _run_full(tmp_path / "a")
+    with pytest.raises(ValueError, match="measure"):
+        Study(tmp_path / "a", measure="modeled")
+
+
+def test_margin_is_exact_envelope_slack():
+    from repro.api import get_table
+    from repro.api.config import spec_for
+
+    design = get_table("recip", bits=8, lookup_bits=6)
+    spec = spec_for("recip", 8)
+    margin = accuracy_margin_ulp(design, spec)
+    ok, worst = design.verify(spec)
+    assert ok and worst == 0
+    assert margin >= 0  # verified <=> non-negative slack
+
+
+def test_smoke_space_shape():
+    space = smoke_space()
+    trials = list(space.trials())
+    assert len(trials) == len(space) == 16
+    keys = {p.key for p in trials}
+    assert len(keys) == 16  # keys are unique
+    # round-trip through the study-file serialization
+    assert SearchSpace.from_dict(space.to_dict()) == space
+
+
+def test_modeled_probe_end_to_end(tmp_path):
+    """One real ServeEngine probe, shared across trials via the shape cache;
+    deterministic counter-modeled throughput lands in the objectives."""
+    space = SearchSpace(kinds=("recip", "exp2neg"), lookup_bits=(6,),
+                        targets=("asic",), fused=(True,), horizons=(4,),
+                        batches=(2,), arch="yi_6b")
+    with Study(tmp_path / "m", space, measure="modeled", name="m") as study:
+        records = study.run()
+        assert study.stats["executed"] == 2
+        # both trials share one serving shape: one engine run, one cache hit
+        assert study.probe.stats == {"runs": 1, "hits": 1}
+        recs = [r for r in records.values() if r.ok]
+        assert recs, "smoke trials must be feasible at the registry defaults"
+        for rec in recs:
+            assert rec.metrics["throughput_mode"] == "modeled"
+            assert rec.metrics["tokens_per_s"] > 0
+            assert len(rec.objectives) == 4
+            assert rec.objectives[3] == -rec.metrics["tokens_per_s"]
+    front = load_frontier((tmp_path / "m") / "frontier.json")
+    assert front["objectives"][-1] == "neg_tokens_per_s"
