@@ -1,0 +1,204 @@
+"""Chaos serving benchmark (ISSUE 7): the robustness layer under load.
+
+Drives the fault-injection harness (:mod:`repro.faults`) through real
+continuous-batching runs and reports what the serving-robustness layer
+costs and what it buys (DESIGN.md §14):
+
+  chaos_overhead   healthy-path cost of the guard rails — baseline fused
+                   serve vs the same run with an fsync'd journal, a
+                   per-request deadline, and periodic resident-ROM
+                   verification. Counter columns (dispatches/transfers per
+                   token) are deterministic and must NOT move: the
+                   watchdog sentinel rides the existing token download.
+  chaos_faults     each injected fault family (NaN'd tick, dropped tick,
+                   corrupt ROM, deadline storm) against the engine:
+                   structured failures, watchdog trips, degradations, and
+                   the rung the engine lands on — plus how many requests
+                   still complete after degradation.
+  chaos_recovery   kill-9 at the tick crash point, ``ServeEngine.resume``:
+                   replayed teacher-forcing steps vs decode steps saved
+                   (completed work skipped), recovery wall time, and a
+                   bitwise check of the recovered streams against an
+                   uninterrupted run.
+
+Rows land in ``artifacts/bench/chaos_*.json`` and are folded into
+``BENCH_7.json`` by ``benchmarks.run`` (CI chaos-smoke uploads it).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import QUICK, emit
+from repro.api import default_explorer
+from repro.configs.base import get_smoke_config
+from repro.faults import (FaultClock, TickFaultInjector, arm_crashpoint,
+                          flip_rom_bit, reset_crashpoints)
+from repro.faults.inject import Crashed
+from repro.models import transformer as tf
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.journal import load_requests
+
+N_REQ = 6 if QUICK else 10
+MAX_NEW = 16 if QUICK else 32
+SLOTS, CACHE_LEN, HORIZON = 4, 128, 8
+SEED = 0
+
+
+def _prompts(cfg):
+    rng = np.random.default_rng(SEED)
+    return [rng.integers(0, cfg.vocab_size, 4 + (i * 5) % 19).astype(np.int32)
+            for i in range(N_REQ)]
+
+
+def _engine(cfg, params, **kw):
+    kw.setdefault("slots", SLOTS)
+    kw.setdefault("cache_len", CACHE_LEN)
+    kw.setdefault("horizon", HORIZON)
+    return ServeEngine(cfg, params, **kw)
+
+
+def _serve(eng, prompts, max_new=MAX_NEW):
+    for i, p in enumerate(prompts):
+        eng.submit(Request(i, p, max_new=max_new))
+    t0 = time.perf_counter()
+    done = eng.run()
+    return done, time.perf_counter() - t0
+
+
+def _overhead_rows(cfg, params, lib, prompts, tmp):
+    # warm the jit cache first so the baseline row isn't charged compile time
+    _serve(_engine(cfg, params, library=lib, fused=True), prompts)
+    rows = []
+    scenarios = [
+        ("baseline", {}),
+        ("journal", {"journal": str(tmp / "bench_serve.jsonl")}),
+        ("deadline+rom_verify", {"deadline_s": 3600.0, "verify_rom_every": 4}),
+    ]
+    for name, kw in scenarios:
+        eng = _engine(cfg, params, library=lib, fused=True, **kw)
+        done, dt = _serve(eng, prompts)
+        toks = sum(len(r.out) for r in done)
+        steps = max(eng.stats["decode_steps"], 1)
+        rows.append({
+            "scenario": name, "tokens": toks, "wall_s": round(dt, 4),
+            "tokens_per_s": round(toks / dt, 1),
+            "dispatches_per_token": round(eng.stats["dispatches"] / steps, 4),
+            "transfers_per_token": round(eng.stats["transfers"] / steps, 4),
+            "rom_verifies": eng.stats["rom_verifies"],
+        })
+    return rows
+
+
+def _fault_rows(cfg, params, icfg, lib, prompts):
+    rows = []
+
+    def row(name, eng, done, note=""):
+        rows.append({
+            "fault": name, "finished": len(eng.finished),
+            "failed": len(eng.failed),
+            "watchdog_trips": eng.stats["watchdog_trips"],
+            "degradations": eng.stats["degradations"],
+            "rom_faults": eng.stats["rom_faults"],
+            "final_rung": eng._rung(), "note": note,
+        })
+
+    # NaN'd ticks until the engine walks off the fused rung
+    eng = _engine(cfg, params, fused=True, watchdog_limit=2)
+    TickFaultInjector("nan", every_n=1, limit=2).install(eng)
+    done, _ = _serve(eng, prompts)
+    row("nan_tick_x2", eng, done, "poisoned chunks never streamed")
+
+    # one dropped tick: structured failure, no silent progress
+    eng = _engine(cfg, params, fused=True, watchdog_limit=100)
+    TickFaultInjector("drop", every_n=1, limit=1).install(eng)
+    done, _ = _serve(eng, prompts)
+    row("dropped_tick", eng, done)
+
+    # corrupt resident ROM: detected at construction, straight to exact
+    eng = _engine(icfg, params, fused=True, library=flip_rom_bit(lib, seed=3))
+    done, _ = _serve(eng, prompts)
+    row("rom_bit_flip", eng, done, "verify_resident at construction")
+
+    # deadline storm: a clock jump expires everything still queued
+    clk = FaultClock()
+    eng = _engine(cfg, params, fused=True, clock=clk, deadline_s=1.0,
+                  slots=1)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(i, p, max_new=MAX_NEW))
+    eng.step(HORIZON)
+    clk.advance(2.0)
+    eng.run()
+    row("deadline_storm", eng, None,
+        f"expired={eng.stats['expired']}")
+    return rows
+
+
+def _recovery_rows(cfg, params, prompts, tmp):
+    # uninterrupted reference
+    ref_eng = _engine(cfg, params, fused=True)
+    ref_done, _ = _serve(ref_eng, prompts)
+    want = {r.rid: r.out for r in ref_done}
+
+    jp = tmp / "bench_crash.jsonl"
+    eng = _engine(cfg, params, fused=True, horizon=2, journal=str(jp))
+    arm_crashpoint("serve.tick.emitted", after=3)
+    crashed = False
+    try:
+        _serve(eng, prompts)
+    except Crashed:
+        crashed = True
+    reset_crashpoints()
+    pre = load_requests(jp)
+    durable_tokens = sum(len(st.out) for st in pre.values())
+
+    t0 = time.perf_counter()
+    res = ServeEngine.resume(str(jp), cfg, params, slots=SLOTS,
+                             cache_len=CACHE_LEN, horizon=2)
+    res.run()
+    dt = time.perf_counter() - t0
+    final = load_requests(jp)
+    bitwise = all(st.out == want[rid] for rid, st in final.items())
+    return [{
+        "crashed": crashed, "durable_tokens_at_crash": durable_tokens,
+        "skipped_done": res.stats["resume_skipped_done"],
+        "replay_steps": res.stats["resume_replay_steps"],
+        "fresh_decode_steps": res.stats["decode_steps"],
+        "recovery_wall_s": round(dt, 4),
+        "streams_bitwise_equal": bitwise,
+    }]
+
+
+def run():
+    import tempfile
+
+    cfg = get_smoke_config("yi_6b")
+    icfg = cfg.replace(numerics="interp")
+    params = tf.init_params(jax.random.key(SEED), cfg)
+    lib = default_explorer().compile()
+    prompts = _prompts(cfg)
+
+    with tempfile.TemporaryDirectory() as td:
+        import pathlib
+
+        tmp = pathlib.Path(td)
+        overhead = _overhead_rows(icfg, params, lib, prompts, tmp)
+        faults = _fault_rows(cfg, params, icfg, lib, prompts)
+        recovery = _recovery_rows(cfg, params, prompts, tmp)
+
+    emit("chaos_overhead", overhead)
+    emit("chaos_faults", faults)
+    emit("chaos_recovery", recovery)
+
+    assert recovery[0]["streams_bitwise_equal"], \
+        "resumed streams diverged from the uninterrupted run"
+    base = overhead[0]
+    for r in overhead[1:]:
+        assert r["dispatches_per_token"] == base["dispatches_per_token"], \
+            f"{r['scenario']}: robustness knobs changed the dispatch counters"
+
+
+if __name__ == "__main__":
+    run()

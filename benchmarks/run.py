@@ -57,6 +57,9 @@ _SNAPSHOTS = {
     "BENCH_5.json": {
         "decode_fused": ("decode_fused",),
     },
+    "BENCH_7.json": {
+        "chaos_serve": ("chaos_overhead", "chaos_faults", "chaos_recovery"),
+    },
 }
 
 
@@ -95,17 +98,17 @@ def main() -> None:
     global QUICK_RUN
     QUICK_RUN = args.quick
 
-    from benchmarks import (batched_engine, claim21, decode_fused,
-                            fig3_lub_sweep, fleet_compile, kernels_bench,
-                            roofline_report, scaling, serve_path, table1,
-                            table2)
+    from benchmarks import (batched_engine, chaos_serve, claim21,
+                            decode_fused, fig3_lub_sweep, fleet_compile,
+                            kernels_bench, roofline_report, scaling,
+                            serve_path, table1, table2)
     mods = {
         "table1": table1, "table2": table2, "claim21": claim21,
         "scaling": scaling, "batched_engine": batched_engine,
         "fleet_compile": fleet_compile,
         "fig3_lub_sweep": fig3_lub_sweep, "kernels_bench": kernels_bench,
         "serve_path": serve_path, "decode_fused": decode_fused,
-        "roofline_report": roofline_report,
+        "chaos_serve": chaos_serve, "roofline_report": roofline_report,
     }
     only = set(args.only.split(",")) if args.only else None
     if only and not only <= set(mods):

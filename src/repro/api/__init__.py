@@ -21,7 +21,8 @@ from repro.api.config import DEFAULTS, ExploreConfig, spec_for  # noqa: F401
 from repro.api.explorer import (Explorer, default_explorer, explore,  # noqa: F401
                                 get_table, set_default_explorer)
 from repro.api.library import (DEFAULT_LIBRARY_KINDS, FuncMeta,  # noqa: F401
-                               InterpLibrary, load_library)
+                               InterpLibrary, LibraryIntegrityError,
+                               load_library)
 from repro.api.result import DesignSpaceResult, ExploreEntry  # noqa: F401
 from repro.api.target import (Target, get_target, list_targets,  # noqa: F401
                               register_target)
@@ -32,7 +33,8 @@ from repro.core.table import TableDesign  # noqa: F401
 __all__ = [
     "DEFAULTS", "DEFAULT_LIBRARY_KINDS", "DecisionPolicy",
     "DesignSpaceResult", "ExploreConfig", "ExploreEntry", "Explorer",
-    "FuncMeta", "FunctionSpec", "InterpLibrary", "TableDesign", "Target",
+    "FuncMeta", "FunctionSpec", "InterpLibrary", "LibraryIntegrityError",
+    "TableDesign", "Target",
     "default_explorer", "explore", "get_spec", "get_table", "get_target",
     "list_targets", "load_library", "register_target",
     "set_default_explorer", "spec_for",

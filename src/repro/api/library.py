@@ -42,6 +42,17 @@ DEFAULT_LIBRARY_KINDS = ("exp2neg", "gelu", "recip", "rsqrt", "sigmoid",
 _FORMAT_VERSION = 1
 
 
+class LibraryIntegrityError(RuntimeError):
+    """The resident ROM no longer matches the checksum it was sealed with.
+
+    Raised by :meth:`InterpLibrary.verify_resident` — the serve-time
+    counterpart of the load-time ``coeffs_sha`` check: a bit flipped in the
+    in-memory coefficient ROM *after* a clean load (DMA corruption, a rogue
+    write, an injected fault) is caught here instead of silently decoding
+    garbage through every fused kernel that gathers the ROM.
+    """
+
+
 @dataclasses.dataclass(frozen=True)
 class FuncMeta:
     """Static per-function metadata of one library slot (hashable)."""
@@ -80,13 +91,14 @@ class InterpLibrary:
     hook and performs no validation (leaves may be tracers).
     """
 
-    __slots__ = ("coeffs", "metas", "_index", "_meta_rows")
+    __slots__ = ("coeffs", "metas", "_index", "_meta_rows", "_sealed_sha")
 
     def __init__(self, coeffs, metas: tuple[FuncMeta, ...]):
         self.coeffs = coeffs  # (F, R_max, 3) int32 — the only dynamic leaf
         self.metas = tuple(metas)
         self._index = {m.kind: i for i, m in enumerate(self.metas)}
         self._meta_rows = None  # lazy (F, 5) device array
+        self._sealed_sha = None  # integrity baseline (seal/verify_resident)
 
     # -- construction ------------------------------------------------------
     @classmethod
@@ -122,7 +134,7 @@ class InterpLibrary:
         packed = np.zeros((len(designs), r_max, 3), np.int32)
         for i, d in enumerate(designs):
             packed[i, : 1 << d.lookup_bits] = d.packed_coeffs()
-        return cls(jnp.asarray(packed), tuple(metas))
+        return cls(jnp.asarray(packed), tuple(metas)).seal()
 
     # -- introspection -----------------------------------------------------
     @property
@@ -167,6 +179,44 @@ class InterpLibrary:
                 return rows
             self._meta_rows = rows
         return self._meta_rows
+
+    # -- integrity ---------------------------------------------------------
+    def rom_sha(self) -> str:
+        """Checksum of the ROM bits actually resident right now (downloads
+        the coefficient leaf; host-side only — never call under a trace)."""
+        coeffs = np.asarray(self.coeffs, np.int32)
+        return hashlib.sha256(
+            np.ascontiguousarray(coeffs).tobytes()).hexdigest()[:16]
+
+    def seal(self, sha: str | None = None) -> "InterpLibrary":
+        """Record the integrity baseline ``verify_resident`` checks against
+        (the current resident checksum, or a known-good one from a saved
+        manifest). Construction paths seal automatically; returns self."""
+        self._sealed_sha = sha or self.rom_sha()
+        return self
+
+    @property
+    def sealed_sha(self) -> str | None:
+        return self._sealed_sha
+
+    def verify_resident(self) -> str:
+        """Re-checksum the in-memory ROM against the sealed baseline.
+
+        This is the *serve-time* integrity guard (DESIGN.md §14): ``load``
+        already rejects a corrupt artifact, but a post-load bit flip in the
+        resident device buffer is invisible to that check. An unsealed
+        library (pytree round-trips drop the baseline) is sealed on first
+        verify. Returns the verified checksum; raises
+        :class:`LibraryIntegrityError` on mismatch.
+        """
+        sha = self.rom_sha()
+        if self._sealed_sha is None:
+            self._sealed_sha = sha
+        elif sha != self._sealed_sha:
+            raise LibraryIntegrityError(
+                f"resident ROM checksum {sha} != sealed {self._sealed_sha}: "
+                f"the in-memory coefficient ROM was corrupted after load")
+        return sha
 
     def manifest(self) -> dict:
         f, r_max, _ = np.shape(self.coeffs)
@@ -267,7 +317,7 @@ class InterpLibrary:
         if man.get("coeffs_sha") and sha != man["coeffs_sha"]:
             raise ValueError(f"corrupt library ROM {base}.npz")
         metas = tuple(FuncMeta(**f) for f in man["funcs"])
-        return cls(jnp.asarray(coeffs), metas)
+        return cls(jnp.asarray(coeffs), metas).seal(sha)
 
 
 def load_library(path: str | pathlib.Path) -> InterpLibrary:

@@ -24,11 +24,14 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import os
 import pathlib
 import shutil
 
 import jax
 import numpy as np
+
+from repro.util.journal import atomic_write_text
 
 
 def _leaf_paths(tree) -> list[tuple[str, object]]:
@@ -78,18 +81,22 @@ def save(directory: str | pathlib.Path, step: int, tree, extra: dict | None = No
     for i, (name, leaf) in enumerate(leaves):
         a, logical = _to_savable(np.asarray(leaf))
         fn = f"arr_{i:05d}.npy"
-        np.save(tmp / fn, a)
+        with open(tmp / fn, "wb") as f:
+            np.save(f, a)
+            f.flush()
+            os.fsync(f.fileno())  # leaf bytes durable before the manifest
         manifest["leaves"].append({
             "name": name, "file": fn, "shape": list(a.shape),
             "dtype": logical, "sha": _checksum(a) if verify else "",
         })
-    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    # the shared tmp+fsync+rename discipline (repro.util.journal): the
+    # manifest and the LATEST pointer can never be torn by a crash — at
+    # every instant they are either the old complete file or the new one
+    atomic_write_text(tmp / "manifest.json", json.dumps(manifest))
     if final.exists():
         shutil.rmtree(final)
     tmp.rename(final)  # atomic commit
-    latest_tmp = d / "LATEST.tmp"
-    latest_tmp.write_text(str(step))
-    latest_tmp.replace(d / "LATEST")  # atomic pointer flip
+    atomic_write_text(d / "LATEST", str(step))  # atomic pointer flip
     return final
 
 

@@ -38,20 +38,39 @@ TRANSFER_COST_S = 2e-5
 MODES = ("modeled", "wall", "none")
 
 
+class ProbeTimeout(RuntimeError):
+    """A serve-probe trial exceeded its wall-clock budget (after retry)."""
+
+
 class ServeProbe:
-    """Shared serve-throughput prober for one study."""
+    """Shared serve-throughput prober for one study.
+
+    ``timeout_s`` bounds one serve run's wall clock: a run that exceeds it
+    (a wedged dispatch, a cold compile on a contended host) is treated as a
+    transient fault — the probe backs off ``backoff_s`` and retries ONCE,
+    and only a second miss raises :class:`ProbeTimeout`. Transient
+    exceptions from the engine get the same one-retry treatment. Retries
+    are reported through the ``"probe_retries"`` side-channel (popped into
+    ``TrialRecord.timing`` by the study, never cached, never in
+    ``metrics``): the deterministic metrics split that the frontier
+    contract regresses against is identical whether or not a retry
+    happened.
+    """
 
     def __init__(self, mode: str = "modeled", *, seed: int = 0,
                  requests: int = 3, prompt_len: int = 8, max_new: int = 8,
-                 cache_len: int = 64, repeats: int = 2):
+                 cache_len: int = 64, repeats: int = 2,
+                 timeout_s: float | None = None, backoff_s: float = 0.05):
         if mode not in MODES:
             raise ValueError(f"unknown probe mode {mode!r}; one of {MODES}")
         self.mode = mode
         self.seed, self.repeats = seed, repeats
         self.requests, self.prompt_len = requests, prompt_len
         self.max_new, self.cache_len = max_new, cache_len
+        self.timeout_s, self.backoff_s = timeout_s, backoff_s
         self.runs = 0
         self.hits = 0
+        self.retries = 0  # lifetime retry count across the study
         self._cache: dict[tuple, dict[str, Any]] = {}
         self._models: dict[str, tuple] = {}  # arch -> (cfg, params)
         self._libraries: dict[Any, Any] = {}
@@ -99,7 +118,23 @@ class ServeProbe:
         t0 = time.perf_counter()
         done = eng.run()
         dt = time.perf_counter() - t0
+        if self.timeout_s is not None and dt > self.timeout_s:
+            raise ProbeTimeout(
+                f"serve probe for {self._key(p)} took {dt:.3f}s "
+                f"(> timeout_s {self.timeout_s}s)")
         return dt, dict(eng.stats), sum(len(r.out) for r in done)
+
+    def _serve_retrying(self, p) -> tuple[int, float, dict[str, int], int]:
+        """One serve run with the retry-once-with-backoff policy; returns
+        ``(retries, wall_s, stats, tokens)``. The second failure — timeout
+        or engine exception — propagates to the study, which records the
+        trial as errored rather than wedging the whole run."""
+        try:
+            return (0, *self._serve_once(p))
+        except Exception:
+            time.sleep(self.backoff_s)
+            self.retries += 1
+            return (1, *self._serve_once(p))
 
     # -- public ------------------------------------------------------------
     def measure(self, p) -> dict[str, Any]:
@@ -120,8 +155,10 @@ class ServeProbe:
         best_wall = float("inf")
         stats: dict[str, int] = {}
         tokens = 0
+        retried = 0
         for _ in range(self.repeats if self.mode == "wall" else 1):
-            dt, stats, tokens = self._serve_once(p)
+            r, dt, stats, tokens = self._serve_retrying(p)
+            retried += r
             best_wall = min(best_wall, dt)
         steps = max(stats.get("decode_steps", 0), 1)
         modeled_t = (stats.get("dispatches", 0) * DISPATCH_COST_S
@@ -136,9 +173,15 @@ class ServeProbe:
         else:
             out["tokens_per_s"] = tokens / max(best_wall, 1e-12)
             out["wall_tokens_per_s"] = out["tokens_per_s"]
+        # the cache holds only the deterministic fields; a retry is a
+        # wall-clock accident of THIS run and is reported, not replayed
         self._cache[key] = out
-        return dict(out)
+        out = dict(out)
+        if retried:
+            out["probe_retries"] = retried
+        return out
 
     @property
     def stats(self) -> dict[str, int]:
-        return {"runs": self.runs, "hits": self.hits}
+        return {"runs": self.runs, "hits": self.hits,
+                "retries": self.retries}

@@ -1,10 +1,11 @@
 """Torn-write-safe study persistence: fsync'd jsonl journal + snapshot.
 
-Discipline (same as ``InterpLibrary.save``, DESIGN.md §10): every journal
-append is one ``\\n``-terminated JSON line flushed and ``fsync``'d before
-the trial is considered durable; compaction writes the full record set to
-``snapshot.json`` via tmp + fsync + atomic rename and only then resets the
-journal. Crash anywhere leaves a recoverable store:
+Discipline (the shared :mod:`repro.util.journal` machinery, same as
+``InterpLibrary.save`` and the serve-state journal — DESIGN.md §10/§14):
+every journal append is one ``\\n``-terminated JSON line flushed and
+``fsync``'d before the trial is considered durable; compaction writes the
+full record set to ``snapshot.json`` via tmp + fsync + atomic rename and
+only then resets the journal. Crash anywhere leaves a recoverable store:
 
   * killed mid-append → the torn final line is detected (no newline, or
     JSON parse failure on the *last* line only) and dropped; every earlier
@@ -17,18 +18,19 @@ journal. Crash anywhere leaves a recoverable store:
 from __future__ import annotations
 
 import json
-import os
 import pathlib
 from typing import Any
 
 from repro.dse.trial import TrialRecord
+from repro.util.journal import (JournalCorrupt, JournalWriter,
+                                atomic_write_text, read_journal)
 
 JOURNAL = "journal.jsonl"
 SNAPSHOT = "snapshot.json"
 SNAPSHOT_SCHEMA = 1
 
 
-class StoreCorrupt(RuntimeError):
+class StoreCorrupt(JournalCorrupt):
     """The on-disk study store is damaged beyond a torn tail."""
 
 
@@ -39,7 +41,7 @@ class StudyStore:
         self.root = pathlib.Path(root)
         self.journal_path = self.root / JOURNAL
         self.snapshot_path = self.root / SNAPSHOT
-        self._fh = None  # lazily opened append handle
+        self._writer = JournalWriter(self.journal_path)
         self.torn_tail_drops = 0  # incomplete final lines discarded on load
 
     # -- lifecycle ---------------------------------------------------------
@@ -50,70 +52,19 @@ class StudyStore:
         self.close()
 
     def close(self) -> None:
-        if self._fh is not None:
-            self._fh.close()
-            self._fh = None
+        self._writer.close()
 
     # -- append ------------------------------------------------------------
-    def _trim_torn_tail(self) -> None:
-        """Repair an unterminated journal tail before appending: a complete
-        record missing only its newline gets terminated; a torn fragment is
-        truncated away (it was never durable — the append that wrote it
-        died before fsync returned)."""
-        if not self.journal_path.exists():
-            return
-        with open(self.journal_path, "rb+") as f:
-            data = f.read()
-            if not data or data.endswith(b"\n"):
-                return
-            cut = data.rfind(b"\n") + 1
-            try:
-                json.loads(data[cut:].decode("utf-8"))
-            except (UnicodeDecodeError, json.JSONDecodeError):
-                f.truncate(cut)
-            else:
-                f.write(b"\n")
-
     def append(self, record: TrialRecord) -> None:
         """Durably journal one record: write line, flush, fsync."""
-        if self._fh is None:
-            self.root.mkdir(parents=True, exist_ok=True)
-            self._trim_torn_tail()
-            self._fh = open(self.journal_path, "a", encoding="utf-8")
-        line = json.dumps(record.to_dict(), sort_keys=True,
-                          separators=(",", ":"))
-        self._fh.write(line + "\n")
-        self._fh.flush()
-        os.fsync(self._fh.fileno())
+        self.root.mkdir(parents=True, exist_ok=True)
+        self._writer.append(record.to_dict())
 
     # -- load --------------------------------------------------------------
     def _journal_records(self) -> list[dict[str, Any]]:
-        if not self.journal_path.exists():
-            return []
-        raw = self.journal_path.read_text(encoding="utf-8")
-        if not raw:
-            return []
-        lines = raw.split("\n")
-        if lines[-1] == "":
-            lines.pop()  # the usual case: journal ends with a newline
-        out = []
-        last = len(lines) - 1
-        for i, line in enumerate(lines):
-            if line == "":
-                continue
-            try:
-                out.append(json.loads(line))
-            except json.JSONDecodeError as e:
-                if i == last:
-                    # the final line only: a torn append (with or without
-                    # its newline) is recoverable tail damage
-                    self.torn_tail_drops += 1
-                    continue
-                raise StoreCorrupt(
-                    f"{self.journal_path}: undecodable journal line "
-                    f"{i + 1} (not the tail — refusing to drop committed "
-                    f"trials)") from e
-        return out
+        records, dropped = read_journal(self.journal_path, corrupt=StoreCorrupt)
+        self.torn_tail_drops += dropped
+        return records
 
     def _snapshot_records(self) -> list[dict[str, Any]]:
         if not self.snapshot_path.exists():
@@ -152,12 +103,9 @@ class StudyStore:
         self.root.mkdir(parents=True, exist_ok=True)
         snap = {"schema": SNAPSHOT_SCHEMA,
                 "records": [r.to_dict() for r in records.values()]}
-        tmp = self.snapshot_path.with_suffix(".json.tmp")
-        with open(tmp, "w", encoding="utf-8") as f:
-            f.write(json.dumps(snap, sort_keys=True, separators=(",", ":")))
-            f.flush()
-            os.fsync(f.fileno())
-        tmp.replace(self.snapshot_path)
+        atomic_write_text(self.snapshot_path,
+                          json.dumps(snap, sort_keys=True,
+                                     separators=(",", ":")))
         jtmp = self.journal_path.with_suffix(".jsonl.tmp")
         jtmp.write_text("")
         jtmp.replace(self.journal_path)

@@ -185,6 +185,9 @@ class Study:
         wall = served.pop("wall_tokens_per_s", None)
         if wall is not None:
             timing["wall_tokens_per_s"] = wall
+        retries = served.pop("probe_retries", None)
+        if retries:  # wall-clock accident, not part of the metrics contract
+            timing["retries"] = int(retries)
         metrics.update(served)
         objectives = [metrics["area"], metrics["delay"], -float(margin)]
         if self.measure != "none":

@@ -1,0 +1,12 @@
+"""repro.faults — deterministic, seedable fault injection (DESIGN.md §14).
+
+Injectors for the chaos suite and ``benchmarks/chaos_serve.py``: ROM bit
+flips, poisoned prompts/activations, dropped/delayed/NaN'd serve ticks,
+and named crash points that simulate a kill-9 at precise code locations.
+Everything is driven by explicit seeds — a chaos run is a reproducible
+experiment, not a fuzzer.
+"""
+from repro.faults.inject import (Crashed, FaultClock, TickFaultInjector,  # noqa: F401
+                                 arm_crashpoint, crashpoint, crashpoints_armed,
+                                 flip_rom_bit, poison_prompt, poison_values,
+                                 reset_crashpoints)

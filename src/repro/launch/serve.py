@@ -6,6 +6,15 @@
 With ``--numerics interp`` the engine serves from a compiled interpolation
 library; ``--library PATH`` loads a saved artifact (no exploration at all),
 ``--save-library PATH`` persists the compiled artifact for the next launch.
+
+Robustness knobs (DESIGN.md §14): ``--deadline-ms N`` gives every request a
+TTL (expired work is retired with a structured ``deadline_exceeded`` error),
+``--max-queue N`` bounds the admission queue (overflow submissions raise
+``Rejected(reason="queue_full")`` instead of growing memory), ``--journal
+PATH`` records admissions and emitted tokens through an fsync'd append-only
+journal, and ``--resume`` (with ``--journal``) rebuilds the engine from that
+journal after a crash — completed requests are not re-served and in-flight
+streams continue bitwise where they left off.
 """
 from __future__ import annotations
 
@@ -18,7 +27,7 @@ import numpy as np
 from repro.api import InterpLibrary
 from repro.configs.base import ARCH_IDS, get_config, get_smoke_config
 from repro.models import transformer as tf
-from repro.serve import ServeEngine
+from repro.serve import Rejected, ServeEngine
 from repro.serve.engine import Request
 
 
@@ -41,8 +50,22 @@ def main():
                          "instead of the fused single-dispatch tick")
     ap.add_argument("--horizon", type=int, default=8,
                     help="fused tick: max decode steps per dispatch")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request TTL; expired requests are retired "
+                         "with a structured deadline_exceeded error")
+    ap.add_argument("--max-queue", type=int, default=1024,
+                    help="admission queue bound; overflow submissions are "
+                         "rejected (reason=queue_full), never buffered")
+    ap.add_argument("--journal", default=None,
+                    help="fsync'd serve journal (admissions + tokens); "
+                         "makes the run crash-recoverable via --resume")
+    ap.add_argument("--resume", action="store_true",
+                    help="rebuild engine state from --journal instead of "
+                         "submitting fresh requests")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+    if args.resume and not args.journal:
+        ap.error("--resume requires --journal")
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if args.numerics:
@@ -54,17 +77,27 @@ def main():
             cfg = cfg.replace(numerics="interp")  # the flags imply it
     library = InterpLibrary.load(args.library) if args.library else None
     params = tf.init_params(jax.random.key(args.seed), cfg)
-    eng = ServeEngine(cfg, params, slots=args.slots, cache_len=args.cache_len,
-                      library=library, fused=not args.serial,
-                      horizon=args.horizon)
+    kw = dict(slots=args.slots, cache_len=args.cache_len, library=library,
+              fused=not args.serial, horizon=args.horizon,
+              max_queue=args.max_queue,
+              deadline_s=(args.deadline_ms / 1e3
+                          if args.deadline_ms is not None else None))
+    t0 = time.perf_counter()
+    if args.resume:
+        eng = ServeEngine.resume(args.journal, cfg, params, **kw)
+    else:
+        eng = ServeEngine(cfg, params, journal=args.journal, **kw)
     if args.save_library and eng.library is not None:
         print(f"saved library -> {eng.library.save(args.save_library)}")
-    rng = np.random.default_rng(args.seed)
-    t0 = time.perf_counter()
-    for i in range(args.requests):
-        eng.submit(Request(i, rng.integers(0, cfg.vocab_size,
-                                           args.prompt_len).astype(np.int32),
-                           args.max_new))
+    if not args.resume:
+        rng = np.random.default_rng(args.seed)
+        for i in range(args.requests):
+            try:
+                eng.submit(Request(i, rng.integers(
+                    0, cfg.vocab_size, args.prompt_len).astype(np.int32),
+                    args.max_new))
+            except Rejected as e:
+                print(f"  req {i} rejected ({e.reason})")
     done = eng.run()
     dt = time.perf_counter() - t0
     total_tokens = sum(len(r.out) for r in done)
@@ -72,6 +105,15 @@ def main():
           f"in {dt:.2f}s ({total_tokens/dt:.1f} tok/s incl. compile; "
           f"{eng.stats['dispatches']} dispatches / "
           f"{eng.stats['decode_steps']} decode steps)")
+    if args.resume:
+        print(f"  resumed: {eng.stats['resumed']} in-flight replayed "
+              f"({eng.stats['resume_replay_steps']} teacher-forced steps), "
+              f"{eng.stats['resume_skipped_done']} already-done skipped")
+    if eng.failed:
+        print(f"  failed: {len(eng.failed)} "
+              f"({sorted({r.error for r in eng.failed})})")
+    if eng.faults:
+        print(f"  faults: {eng.faults}")
     for r in done[:3]:
         print(f"  req {r.rid}: {r.out[:8]}...")
 

@@ -4,4 +4,5 @@ from repro.numerics.ops import (BACKENDS, ExactNumerics, InterpNumerics,  # noqa
                                 approx_rmsnorm, approx_rsqrt_pos, approx_sigmoid,
                                 approx_silu, approx_softmax, approx_softplus,
                                 get_numerics, softmax_ulp_bound, table_eval_int)
+from repro.numerics.guard import DomainViolation, GuardedNumerics  # noqa: F401
 from repro.api import get_table, spec_for  # noqa: F401

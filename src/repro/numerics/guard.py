@@ -1,0 +1,160 @@
+"""GuardedNumerics: the degraded-mode wrapper around a numerics backend.
+
+The certified tables only promise anything *inside* their proved input
+domains: ``exp2neg`` over non-positive exponents, ``recip``/``rsqrt`` over
+strictly positive operands, the activation tables over the generated
+``[act_lo, act_hi)`` window (outside which the float glue's tails take
+over). A poisoned activation — NaN from an upstream overflow, an Inf from
+a bad prompt embedding, a negative variance from corrupted state — feeds
+those lookups values with *no* certified meaning: ``frexp`` of a
+non-positive operand silently yields garbage codes that gather arbitrary
+ROM rows.
+
+:class:`GuardedNumerics` wraps any backend and sanitizes every table input
+into its certified domain first:
+
+  * non-finite values are replaced by the nearest domain sentinel (NaN →
+    the domain's safe center, +Inf/-Inf → the domain edges), so a poisoned
+    element degrades to a *bounded wrong answer* instead of NaN-flooding
+    the whole tick;
+  * out-of-domain finite values are clamped to the domain edge — for the
+    activation kinds this is exactly the tail semantics the unguarded glue
+    already applies, so guarding is a no-op on healthy inputs.
+
+When evaluated eagerly (host-side values, not under ``jit``) the guard
+also *counts* violations per op in ``self.violations`` and, with
+``strict=True``, raises :class:`DomainViolation` instead of clamping —
+that is the mode the domain property tests drive. Under a trace the clamp
+is silent (counting would need a host round-trip per op); in-program fault
+detection there is the serve tick's NaN/Inf watchdog sentinel
+(DESIGN.md §14), which is what escalates an engine onto this wrapper in
+the first place.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# float32 extremes of the positive domains: below/above these, recip and
+# rsqrt glue saturates rather than feeding frexp a non-positive operand.
+# The floor is the smallest NORMAL float32: subnormals are both flushed to
+# zero by XLA comparisons (the clamp itself would stop working) and
+# overflow the glue's power-of-two rescale.
+_POS_TINY = 1.1754944e-38  # 2**-126
+_POS_HUGE = 3e38
+_EXP_NEG_FLOOR = -126.0  # exp2 underflows to 0 below this anyway
+
+
+class DomainViolation(RuntimeError):
+    """A table input left its certified domain under ``strict=True``."""
+
+
+def _is_concrete(x) -> bool:
+    return not isinstance(x, jax.core.Tracer)
+
+
+class GuardedNumerics:
+    """Domain-guarding wrapper; delegates everything else to ``inner``."""
+
+    def __init__(self, inner, *, strict: bool = False):
+        self.inner = inner
+        self.strict = bool(strict)
+        self.violations: dict[str, int] = {}
+
+    # the engine and model stack probe these on whatever backend they hold
+    @property
+    def name(self) -> str:
+        return self.inner.name
+
+    @property
+    def library(self):
+        return self.inner.library
+
+    def __getattr__(self, attr):
+        # unguarded capabilities (e.g. fused_attention) pass through; the
+        # guard only interposes on the table-input entry points below
+        return getattr(self.inner, attr)
+
+    # -- sanitization core -------------------------------------------------
+    def _guard(self, op: str, x, lo, hi, nan_to):
+        xf = jnp.asarray(x, jnp.float32) if not hasattr(x, "dtype") else x
+        xf32 = xf.astype(jnp.float32)
+        bad = ~jnp.isfinite(xf32) | (xf32 < lo) | (xf32 > hi)
+        if _is_concrete(bad):
+            n = int(jnp.sum(bad))
+            if n:
+                self.violations[op] = self.violations.get(op, 0) + n
+                if self.strict:
+                    raise DomainViolation(
+                        f"{op}: {n} input(s) outside certified domain "
+                        f"[{lo}, {hi}] (or non-finite)")
+        clean = jnp.clip(jnp.nan_to_num(xf32, nan=nan_to, posinf=hi,
+                                        neginf=lo), lo, hi)
+        return jnp.where(bad, clean, xf32).astype(xf.dtype)
+
+    def _act_window(self, kind: str):
+        lib = self.library
+        if lib is not None and kind in lib:
+            m = lib.meta(kind)
+            return m.act_lo, m.act_hi
+        from repro.core.funcspec import ACT_HI, ACT_LO
+
+        return ACT_LO, ACT_HI
+
+    # -- guarded table entry points ---------------------------------------
+    def exp_neg(self, x):
+        return self.inner.exp_neg(
+            self._guard("exp_neg", x, _EXP_NEG_FLOOR, 0.0, nan_to=_EXP_NEG_FLOOR))
+
+    def recip_pos(self, x):
+        return self.inner.recip_pos(
+            self._guard("recip_pos", x, _POS_TINY, _POS_HUGE, nan_to=1.0))
+
+    def rsqrt_pos(self, x):
+        return self.inner.rsqrt_pos(
+            self._guard("rsqrt_pos", x, _POS_TINY, _POS_HUGE, nan_to=1.0))
+
+    def _act(self, kind: str, x):
+        lo, hi = self._act_window(kind)
+        # finite out-of-window inputs are the tails' job (certified glue);
+        # the guard only repairs non-finite poison, mapping it to the same
+        # saturation the tails produce at the window edges
+        xf = x.astype(jnp.float32)
+        bad = ~jnp.isfinite(xf)
+        if _is_concrete(bad):
+            n = int(jnp.sum(bad))
+            if n:
+                self.violations[kind] = self.violations.get(kind, 0) + n
+                if self.strict:
+                    raise DomainViolation(f"{kind}: {n} non-finite input(s)")
+        clean = jnp.nan_to_num(xf, nan=0.0, posinf=hi, neginf=lo)
+        y = getattr(self.inner, kind)(jnp.where(bad, clean, xf))
+        return y.astype(x.dtype)
+
+    def silu(self, x):
+        return self._act("silu", x)
+
+    def sigmoid(self, x):
+        return self._act("sigmoid", x)
+
+    def softplus(self, x):
+        return self._act("softplus", x)
+
+    def gelu(self, x):
+        return self._act("gelu", x)
+
+    # -- guarded composites ------------------------------------------------
+    def softmax(self, x, axis: int = -1):
+        xf = x.astype(jnp.float32)
+        m = jax.lax.stop_gradient(jnp.max(xf, axis=axis, keepdims=True))
+        e = self.exp_neg(xf - m)
+        s = jnp.sum(e, axis=axis, keepdims=True)
+        return (e * self.recip_pos(s)).astype(x.dtype)
+
+    def rmsnorm(self, x, gamma, eps: float = 1e-6):
+        xf = x.astype(jnp.float32)
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True) + eps
+        return (xf * self.rsqrt_pos(var) * gamma).astype(x.dtype)
+
+    def total_violations(self) -> int:
+        return sum(self.violations.values())

@@ -378,6 +378,8 @@ class FusedInterpNumerics(InterpNumerics):
 BACKENDS = {"exact": ExactNumerics, "interp": InterpNumerics,
             "interp-fused": FusedInterpNumerics}
 
+INTERP_BACKENDS = ("interp", "interp-fused", "interp-guarded")
+
 
 def get_numerics(cfg_or_name="exact", library=None, fused: bool = False):
     """Resolve a numerics backend *instance* for a model config (or a plain
@@ -386,10 +388,17 @@ def get_numerics(cfg_or_name="exact", library=None, fused: bool = False):
     instance (no tables to bind). ``fused=True`` (or the explicit
     ``"interp-fused"`` name) selects the fused-kernel lowering — softmax /
     rmsnorm / attention evaluate the library ROM *inside* the consuming
-    kernel; it requires a bound library."""
+    kernel; it requires a bound library. ``"interp-guarded"`` is the
+    degraded-mode backend (DESIGN.md §14): the same per-table interp
+    datapath behind the :class:`repro.numerics.guard.GuardedNumerics`
+    domain clamp."""
     name = getattr(cfg_or_name, "numerics", cfg_or_name)
     if name == "exact":
         return ExactNumerics()
+    if name == "interp-guarded":
+        from repro.numerics.guard import GuardedNumerics
+
+        return GuardedNumerics(InterpNumerics(library))
     if name == "interp-fused" or (name == "interp" and fused):
         return FusedInterpNumerics(library)
     if name == "interp":

@@ -1,1 +1,4 @@
-from repro.serve.engine import ServeEngine, make_serve_step  # noqa: F401
+from repro.serve.engine import (Rejected, Request, ServeEngine,  # noqa: F401
+                                make_serve_step)
+from repro.serve.journal import (ReplayState, ServeJournal,  # noqa: F401
+                                 ServeJournalCorrupt, load_requests)

@@ -1,10 +1,10 @@
-"""Serving: jit'd prefill/decode steps + a continuous-batching engine.
+"""Serving: jit'd prefill/decode steps + a fault-tolerant continuous-batching engine.
 
 ``make_serve_step`` builds the decode function the dry-run lowers for the
 ``decode_32k`` / ``long_500k`` cells: one new token against a seq_len-deep
 KV cache (or SSM state), exactly as the shape table specifies.
 
-``ServeEngine`` is a minimal continuous-batching driver: a fixed pool of B
+``ServeEngine`` is a continuous-batching driver: a fixed pool of B
 slots, each slot holding one request's cache rows; finished requests free
 their slot and a queued request is prefilled into it. Slot state lives in
 the batched cache pytree — insertion is a per-slot dynamic_update on the
@@ -26,26 +26,45 @@ copying every tick, and interp numerics lower through the library-bound
 fused kernels (ROM gather + Horner inside softmax/rmsnorm/attention). The
 serial per-op path (`fused=False`) is kept as the dispatch-per-op oracle
 and benchmark baseline.
+
+Since ISSUE 7 the engine carries the serving-robustness layer
+(DESIGN.md §14):
+
+  * request lifecycle guarantees — bounded-queue backpressure and
+    per-request deadlines with typed :class:`Rejected` errors;
+  * an in-program NaN/Inf watchdog sentinel reduced inside the fused scan
+    (one extra scalar riding the existing token download, zero extra
+    dispatches) that retires a poisoned slot with a structured error
+    instead of streaming garbage;
+  * a degradation ladder — fused → serial (domain-guarded numerics) →
+    exact — walked on repeated watchdog trips, and jumped straight to
+    exact on a resident-ROM integrity failure
+    (:meth:`InterpLibrary.verify_resident`);
+  * a crash-recoverable admission/token journal
+    (:mod:`repro.serve.journal`) with :meth:`ServeEngine.resume`.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
+import time
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.api import InterpLibrary, default_explorer
+from repro.api import InterpLibrary, LibraryIntegrityError, default_explorer
+from repro.faults.inject import crashpoint
 from repro.models import transformer as tf
-from repro.numerics.ops import get_numerics
+from repro.numerics.ops import INTERP_BACKENDS, get_numerics
+from repro.serve.journal import ServeJournal, load_requests
 
 
 def _interp(cfg) -> bool:
     """Does this config's numerics backend consult an InterpLibrary?
-    Covers both the plain and the explicitly-fused backend names."""
-    return cfg.numerics in ("interp", "interp-fused")
+    Covers the plain, explicitly-fused and degraded-guarded backend names."""
+    return cfg.numerics in INTERP_BACKENDS
 
 
 def make_serve_step(cfg, fused: bool = False) -> Callable:
@@ -105,28 +124,37 @@ def make_engine_tick(cfg, steps: int) -> Callable:
     slot in ONE dispatch.
 
     tick(params, tok (B,1), pos (B,), live (B,), caches, cross=None,
-    library=None) -> (toks (steps, B), tok, pos, caches). The decode →
-    argmax → feed-back loop runs as a ``lax.scan`` inside the program, so
-    the host neither uploads tokens nor round-trips logits between steps;
-    dead slots (live=False) keep decoding placeholder garbage at a frozen
-    position that admission later overwrites (standard slot padding).
-    Interp numerics lower through the library-bound fused kernels."""
+    library=None) -> (toks (steps, B), tok, pos, ok (B,), caches). The
+    decode → argmax → feed-back loop runs as a ``lax.scan`` inside the
+    program, so the host neither uploads tokens nor round-trips logits
+    between steps; dead slots (live=False) keep decoding placeholder
+    garbage at a frozen position that admission later overwrites (standard
+    slot padding). Interp numerics lower through the library-bound fused
+    kernels.
+
+    ``ok`` is the watchdog sentinel (DESIGN.md §14): per-slot all-finite
+    logits across the whole scan, reduced *inside* the program (dead slots
+    masked healthy) and downloaded alongside the token block — a poisoned
+    datapath is detected with zero additional dispatches."""
 
     def tick(params, tok, pos, live, caches, cross=None, library=None):
         numerics = get_numerics(cfg, library, fused=_interp(cfg))
 
         def body(carry, _):
-            tok, pos, caches = carry
+            tok, pos, ok, caches = carry
             logits, caches = tf.decode_step(params, tok, pos, caches, cfg,
                                             numerics, cross=cross)
+            step_ok = jnp.all(jnp.isfinite(logits[:, 0]), axis=-1)
+            ok = ok & (step_ok | ~live)
             nxt = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)
             nxt = jnp.where(live, nxt, tok[:, 0])
             pos = jnp.where(live, pos + 1, pos)
-            return (nxt[:, None], pos, caches), nxt
+            return (nxt[:, None], pos, ok, caches), nxt
 
-        (tok, pos, caches), toks = jax.lax.scan(body, (tok, pos, caches),
-                                                None, length=steps)
-        return toks, tok, pos, caches
+        ok0 = jnp.ones(live.shape, jnp.bool_)
+        (tok, pos, ok, caches), toks = jax.lax.scan(
+            body, (tok, pos, ok0, caches), None, length=steps)
+        return toks, tok, pos, ok, caches
 
     return tick
 
@@ -146,6 +174,22 @@ def _cached_jit(key: tuple, builder: Callable, **jit_kw) -> Callable:
     return fn
 
 
+class Rejected(ValueError):
+    """Typed request rejection (admission control, DESIGN.md §14).
+
+    ``reason`` is a stable machine key: ``"prompt_overflow"`` /
+    ``"decode_overflow"`` (the request cannot fit the slot cache),
+    ``"queue_full"`` (bounded-queue backpressure), ``"bad_prompt"``
+    (token ids outside the vocabulary — they would silently clamp through
+    the embedding gather), ``"deadline"`` (already expired at submit).
+    Subclasses ``ValueError`` so pre-ISSUE-7 callers keep working.
+    """
+
+    def __init__(self, reason: str, message: str):
+        self.reason = reason
+        super().__init__(message)
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
@@ -153,10 +197,12 @@ class Request:
     max_new: int
     out: list = dataclasses.field(default_factory=list)
     done: bool = False
+    deadline: float | None = None  # absolute engine-clock seconds
+    error: str | None = None  # structured failure ("deadline_exceeded", ...)
 
 
 class ServeEngine:
-    """Continuous batching over a fixed slot pool (greedy decoding).
+    """Fault-tolerant continuous batching over a fixed slot pool (greedy).
 
     ``library``: a preloaded :class:`InterpLibrary` for interp numerics;
     ``None`` compiles the default manifest through the process session at
@@ -170,14 +216,58 @@ class ServeEngine:
     trip per token — as the oracle and benchmark baseline. ``self.stats``
     counts host→device program dispatches and device→host transfers either
     way (the numbers ``benchmarks/decode_fused.py`` reports).
+
+    Robustness knobs (ISSUE 7, DESIGN.md §14):
+
+    ``max_queue``        bounded admission queue; ``submit`` raises
+                         :class:`Rejected` ("queue_full") beyond it.
+                         ``None`` = unbounded (legacy).
+    ``deadline_s``       default per-request TTL in engine-clock seconds
+                         (``Request.deadline``, absolute, overrides);
+                         expired requests fail with a structured
+                         ``"deadline_exceeded"`` error instead of holding
+                         a slot.
+    ``clock``            monotonic clock (injectable:
+                         ``repro.faults.FaultClock`` drives deadline and
+                         stall tests without sleeping).
+    ``watchdog_limit``   watchdog trips (non-finite tick output, stalled
+                         tick) tolerated before degrading one ladder rung.
+    ``max_tick_s``       stall watchdog: a tick exceeding this wall budget
+                         counts as a trip (``None`` = off).
+    ``verify_rom_every`` re-verify the resident ROM checksum every N ticks
+                         (0 = at construction and on watchdog trips only).
+    ``journal``          path (or :class:`ServeJournal`): durably journal
+                         admissions and emitted tokens; see
+                         :meth:`resume`.
+
+    The degradation ladder: a *fused* engine degrades to the *serial*
+    per-op path with domain-guarded numerics (``"interp-guarded"`` — the
+    clamp stops a recurrent poison source); a serial engine degrades to
+    *exact* numerics (drops the library entirely). A resident-ROM
+    integrity failure jumps straight to exact — both interp rungs gather
+    the corrupt ROM, so only the table-free twin is trustworthy. Every
+    transition is recorded in ``self.faults`` and counted in
+    ``self.stats["degradations"]``; tokens never silently come from a
+    known-bad datapath.
     """
 
     def __init__(self, cfg, params, slots: int, cache_len: int,
                  library: InterpLibrary | None = None, fused: bool = True,
-                 horizon: int = 8):
+                 horizon: int = 8, max_queue: int | None = 1024,
+                 deadline_s: float | None = None,
+                 clock: Callable[[], float] = time.monotonic,
+                 watchdog_limit: int = 2, max_tick_s: float | None = None,
+                 verify_rom_every: int = 0,
+                 journal: str | ServeJournal | None = None):
         self.cfg, self.params = cfg, params
         self.slots, self.cache_len = slots, cache_len
         self.fused, self.horizon = bool(fused), max(1, int(horizon))
+        self.max_queue = max_queue
+        self.deadline_s = deadline_s
+        self.clock = clock
+        self.watchdog_limit = max(1, int(watchdog_limit))
+        self.max_tick_s = max_tick_s
+        self.verify_rom_every = max(0, int(verify_rom_every))
         if cfg.sliding_window is not None and cache_len < cfg.sliding_window:
             # the wrapped decode slot (pos % cache) would overwrite KV rows
             # that are still inside the attention window — silent context
@@ -210,18 +300,51 @@ class ServeEngine:
         self.req: list[Request | None] = [None] * slots
         self.queue: collections.deque[Request] = collections.deque()
         self.finished: list[Request] = []
+        self.failed: list[Request] = []
         self.stats = {"dispatches": 0, "transfers": 0, "ticks": 0,
-                      "decode_steps": 0}
+                      "decode_steps": 0, "rejected": 0, "expired": 0,
+                      "watchdog_trips": 0, "degradations": 0,
+                      "rom_verifies": 0, "rom_faults": 0, "slot_failures": 0,
+                      "resumed": 0, "resume_skipped_done": 0,
+                      "resume_replay_steps": 0}
+        self.faults: list[dict] = []  # structured fault/degradation log
+        self._trips = 0  # watchdog trips since the last degradation
+        self.journal = (journal if isinstance(journal, (ServeJournal,
+                                                        type(None)))
+                        else ServeJournal(journal))
         # device-resident slot state (fused path): current token, next
         # position, liveness — donated through the tick alongside the caches
         self._tok_dev = jnp.zeros((slots, 1), jnp.int32)
         self._pos_dev = jnp.zeros((slots,), jnp.int32)
         self._live_dev = jnp.zeros((slots,), jnp.bool_)
+        self._build_programs()
+        # serve-time ROM integrity: the load-time checksum catches a corrupt
+        # artifact; this catches the resident copy going bad afterwards
+        self.verify_library()
 
+    # -- program construction (re-run on every degradation rung) ----------
+    def _build_programs(self) -> None:
+        cfg, cache_len = self.cfg, self.cache_len
         self._prefill1 = _cached_jit(("prefill", cfg, cache_len),
                                      lambda: make_prefill(cfg, cache_len))
         self._decode = _cached_jit(("decode", cfg),
                                    lambda: make_serve_step(cfg))
+        # fused-numerics twins of prefill/decode for resume replay: the
+        # teacher-forced rebuild must re-run the exact float path the fused
+        # admission/tick ran pre-crash (DESIGN.md §14)
+        self._prefill_fnum = _cached_jit(
+            ("prefill-fnum", cfg, cache_len),
+            lambda: make_prefill(cfg, cache_len, fused=_interp(cfg)))
+        self._decode_fnum = _cached_jit(
+            ("decode-fnum", cfg),
+            lambda: make_serve_step(cfg, fused=_interp(cfg)))
+        # serial-path argmax + watchdog sentinel in one program: same
+        # dispatch/transfer budget as the bare argmax it replaces
+        self._argmax_ok = _cached_jit(
+            ("argmax_ok",),
+            lambda: (lambda logits: (
+                jnp.argmax(logits[:, 0], -1).astype(jnp.int32),
+                jnp.all(jnp.isfinite(logits[:, 0]), axis=-1))))
         # admission splice: donate the pool so slot insertion is in place
         self._splice = _cached_jit(
             ("splice", cfg),
@@ -240,6 +363,13 @@ class ServeEngine:
             ("set_live",),
             lambda: (lambda live, slot, val: live.at[slot].set(val)),
             donate_argnums=(0,))
+        # resume replay: land one slot's (token, position, live) in place
+        self._set_slot = _cached_jit(
+            ("set_slot",),
+            lambda: (lambda tok, pos, live, slot, t, p: (
+                tok.at[slot, 0].set(t), pos.at[slot].set(p),
+                live.at[slot].set(True))),
+            donate_argnums=(0, 1, 2))
 
     def _tick_fn(self, steps: int) -> Callable:
         """Jitted fused tick for a chunk of ``steps`` decode steps; caches
@@ -249,34 +379,179 @@ class ServeEngine:
                            lambda: make_engine_tick(self.cfg, steps),
                            donate_argnums=(1, 2, 4))
 
-    def submit(self, req: Request):
-        """Enqueue a request; rejects work that cannot fit the slot cache.
+    # -- fault handling: integrity, watchdog, degradation ladder ----------
+    def _rung(self) -> str:
+        """Current degradation-ladder rung. A fused engine always has a
+        rung below it (the serial per-op path — the fused scan program
+        itself may be the faulty component); below that, interp numerics
+        can still drop to table-free exact, which is the bottom."""
+        if self.fused:
+            return "fused"
+        return "serial" if _interp(self.cfg) else "exact"
 
-        Without a sliding window, decode writes KV rows at absolute positions
-        ``len(prompt) .. len(prompt) + max_new - 2``; anything past
-        ``cache_len - 1`` would be silently clamped by the dynamic-slice
-        update (overwriting the last row again and again), so it is an error
-        here rather than corruption later. Sliding-window engines wrap their
-        (full-window, checked at construction) cache: prompts beyond the
-        window prefill position-aligned to the wrap slots, and decode length
-        is unbounded.
+    def _record_fault(self, reason: str, detail: str = "",
+                      action: str = "") -> None:
+        self.faults.append({"tick": self.stats["ticks"], "reason": reason,
+                            "detail": detail, "action": action})
+
+    def verify_library(self) -> bool:
+        """Re-checksum the resident ROM; on mismatch degrade to exact
+        numerics (both interp rungs would gather the corrupt ROM)."""
+        if self.library is None:
+            return True
+        self.stats["rom_verifies"] += 1
+        try:
+            self.library.verify_resident()
+            return True
+        except LibraryIntegrityError as e:
+            self.stats["rom_faults"] += 1
+            self._degrade("rom_integrity", to="exact", detail=str(e))
+            return False
+
+    def _degrade(self, reason: str, to: str | None = None,
+                 detail: str = "") -> None:
+        """Walk one rung down the degradation ladder (or jump to ``to``).
+
+        fused → serial flips the dispatch mode and, for interp engines,
+        swaps in the domain-guarded numerics; → exact drops the library.
+        The KV pool and host slot mirrors carry over — in-flight requests
+        keep decoding, just on the safer datapath.
         """
+        was = self._rung()
+        if to is None:
+            to = "serial" if was == "fused" else "exact"
+        if to == was:
+            # already at (or below) the requested rung: nothing safer to
+            # fall to — log the fault and keep serving
+            self._record_fault(reason, detail=detail, action=f"hold:{was}")
+            self._trips = 0
+            return
+        if to == "serial":
+            self.fused = False
+            if _interp(self.cfg) and self.cfg.numerics != "interp-guarded":
+                self.cfg = self.cfg.replace(numerics="interp-guarded")
+        elif to == "exact":
+            if self.cfg.numerics != "exact":
+                self.cfg = self.cfg.replace(numerics="exact")
+            self.library = None
+        else:
+            raise ValueError(f"unknown degradation rung {to!r}")
+        self.stats["degradations"] += 1
+        self._record_fault(reason, detail=detail, action=f"{was}->{to}")
+        self._trips = 0
+        self.numerics = get_numerics(
+            self.cfg, self.library, fused=self.fused and _interp(self.cfg))
+        self._build_programs()
+
+    def _watchdog_trip(self, reason: str, detail: str = "") -> None:
+        self.stats["watchdog_trips"] += 1
+        self._trips += 1
+        self._record_fault(reason, detail=detail, action="trip")
+        # a trip is also the moment to re-check the ROM: silent corruption
+        # often *presents* as a poisoned datapath
+        still_ok = self.verify_library()
+        if still_ok and self._trips >= self.watchdog_limit:
+            self._degrade(f"repeated_{reason}")
+
+    def _fail_slot(self, s: int, error: str) -> None:
+        """Retire a poisoned/expired slot with a structured error."""
+        r = self.req[s]
+        if r is None:
+            return
+        r.error = error
+        self.failed.append(r)
+        self.stats["slot_failures"] += 1
+        self.req[s] = None
+        self.cur[s] = -1
+        self.pos[s] = 0
+        if self.fused:
+            self._live_dev = self._set_live(self._live_dev, s, False)
+        if self.journal is not None:
+            self.journal.fail(r.rid, error)
+            crashpoint("serve.fail.journaled")
+
+    # -- admission control -------------------------------------------------
+    def submit(self, req: Request):
+        """Enqueue a request; rejects work the engine cannot serve safely.
+
+        Typed rejections (:class:`Rejected`, a ``ValueError``):
+
+        * cache overflow — without a sliding window, decode writes KV rows
+          at absolute positions ``len(prompt) .. len(prompt)+max_new-2``;
+          anything past ``cache_len - 1`` would be silently clamped by the
+          dynamic-slice update (overwriting the last row again and again),
+          so it is an error here rather than corruption later. Sliding-
+          window engines wrap their (full-window, checked at construction)
+          cache: prompts beyond the window prefill position-aligned to the
+          wrap slots, and decode length is unbounded.
+        * ``queue_full`` — bounded backpressure: an unbounded queue under
+          sustained over-admission grows without limit while every queued
+          request's deadline quietly expires.
+        * ``bad_prompt`` — out-of-vocabulary token ids would clamp through
+          the embedding gather and decode plausible-looking garbage.
+        * ``deadline`` — already expired at submit time.
+        """
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            self.stats["rejected"] += 1
+            raise Rejected(
+                "queue_full",
+                f"request {req.rid}: queue full ({len(self.queue)} >= "
+                f"max_queue {self.max_queue})")
+        if len(req.prompt) == 0:
+            self.stats["rejected"] += 1
+            raise Rejected("bad_prompt", f"request {req.rid}: empty prompt")
+        pmin, pmax = int(np.min(req.prompt)), int(np.max(req.prompt))
+        if pmin < 0 or pmax >= self.cfg.vocab_size:
+            self.stats["rejected"] += 1
+            raise Rejected(
+                "bad_prompt",
+                f"request {req.rid}: token id {pmin if pmin < 0 else pmax} "
+                f"outside vocab [0, {self.cfg.vocab_size})")
         if self.cfg.sliding_window is None:
             if len(req.prompt) > self.cache_len:
-                raise ValueError(
+                self.stats["rejected"] += 1
+                raise Rejected(
+                    "prompt_overflow",
                     f"request {req.rid}: prompt length {len(req.prompt)} "
                     f"exceeds cache_len {self.cache_len}")
             if len(req.prompt) + req.max_new - 1 > self.cache_len:
-                raise ValueError(
+                self.stats["rejected"] += 1
+                raise Rejected(
+                    "decode_overflow",
                     f"request {req.rid}: prompt ({len(req.prompt)}) + "
                     f"max_new ({req.max_new}) overflows cache_len "
                     f"{self.cache_len}")
+        if req.deadline is None and self.deadline_s is not None:
+            req.deadline = self.clock() + self.deadline_s
+        if req.deadline is not None and self.clock() > req.deadline:
+            self.stats["rejected"] += 1
+            raise Rejected("deadline",
+                           f"request {req.rid}: already past its deadline")
+        if self.journal is not None:
+            self.journal.submit(req.rid, req.prompt, req.max_new,
+                                req.deadline)
+            crashpoint("serve.submit.journaled")
         self.queue.append(req)
+
+    def _expired(self, r: Request) -> bool:
+        return r.deadline is not None and self.clock() > r.deadline
 
     def _admit(self):
         for s in range(self.slots):
-            if self.req[s] is None and self.queue:
+            while self.req[s] is None and self.queue:
                 r = self.queue.popleft()
+                if self._expired(r):
+                    # expired while queued: fail it without burning a
+                    # prefill, and keep draining into this slot
+                    r.error = "deadline_exceeded"
+                    self.failed.append(r)
+                    self.stats["expired"] += 1
+                    if self.journal is not None:
+                        self.journal.fail(r.rid, r.error)
+                    continue
+                if r.out:  # resumed mid-stream: rebuild, emit nothing
+                    self._admit_replay(r, s)
+                    break
                 if self.fused:
                     # one dispatch: prefill + in-place pool splice + greedy
                     # first token + slot-state update (donated buffers)
@@ -299,10 +574,46 @@ class ServeEngine:
                 self.req[s] = r
                 self.pos[s] = len(r.prompt)
                 self.cur[s] = tok
+                if self.journal is not None:
+                    self.journal.emit(r.rid, [tok])
+                    crashpoint("serve.admit.emitted")
+                break
+
+    def _admit_replay(self, r: Request, s: int):
+        """Re-admit a journal-recovered in-flight request at its recorded
+        position: prefill the prompt, then *teacher-force* the already-
+        emitted tokens through the decode step to rebuild the slot's cache
+        bit-identically (greedy decode is deterministic, so replaying the
+        recorded tokens reproduces exactly the pre-crash state — and the
+        per-slot independence the solo-oracle tests pin makes the B=1
+        rebuild equal to the original pooled decode). Nothing is re-emitted
+        and nothing is re-journaled."""
+        prefill = self._prefill_fnum if self.fused else self._prefill1
+        decode = self._decode_fnum if self.fused else self._decode
+        _logits, cache1, _ = prefill(self.params, r.prompt[None, :],
+                                     library=self.library)
+        start = len(r.prompt)
+        for i, t in enumerate(r.out[:-1]):
+            tok1 = jnp.asarray([[t]], jnp.int32)
+            pos1 = jnp.asarray([start + i], jnp.int32)
+            _logits, cache1 = decode(self.params, tok1, pos1, cache1,
+                                     library=self.library)
+            self.stats["resume_replay_steps"] += 1
+        self.caches = self._splice(self.caches, cache1, s)
+        self.req[s] = r
+        self.pos[s] = start + len(r.out) - 1
+        self.cur[s] = r.out[-1]
+        if self.fused:
+            (self._tok_dev, self._pos_dev, self._live_dev) = self._set_slot(
+                self._tok_dev, self._pos_dev, self._live_dev, s,
+                int(r.out[-1]), int(self.pos[s]))
+        self.stats["resumed"] += 1
 
     def _retire(self):
         for s, r in enumerate(self.req):
-            if r is not None and (len(r.out) >= r.max_new):
+            if r is None:
+                continue
+            if len(r.out) >= r.max_new:
                 r.done = True
                 self.finished.append(r)
                 self.req[s] = None
@@ -310,6 +621,12 @@ class ServeEngine:
                 self.pos[s] = 0
                 if self.fused:
                     self._live_dev = self._set_live(self._live_dev, s, False)
+                if self.journal is not None:
+                    self.journal.done(r.rid)
+                    crashpoint("serve.retire.journaled")
+            elif self._expired(r):
+                self.stats["expired"] += 1
+                self._fail_slot(s, "deadline_exceeded")
 
     def step(self, max_steps: int = 1):
         """One engine tick: admit, batch-decode every live slot, retire.
@@ -331,6 +648,9 @@ class ServeEngine:
         decodes once before retiring. The default ``step()`` performs
         exactly one decode step either way.
         """
+        if (self.verify_rom_every
+                and self.stats["ticks"] % self.verify_rom_every == 0):
+            self.verify_library()
         self._admit()
         if all(r is None for r in self.req):
             return False
@@ -343,41 +663,82 @@ class ServeEngine:
         # then reuse log2(horizon)+1 compiled tick programs (1, 2, 4, ...)
         # instead of jitting one decode-scan per distinct tail length
         steps = 1 << (steps.bit_length() - 1)
-        toks, self._tok_dev, self._pos_dev, self.caches = self._tick_fn(steps)(
+        t0 = self.clock()
+        (toks, self._tok_dev, self._pos_dev, ok_dev,
+         self.caches) = self._tick_fn(steps)(
             self.params, self._tok_dev, self._pos_dev, self._live_dev,
             self.caches, library=self.library)
         self.stats["dispatches"] += 1  # the tick program
-        out = np.asarray(toks)  # (steps, B): ONE device->host transfer
+        # ONE device->host round-trip: the (steps, B) token block and the
+        # (B,) watchdog sentinel come down together
+        out, ok = jax.device_get((toks, ok_dev))
         self.stats["transfers"] += 1
         self.stats["ticks"] += 1
         self.stats["decode_steps"] += steps
+        tick_s = self.clock() - t0
+        poisoned = [s for s, r in enumerate(self.req)
+                    if r is not None and not bool(ok[s])]
         for s, r in enumerate(self.req):
-            if r is not None:
-                r.out.extend(int(t) for t in out[:, s])
+            if r is not None and s not in poisoned:
+                fresh = [int(t) for t in out[:, s]]
+                r.out.extend(fresh)
                 self.cur[s] = int(out[-1, s])
                 self.pos[s] += steps
+                if self.journal is not None:
+                    self.journal.emit(r.rid, fresh)
+        if self.journal is not None:
+            crashpoint("serve.tick.emitted")
+        for s in poisoned:
+            # a poisoned slot is retired with a structured error — its
+            # chunk of garbage tokens is never streamed or journaled
+            self._fail_slot(s, "non_finite_output")
+        if poisoned:
+            self._watchdog_trip("non_finite_output",
+                                detail=f"slots {poisoned}")
+        if self.max_tick_s is not None and tick_s > self.max_tick_s:
+            self._watchdog_trip("stalled_tick",
+                                detail=f"{tick_s:.3f}s > {self.max_tick_s}s")
         self._retire()
         return True
 
     def _step_serial(self):
         """The ISSUE-3/4 per-op tick: token upload, one decode dispatch, a
-        host argmax round-trip — kept as the fused path's oracle/baseline."""
+        host argmax round-trip — kept as the fused path's oracle/baseline.
+        The watchdog sentinel rides the argmax program: same dispatch and
+        transfer budget as the bare argmax it replaced."""
         toks = jnp.asarray(np.maximum(self.cur, 0)[:, None], jnp.int32)
         pos = jnp.asarray(self.pos, jnp.int32)
         self.stats["transfers"] += 2  # token + position upload
+        t0 = self.clock()
         logits, self.caches = self._decode(self.params, toks, pos,
                                            self.caches, library=self.library)
         self.stats["dispatches"] += 1  # decode program
-        nxt = np.asarray(jnp.argmax(logits[:, 0], -1), np.int32)
-        self.stats["dispatches"] += 1  # eager argmax program
-        self.stats["transfers"] += 1  # next-token download
+        nxt_dev, ok_dev = self._argmax_ok(logits)
+        self.stats["dispatches"] += 1  # argmax+sentinel program
+        nxt, ok = jax.device_get((nxt_dev, ok_dev))
+        self.stats["transfers"] += 1  # next-token (+ sentinel) download
         self.stats["ticks"] += 1
         self.stats["decode_steps"] += 1
+        tick_s = self.clock() - t0
+        poisoned = [s for s, r in enumerate(self.req)
+                    if r is not None and not bool(ok[s])]
         for s, r in enumerate(self.req):
-            if r is not None:
+            if r is not None and s not in poisoned:
                 r.out.append(int(nxt[s]))
                 self.cur[s] = int(nxt[s])
                 self.pos[s] += 1
+                if self.journal is not None:
+                    self.journal.emit(r.rid, [int(nxt[s])])
+        if self.journal is not None:
+            crashpoint("serve.tick.emitted")
+        for s in poisoned:
+            self._fail_slot(s, "non_finite_output")
+        if poisoned:
+            self._watchdog_trip("non_finite_output",
+                                detail=f"slots {poisoned}")
+        if self.max_tick_s is not None and tick_s > self.max_tick_s:
+            self._watchdog_trip("stalled_tick",
+                                detail=f"{tick_s:.3f}s > {self.max_tick_s}s")
         self._retire()
         return True
 
@@ -387,3 +748,44 @@ class ServeEngine:
             self.step(self.horizon)
             t += 1
         return self.finished
+
+    # -- crash recovery ----------------------------------------------------
+    @classmethod
+    def resume(cls, journal: str, cfg, params, *, slots: int, cache_len: int,
+               **kw) -> "ServeEngine":
+        """Reconstruct an engine from its admission/token journal.
+
+        Completed (``done``/``fail``) requests are *never* replayed
+        (``stats["resume_skipped_done"]`` counts them; their records are
+        available via :func:`repro.serve.journal.load_requests`). In-flight
+        requests are re-queued with their durable token prefix and
+        re-admitted through the teacher-forced rebuild
+        (:meth:`_admit_replay`): nothing already journaled is re-emitted,
+        and the continued greedy decode produces bitwise the token suffix
+        an uninterrupted run would have (the chaos suite's recovery
+        contract). The journal stays attached — the resumed engine keeps
+        appending to it.
+        """
+        states = load_requests(journal)
+        eng = cls(cfg, params, slots=slots, cache_len=cache_len,
+                  journal=journal, **kw)
+        for st in states.values():
+            if not st.in_flight:
+                eng.stats["resume_skipped_done"] += 1
+                continue
+            if len(st.out) >= st.max_new:
+                # crashed between the last emit and the done record: the
+                # request is complete — journal the terminal event now,
+                # replay nothing
+                req = Request(st.rid, st.prompt, st.max_new,
+                              out=list(st.out), done=True,
+                              deadline=st.deadline)
+                eng.finished.append(req)
+                eng.stats["resume_skipped_done"] += 1
+                if eng.journal is not None:
+                    eng.journal.done(st.rid)
+                continue
+            eng.queue.append(Request(st.rid, st.prompt, st.max_new,
+                                     out=list(st.out),
+                                     deadline=st.deadline))
+        return eng

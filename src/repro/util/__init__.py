@@ -1,0 +1,3 @@
+from repro.util.journal import (JournalCorrupt, JournalWriter,  # noqa: F401
+                                atomic_write_bytes, atomic_write_text,
+                                read_journal)

@@ -1,0 +1,85 @@
+"""ServeProbe robustness (ISSUE 7 satellite): per-trial timeout, the
+retry-once-with-backoff policy, and the guarantee that retries reach
+``TrialRecord.timing`` without perturbing the deterministic metrics."""
+from __future__ import annotations
+
+import pytest
+
+from repro.dse.probe import ProbeTimeout, ServeProbe
+from repro.dse.trial import TrialParams
+
+
+def _params(**kw):
+    base = dict(kind="recip", lookup_bits=4, target="asic", arch="yi_6b",
+                fused=True, horizon=4, batch=2)
+    base.update(kw)
+    return TrialParams(**base)
+
+
+def test_transient_failure_retried_once_and_reported(monkeypatch):
+    probe = ServeProbe("modeled", backoff_s=0.0)
+    real = probe._serve_once
+    failures = {"left": 1}
+
+    def flaky(p):
+        if failures["left"]:
+            failures["left"] -= 1
+            raise RuntimeError("transient device loss")
+        return real(p)
+
+    monkeypatch.setattr(probe, "_serve_once", flaky)
+    out = probe.measure(_params())
+    assert out["probe_retries"] == 1
+    assert probe.retries == 1
+    assert probe.stats["retries"] == 1
+    # the deterministic fields are identical to a clean run's
+    clean = ServeProbe("modeled").measure(_params())
+    out.pop("probe_retries")
+    assert out == clean
+    # and the cache never replays the accident: a second measure of the
+    # same shape is a hit with no retry marker
+    again = probe.measure(_params())
+    assert "probe_retries" not in again
+    assert probe.hits == 1
+
+
+def test_second_failure_propagates(monkeypatch):
+    probe = ServeProbe("modeled", backoff_s=0.0)
+
+    def always_down(p):
+        raise RuntimeError("device is gone")
+
+    monkeypatch.setattr(probe, "_serve_once", always_down)
+    with pytest.raises(RuntimeError, match="device is gone"):
+        probe.measure(_params())
+    assert probe.retries == 1  # it did try again before giving up
+
+
+def test_timeout_raises_after_retry(monkeypatch):
+    probe = ServeProbe("modeled", timeout_s=0.0, backoff_s=0.0)
+    with pytest.raises(ProbeTimeout, match="timeout_s"):
+        probe.measure(_params())
+    assert probe.retries == 1
+
+
+def test_study_records_retries_in_timing(tmp_path, monkeypatch):
+    from repro.dse import SearchSpace, Study
+
+    space = SearchSpace(kinds=("recip",), lookup_bits=(4,), targets=("asic",),
+                        bits=(8,), fused=(True,), horizons=(4,), batches=(2,))
+    with Study(tmp_path / "s", space, measure="modeled", name="t") as study:
+        real = study.probe._serve_once
+        failures = {"left": 1}
+
+        def flaky(p):
+            if failures["left"]:
+                failures["left"] -= 1
+                raise RuntimeError("transient")
+            return real(p)
+
+        monkeypatch.setattr(study.probe, "_serve_once", flaky)
+        monkeypatch.setattr(study.probe, "backoff_s", 0.0)
+        records = study.run()
+    (rec,) = records.values()
+    assert rec.timing.get("retries") == 1
+    assert "retries" not in rec.metrics and "probe_retries" not in rec.metrics

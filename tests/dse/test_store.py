@@ -32,11 +32,13 @@ def test_roundtrip(tmp_path):
 
 
 def test_appends_are_fsynced(tmp_path, monkeypatch):
-    import repro.dse.store as store_mod
+    # the durable-append machinery is shared (repro.util.journal): patch
+    # the fsync where it actually happens
+    import repro.util.journal as journal_mod
 
     calls = []
-    real_fsync = store_mod.os.fsync
-    monkeypatch.setattr(store_mod.os, "fsync",
+    real_fsync = journal_mod.os.fsync
+    monkeypatch.setattr(journal_mod.os, "fsync",
                         lambda fd: (calls.append(fd), real_fsync(fd))[1])
     with StudyStore(tmp_path / "s") as store:
         store.append(_rec(0))

@@ -157,7 +157,7 @@ def test_modeled_probe_end_to_end(tmp_path):
         records = study.run()
         assert study.stats["executed"] == 2
         # both trials share one serving shape: one engine run, one cache hit
-        assert study.probe.stats == {"runs": 1, "hits": 1}
+        assert study.probe.stats == {"runs": 1, "hits": 1, "retries": 0}
         recs = [r for r in records.values() if r.ok]
         assert recs, "smoke trials must be feasible at the registry defaults"
         for rec in recs:

@@ -1,0 +1,188 @@
+"""Crash-recoverable serve state (DESIGN.md §14): the admission/token
+journal and ``ServeEngine.resume``.
+
+The recovery contract, driven by simulated kill-9s (:class:`Crashed`, a
+``BaseException`` raised at named crash points between durability events):
+
+  * after a crash at ANY marker, resuming from the journal and running to
+    completion yields, for every request, exactly the token stream an
+    uninterrupted run produces (greedy decode is deterministic, and the
+    teacher-forced rebuild re-runs the same numerics datapath);
+  * completed work is never replayed — requests journaled ``done`` before
+    the crash are skipped (counted, not recomputed), and already-emitted
+    tokens are only teacher-forced (cache rebuild), never re-emitted or
+    re-journaled;
+  * a torn final journal line (the append that died mid-crash) is dropped:
+    its tokens were never durable and are regenerated identically.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_smoke_config
+from repro.faults import Crashed, arm_crashpoint, reset_crashpoints
+from repro.models import transformer as tf
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.journal import load_requests
+
+MAX_NEW = 7
+LENGTHS = (5, 11, 3)
+
+
+@pytest.fixture(autouse=True)
+def _clean_crashpoints():
+    reset_crashpoints()
+    yield
+    reset_crashpoints()
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_smoke_config("yi_6b")
+    params = tf.init_params(jax.random.key(0), cfg)
+    return cfg, params
+
+
+def _prompts(cfg, seed=7):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+            for n in LENGTHS]
+
+
+def _reference(cfg, params, **kw):
+    eng = ServeEngine(cfg, params, slots=2, cache_len=48, **kw)
+    for i, p in enumerate(_prompts(cfg)):
+        eng.submit(Request(i, p, max_new=MAX_NEW))
+    return {r.rid: r.out for r in eng.run()}
+
+
+def _crash_and_resume(cfg, params, journal, point, after, **kw):
+    """Run journaled until ``point`` fires, then resume and finish."""
+    eng = ServeEngine(cfg, params, slots=2, cache_len=48, journal=journal,
+                      **kw)
+    arm_crashpoint(point, after=after)
+    with pytest.raises(Crashed):
+        for i, p in enumerate(_prompts(cfg)):
+            eng.submit(Request(i, p, max_new=MAX_NEW))
+        eng.run()
+    reset_crashpoints()
+    pre = load_requests(journal)  # durable state at the instant of death
+    res = ServeEngine.resume(str(journal), cfg, params, slots=2,
+                             cache_len=48, **kw)
+    res.run()
+    return pre, res
+
+
+def test_journaled_run_reaches_done_states(model, tmp_path):
+    cfg, params = model
+    jp = tmp_path / "serve.jsonl"
+    eng = ServeEngine(cfg, params, slots=2, cache_len=48, journal=str(jp))
+    for i, p in enumerate(_prompts(cfg)):
+        eng.submit(Request(i, p, max_new=MAX_NEW))
+    done = {r.rid: r.out for r in eng.run()}
+    states = load_requests(jp)
+    assert set(states) == set(done)
+    for rid, st in states.items():
+        assert st.done and st.error is None
+        assert st.out == done[rid]  # the journal IS the token stream
+
+
+@pytest.mark.parametrize("point,after", [
+    ("serve.submit.journaled", 1),
+    ("serve.admit.emitted", 1),
+    ("serve.tick.emitted", 1),
+    ("serve.retire.journaled", 0),
+])
+def test_crash_anywhere_resumes_to_identical_streams(model, tmp_path, point,
+                                                     after):
+    """Kill-9 between any two durability events: the resumed run's final
+    journal holds bitwise the streams of an uninterrupted run."""
+    cfg, params = model
+    want = _reference(cfg, params)
+    jp = tmp_path / "serve.jsonl"
+    pre, res = _crash_and_resume(cfg, params, jp, point, after)
+    final = load_requests(jp)
+    # every journaled request finishes with the uninterrupted run's exact
+    # stream (a crash during submit loses the not-yet-journaled tail of
+    # the submit batch — those clients never got an ack and retry)
+    assert set(final) == set(pre)
+    assert {rid: st.out for rid, st in final.items()} == {
+        rid: want[rid] for rid in final}
+    assert all(st.done for st in final.values())
+    # completed-before-crash work was skipped, not replayed
+    n_done_pre = sum(1 for st in pre.values() if not st.in_flight
+                     or len(st.out) >= st.max_new)
+    assert res.stats["resume_skipped_done"] == n_done_pre
+    # teacher-forcing replays exactly the durable prefix of in-flight work
+    want_replay = sum(max(0, len(st.out) - 1) for st in pre.values()
+                     if st.in_flight and len(st.out) < st.max_new)
+    assert res.stats["resume_replay_steps"] == want_replay
+
+
+def test_mid_stream_crash_suffix_is_bitwise(model, tmp_path):
+    """The headline oracle: crash mid-stream with partial emits, resume,
+    and assert the regenerated *suffix* is exactly what the uninterrupted
+    run emits after the same prefix — not just the same final length."""
+    cfg, params = model
+    want = _reference(cfg, params)  # tokens are horizon-invariant
+    jp = tmp_path / "serve.jsonl"
+    # horizon=1 → one decode step per tick, so the crash lands with a
+    # genuinely partial stream (a few tokens durable, the rest pending)
+    pre, res = _crash_and_resume(cfg, params, jp, "serve.tick.emitted", 2,
+                                 horizon=1)
+    partial = {rid: st for rid, st in pre.items() if st.in_flight
+               and 0 < len(st.out) < st.max_new}
+    assert partial, "crash landed at a stream boundary; tune `after`"
+    for rid, st in partial.items():
+        assert want[rid][:len(st.out)] == st.out  # durable prefix matches
+    final = load_requests(jp)
+    for rid, st in partial.items():
+        assert final[rid].out == want[rid]
+        # the suffix came from live decode on the resumed engine
+        assert len(final[rid].out) > len(st.out)
+    assert res.stats["resumed"] == len(partial)
+
+
+def test_resume_replays_nothing_when_all_done(model, tmp_path):
+    cfg, params = model
+    jp = tmp_path / "serve.jsonl"
+    eng = ServeEngine(cfg, params, slots=2, cache_len=48, journal=str(jp))
+    for i, p in enumerate(_prompts(cfg)):
+        eng.submit(Request(i, p, max_new=MAX_NEW))
+    eng.run()
+    res = ServeEngine.resume(str(jp), cfg, params, slots=2, cache_len=48)
+    assert res.stats["resume_skipped_done"] == len(LENGTHS)
+    assert res.stats["resume_replay_steps"] == 0
+    res.run()
+    assert res.stats["decode_steps"] == 0  # nothing left to do
+
+
+def test_resume_drops_torn_tail_and_regenerates(model, tmp_path):
+    cfg, params = model
+    want = _reference(cfg, params)
+    jp = tmp_path / "serve.jsonl"
+    _crash_and_resume(cfg, params, jp, "serve.tick.emitted", 1)
+    # tear the tail: a half-written emit that was never fsync'd durable
+    with open(jp, "a") as f:
+        f.write('{"ev": "emit", "rid": 0, "to')
+    res = ServeEngine.resume(str(jp), cfg, params, slots=2, cache_len=48)
+    res.run()
+    final = load_requests(jp)
+    assert {rid: st.out for rid, st in final.items()} == want
+
+
+def test_fused_interp_engine_recovers_bitwise(tmp_path):
+    """Resume replay must run the *fused-numerics* float path the fused
+    interp engine decoded with pre-crash — a rebuild through the plain
+    per-op glue could diverge by a table ulp and fork the suffix."""
+    cfg = get_smoke_config("yi_6b").replace(numerics="interp")
+    params = tf.init_params(jax.random.key(0), cfg)
+    want = _reference(cfg, params, fused=True)
+    jp = tmp_path / "serve.jsonl"
+    pre, res = _crash_and_resume(cfg, params, jp, "serve.tick.emitted", 1,
+                                 fused=True)
+    final = load_requests(jp)
+    assert {rid: st.out for rid, st in final.items()} == want
+    assert all(st.done for st in final.values())

@@ -1,0 +1,85 @@
+"""Shared torn-write journal machinery (repro.util.journal): the durability
+primitives behind the DSE study store, the checkpoint writer and the serve
+engine's admission/token journal."""
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from repro.util.journal import (JournalCorrupt, JournalWriter,
+                                atomic_write_bytes, atomic_write_text,
+                                read_journal, trim_torn_tail)
+
+
+def test_atomic_write_leaves_no_tmp(tmp_path):
+    p = tmp_path / "a" / "doc.json"
+    atomic_write_text(p, json.dumps({"x": 1}))
+    assert json.loads(p.read_text()) == {"x": 1}
+    assert not list(p.parent.glob("*.tmp"))
+    atomic_write_bytes(p, b"raw")  # overwrite is atomic too
+    assert p.read_bytes() == b"raw"
+
+
+def test_writer_appends_are_replayable(tmp_path):
+    p = tmp_path / "j.jsonl"
+    with JournalWriter(p) as w:
+        w.append({"i": 0})
+        w.append({"i": 1})
+    with JournalWriter(p) as w:  # reopen appends, never truncates
+        w.append({"i": 2})
+    records, dropped = read_journal(p)
+    assert [r["i"] for r in records] == [0, 1, 2]
+    assert dropped == 0
+
+
+def test_torn_tail_dropped_and_truncated(tmp_path):
+    p = tmp_path / "j.jsonl"
+    with JournalWriter(p) as w:
+        w.append({"i": 0})
+    with open(p, "a") as f:
+        f.write('{"i": 1, "par')  # kill mid-append
+    records, dropped = read_journal(p)
+    assert [r["i"] for r in records] == [0]
+    assert dropped == 1
+    # a writer reopening after the crash truncates the fragment first
+    with JournalWriter(p) as w:
+        w.append({"i": 2})
+    records, dropped = read_journal(p)
+    assert [r["i"] for r in records] == [0, 2]
+    assert dropped == 0
+
+
+def test_unterminated_complete_record_is_terminated_not_lost(tmp_path):
+    p = tmp_path / "j.jsonl"
+    with JournalWriter(p) as w:
+        w.append({"i": 0})
+        w.append({"i": 1})
+    p.write_bytes(p.read_bytes()[:-1])  # strip only the final newline
+    trim_torn_tail(p)
+    records, dropped = read_journal(p)
+    assert [r["i"] for r in records] == [0, 1]
+    assert dropped == 0
+
+
+def test_mid_file_corruption_raises(tmp_path):
+    p = tmp_path / "j.jsonl"
+    with JournalWriter(p) as w:
+        for i in range(3):
+            w.append({"i": i})
+    lines = p.read_text().splitlines()
+    lines[0] = lines[0][:5]
+    p.write_text("\n".join(lines) + "\n")
+    with pytest.raises(JournalCorrupt):
+        read_journal(p)
+
+    class Custom(JournalCorrupt):
+        pass
+
+    with pytest.raises(Custom):  # callers brand their own corruption type
+        read_journal(p, corrupt=Custom)
+
+
+def test_read_missing_journal_is_empty(tmp_path):
+    records, dropped = read_journal(tmp_path / "absent.jsonl")
+    assert records == [] and dropped == 0
