@@ -1,7 +1,6 @@
 """Shared benchmark utilities: timing, CSV/markdown emission, quick mode."""
 from __future__ import annotations
 
-import json
 import os
 import pathlib
 import time
@@ -22,7 +21,10 @@ def timed(fn, *args, repeat: int = 1, **kw):
 
 
 def emit(name: str, rows: list[dict], cols: list[str] | None = None):
-    """Print a markdown table and persist rows as JSON."""
+    """Print a markdown table and persist rows as a schema-versioned
+    snapshot (``{name: rows}`` inside the ``repro.dse.record`` envelope —
+    a pre-existing bare-list file is backed up to ``*.pre-schema.json``
+    once and migrated, never silently overwritten)."""
     if not rows:
         print(f"## {name}\n(no rows)")
         return
@@ -32,8 +34,10 @@ def emit(name: str, rows: list[dict], cols: list[str] | None = None):
     print("|" + "---|" * len(cols))
     for r in rows:
         print("| " + " | ".join(_fmt(r.get(c, "")) for c in cols) + " |")
-    ART.mkdir(parents=True, exist_ok=True)
-    (ART / f"{name}.json").write_text(json.dumps(rows, indent=1, default=str))
+    from repro.dse.record import update_snapshot
+
+    update_snapshot(ART / f"{name}.json", {name: rows},
+                    seed=0, meta_extra={"quick": QUICK})
 
 
 def _fmt(v) -> str:

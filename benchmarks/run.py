@@ -15,13 +15,15 @@
 | serve_path        | fused-library vs per-table decode numerics |
 | decode_fused      | fused serve tick vs serial decode path |
 | roofline_report   | SRoofline table from the dry-run sweep |
+| segment_rom       | non-uniform (ROM v2) vs uniform layout |
 
 After a run that produced them, the claim21 + batched_engine rows are
 folded into ``artifacts/bench/BENCH_2.json``, the serve_path rows into
 ``BENCH_3.json``, the fleet_compile rows into ``BENCH_4.json``, and the
-decode_fused rows into ``BENCH_5.json`` — the per-PR perf snapshots
-tracked by the CI bench-smoke job. (``BENCH_6.json`` is written by the
-DSE study CLI, ``repro.launch.dse --emit-bench``, not by this runner.)
+decode_fused rows into ``BENCH_5.json``, and the segment_rom rows into
+``BENCH_8.json`` — the per-PR perf snapshots tracked by the CI bench-smoke
+and segment-smoke jobs. (``BENCH_6.json`` is written by the DSE study CLI,
+``repro.launch.dse --emit-bench``, not by this runner.)
 
 Snapshots go through ``repro.dse.record.update_snapshot``: every file is
 schema-versioned and stamped with the seed, jax version and device
@@ -31,7 +33,6 @@ is backed up (``*.pre-schema.json``) instead of silently overwritten.
 from __future__ import annotations
 
 import argparse
-import json
 import os
 import pathlib
 import sys
@@ -60,6 +61,9 @@ _SNAPSHOTS = {
     "BENCH_7.json": {
         "chaos_serve": ("chaos_overhead", "chaos_faults", "chaos_recovery"),
     },
+    "BENCH_8.json": {
+        "segment_rom": ("segment_rom", "segment_serve"),
+    },
 }
 
 
@@ -68,7 +72,7 @@ def _emit_snapshots(ran: set) -> None:
     # per-table JSONs from an earlier run must not be stamped into the
     # snapshot), but keep the other modules' existing tables — a partial
     # --only run must not truncate the tracked snapshots
-    from repro.dse.record import update_snapshot
+    from repro.dse.record import read_snapshot, update_snapshot
 
     for snap, sources in _SNAPSHOTS.items():
         snap_path = ART / snap
@@ -79,7 +83,9 @@ def _emit_snapshots(ran: set) -> None:
             for name in tables:
                 path = ART / f"{name}.json"
                 if path.exists():
-                    fresh[name] = json.loads(path.read_text())
+                    # per-table files are themselves versioned envelopes
+                    # (benchmarks.common.emit); legacy bare lists unwrap too
+                    fresh[name] = read_snapshot(path).get(name)
         if fresh:
             update_snapshot(snap_path, fresh, seed=BENCH_SEED,
                             meta_extra={"quick": QUICK_RUN})
@@ -101,7 +107,7 @@ def main() -> None:
     from benchmarks import (batched_engine, chaos_serve, claim21,
                             decode_fused, fig3_lub_sweep, fleet_compile,
                             kernels_bench, roofline_report, scaling,
-                            serve_path, table1, table2)
+                            segment_rom, serve_path, table1, table2)
     mods = {
         "table1": table1, "table2": table2, "claim21": claim21,
         "scaling": scaling, "batched_engine": batched_engine,
@@ -109,6 +115,7 @@ def main() -> None:
         "fig3_lub_sweep": fig3_lub_sweep, "kernels_bench": kernels_bench,
         "serve_path": serve_path, "decode_fused": decode_fused,
         "chaos_serve": chaos_serve, "roofline_report": roofline_report,
+        "segment_rom": segment_rom,
     }
     only = set(args.only.split(",")) if args.only else None
     if only and not only <= set(mods):

@@ -1,0 +1,151 @@
+"""Segmented-ROM benchmark (ISSUE 8): non-uniform vs uniform layouts.
+
+Two tables, folded into ``BENCH_8.json`` by ``benchmarks.run`` (the CI
+segment-smoke job uploads it):
+
+  segment_rom     per kind at the registry default width: the uniform
+                  minimal-R design vs the greedy dyadic segmentation
+                  (:func:`repro.segment.explore_segmented`, depth capped at
+                  the uniform R). Both verify against the same §II envelope
+                  — identical faithful-rounding guarantee — so the row
+                  delta is pure ROM savings; the segmented row count
+                  *includes* the packed segment-index table. Also reports
+                  the asic-target area x delay of each layout (decoder
+                  modeled for the segmented one).
+  segment_serve   modeled decode throughput of a fused continuous-batching
+                  serve over (a) the all-uniform compiled library and (b)
+                  ``compile_segmented`` with every improvable slot swapped
+                  to ROM v2. The dispatch/transfer counters are
+                  deterministic and MUST match: the segment-index gather
+                  happens inside the already-dispatched fused kernels
+                  (zero extra dispatches) — the run() assertion enforces
+                  it.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import QUICK, emit
+from repro.api import default_explorer
+from repro.api.config import spec_for
+from repro.core.area import AreaDelay
+from repro.segment import (estimate_segmented, explore_segmented,
+                           min_uniform_depth)
+
+KINDS = ("exp2neg", "recip", "sigmoid") if QUICK else (
+    "exp2neg", "recip", "sigmoid", "tanh", "gelu", "silu")
+
+SLOTS, CACHE_LEN, HORIZON = 2, 64, 8
+N_REQ, MAX_NEW = 3, 8
+SEED = 0
+
+# modeled per-dispatch/transfer costs — same constants as repro.dse.probe
+DISPATCH_COST_S = 1e-4
+TRANSFER_COST_S = 2e-5
+
+
+def _rom_rows(ex) -> list[dict]:
+    from repro.api.target import get_target
+
+    asic = get_target("asic")
+    rows = []
+    for kind in KINDS:
+        spec = spec_for(kind, None)
+        r = min_uniform_depth(spec, engine="batched")
+        uni = ex.explore_r(spec, r, target="asic")
+        assert uni is not None, f"uniform {kind} infeasible at minimal R {r}"
+        sd = explore_segmented(spec, max_depth=r, engine="batched")
+        u_rows = 1 << r
+        u_ad = AreaDelay(uni.area, uni.delay)
+        row = {
+            "kind": kind, "bits": spec.in_bits, "uniform_R": r,
+            "uniform_rows": u_rows,
+            "uniform_area_delay": round(u_ad.product, 1),
+        }
+        if sd is None:
+            row.update({"seg_leaves": None, "seg_rows": None,
+                        "rows_saved": 0, "seg_area_delay": None,
+                        "verified": uni.design.verify(spec)[0]})
+        else:
+            s_ad = estimate_segmented(sd, asic)
+            ok_u = uni.design.verify(spec)[0]
+            ok_s = sd.verify(spec)[0]
+            row.update({
+                "seg_leaves": sd.n_leaves, "seg_rows": sd.rows_used,
+                "rows_saved": u_rows - sd.rows_used,
+                "seg_area_delay": round(s_ad.product, 1),
+                "verified": bool(ok_u and ok_s),
+            })
+        rows.append(row)
+    return rows
+
+
+def _serve_once(cfg, params, lib) -> dict:
+    from repro.serve.engine import Request, ServeEngine
+
+    eng = ServeEngine(cfg, params, slots=SLOTS, cache_len=CACHE_LEN,
+                      library=lib, fused=True, horizon=HORIZON)
+    rng = np.random.default_rng(SEED)
+    for i in range(N_REQ):
+        prompt = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+        eng.submit(Request(i, prompt, max_new=MAX_NEW))
+    t0 = time.perf_counter()
+    done = eng.run()
+    wall = time.perf_counter() - t0
+    steps = max(eng.stats["decode_steps"], 1)
+    modeled_t = (eng.stats["dispatches"] * DISPATCH_COST_S
+                 + eng.stats["transfers"] * TRANSFER_COST_S)
+    return {
+        "tokens": sum(len(r.out) for r in done),
+        "wall_s": round(wall, 4),
+        "modeled_tokens_per_s": round(steps / max(modeled_t, 1e-12), 1),
+        "dispatches_per_token": round(eng.stats["dispatches"] / steps, 4),
+        "transfers_per_token": round(eng.stats["transfers"] / steps, 4),
+    }
+
+
+def _serve_rows(ex) -> list[dict]:
+    from repro.configs.base import get_smoke_config
+    from repro.models import transformer as tf
+
+    cfg = get_smoke_config("yi_6b").replace(numerics="interp")
+    params = tf.init_params(jax.random.key(SEED), cfg)
+    lib_u = ex.compile()
+    lib_s = ex.compile_segmented()
+    rows = []
+    for name, lib in (("uniform", lib_u), ("segmented", lib_s)):
+        r = _serve_once(cfg, params, lib)
+        r["library"] = name
+        r["rom_version"] = lib.manifest()["version"]
+        r["segmented_kinds"] = ",".join(lib.segmented_kinds) or "-"
+        r["rom_rows_total"] = sum(m.rows_used for m in lib.metas)
+        rows.append(r)
+    return rows
+
+
+def run():
+    ex = default_explorer()
+    rom = _rom_rows(ex)
+    serve = _serve_rows(ex)
+    emit("segment_rom", rom)
+    emit("segment_serve", serve,
+         cols=["library", "rom_version", "segmented_kinds", "rom_rows_total",
+               "tokens", "modeled_tokens_per_s", "dispatches_per_token",
+               "transfers_per_token", "wall_s"])
+
+    improved = [r for r in rom if r.get("rows_saved", 0) > 0 and r["verified"]]
+    assert improved, ("no kind saved ROM rows at matched accuracy — "
+                      "the segmentation subsystem is not paying for itself")
+    u, s = serve[0], serve[1]
+    for c in ("dispatches_per_token", "transfers_per_token"):
+        assert u[c] == s[c], \
+            f"segmented library changed the {c} counter: {u[c]} -> {s[c]}"
+    assert s["rom_rows_total"] < u["rom_rows_total"], \
+        "segmented library stores no fewer ROM rows than uniform"
+
+
+if __name__ == "__main__":
+    run()

@@ -50,6 +50,7 @@ DEFAULTS: dict[str, tuple[int, dict, int]] = {
     "sigmoid": (12, {"out_bits": 12}, 6),
     "softplus": (12, {"out_bits": 12}, 6),
     "gelu": (12, {"out_bits": 12}, 6),
+    "tanh": (12, {"out_bits": 12}, 6),
     "log2": (12, {"out_bits": 13}, 6),
     "exp2": (12, {"out_bits": 12}, 6),
 }

@@ -639,6 +639,52 @@ class Explorer:
         return InterpLibrary.from_designs(designs, [k for k, _ in items],
                                           act_windows=windows)
 
+    def compile_segmented(self, kinds=None, *,
+                          segment=None, target: str | Target | None = None,
+                          **table_kw) -> InterpLibrary:
+        """:meth:`compile`, with non-uniform (ROM v2) slots where they pay.
+
+        ``segment`` names the kinds to try the greedy dyadic segmenter on
+        (``None`` = every compiled kind). Each candidate kind is segmented
+        with its uniform design's R as the depth cap and swapped in only
+        when it stores *strictly fewer* ROM rows (per-leaf coefficients +
+        packed segment table) than the uniform 2^R — accuracy is identical
+        by construction, since both verify against the same §II envelope.
+        Kinds the segmenter cannot improve keep their uniform slot, so the
+        resulting library is never worse than :meth:`compile`'s.
+        """
+        from repro.segment import explore_segmented
+
+        items: list[tuple[str, dict]] = []
+        for it in (DEFAULT_LIBRARY_KINDS if kinds is None else kinds):
+            if isinstance(it, str):
+                items.append((it, dict(table_kw)))
+            else:
+                kind, kw = it
+                items.append((kind, {**table_kw, **dict(kw)}))
+        seg_set = set(segment if segment is not None
+                      else [k for k, _ in items])
+        designs: list = []
+        for kind, kw in items:
+            kw = dict(kw)
+            uni = self.get_table(kind, target=target, **kw)
+            if kind in seg_set:
+                bits = kw.pop("bits", None)
+                kw.pop("lookup_bits", None)
+                degree = kw.pop("degree", None)
+                spec = spec_for(kind, bits, **kw)
+                sd = explore_segmented(spec, max_depth=uni.lookup_bits,
+                                       degree=degree,
+                                       engine=self.config.engine)
+                if sd is not None and sd.rows_used < (1 << uni.lookup_bits):
+                    designs.append(sd)
+                    continue
+            designs.append(uni)
+        windows = {kind: (kw["lo"], kw["hi"])
+                   for kind, kw in items if "lo" in kw or "hi" in kw}
+        return InterpLibrary.from_designs(designs, [k for k, _ in items],
+                                          act_windows=windows)
+
     def _tables_fleet(self, items: list[tuple[str, dict]],
                       target: str | Target | None) -> list[TableDesign]:
         """Fleet twin of ``[self.get_table(kind, **kw) for ...]``.

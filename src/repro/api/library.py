@@ -37,9 +37,17 @@ from repro.core.table import TableDesign
 # ``Explorer.compile()`` defaults to this set — serving warm-up compiles it
 # once instead of hand-maintaining a per-engine kind list.
 DEFAULT_LIBRARY_KINDS = ("exp2neg", "gelu", "recip", "rsqrt", "sigmoid",
-                         "silu", "softplus")
+                         "silu", "softplus", "tanh")
 
+# Manifest format: version 1 is the uniform layout (rows [0, 2^R) of a slot
+# hold packed coeffs). Version 2 adds non-uniform segmentation (ISSUE 8 /
+# DESIGN.md §15): a segmented slot stores S per-leaf coefficient rows
+# followed by the segment-index table packed 3 int32 entries per row; the
+# per-leaf datapath lives in FuncMeta.seg_meta. A library with no segmented
+# function still saves as version 1, so v1 artifacts round-trip byte- and
+# checksum-identically through this code.
 _FORMAT_VERSION = 1
+_FORMAT_VERSION_SEG = 2
 
 
 class LibraryIntegrityError(RuntimeError):
@@ -69,10 +77,37 @@ class FuncMeta:
     act_lo: float = 0.0  # input window (direct activation tables only)
     act_hi: float = 0.0
     act_span: float = 0.0  # output span S: float value = int * S / 2^out_bits
+    # non-uniform segmentation (ROM v2; 0/() = uniform): seg_depth is the
+    # segment-index table depth D (the top D input bits address the table),
+    # seg_meta holds one (eval_bits, k, sq_trunc, lin_trunc, degree) row per
+    # leaf. For a segmented slot the scalar k/degree/truncation fields above
+    # record leaf 0's values and lookup_bits records D.
+    seg_depth: int = 0
+    seg_meta: tuple = ()
 
     @property
     def eval_bits(self) -> int:
         return self.in_bits - self.lookup_bits
+
+    @property
+    def segmented(self) -> bool:
+        return self.seg_depth > 0
+
+    @property
+    def rows_used(self) -> int:
+        """Slot rows this function occupies: 2^R uniform, else the per-leaf
+        coefficient rows plus the packed segment-index table rows."""
+        if not self.seg_depth:
+            return 1 << self.lookup_bits
+        return len(self.seg_meta) + ((1 << self.seg_depth) + 2) // 3
+
+    def seg_spec(self) -> tuple | None:
+        """Static segment-datapath tuple the fused kernels consume
+        (``None`` = uniform): (in_bits, depth, n_leaves, leaf_meta)."""
+        if not self.seg_depth:
+            return None
+        return (self.in_bits, self.seg_depth, len(self.seg_meta),
+                self.seg_meta)
 
     def datapath_row(self) -> tuple[int, int, int, int, int]:
         """The (eval_bits, k, sq_trunc, lin_trunc, degree) kernel row."""
@@ -80,7 +115,24 @@ class FuncMeta:
                 self.degree)
 
     def to_dict(self) -> dict:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        if not self.seg_depth:  # keep uniform manifests byte-stable with v1
+            d.pop("seg_depth")
+            d.pop("seg_meta")
+        else:
+            d["seg_meta"] = [list(row) for row in self.seg_meta]
+        return d
+
+
+def _meta_from_dict(d: dict) -> FuncMeta:
+    """Rebuild a FuncMeta from a manifest entry (v1 entries carry no seg
+    fields; v2 seg_meta arrives as JSON lists and must re-freeze to nested
+    tuples so the dataclass stays hashable)."""
+    d = dict(d)
+    if "seg_meta" in d:
+        d["seg_meta"] = tuple(tuple(int(v) for v in row)
+                              for row in d["seg_meta"])
+    return FuncMeta(**d)
 
 
 class InterpLibrary:
@@ -119,7 +171,8 @@ class InterpLibrary:
             raise ValueError(f"duplicate kinds in library: {sorted(dupes)}")
         metas = []
         for kind, d in zip(kinds, designs):
-            if d.degree != 2 and np.any(d.a != 0):
+            seg_depth = getattr(d, "seg_depth", 0)
+            if not seg_depth and d.degree != 2 and np.any(d.a != 0):
                 raise ValueError(  # fused path zeroes the squarer by degree
                     f"{d.name}: degree-{d.degree} design with nonzero a")
             act = kind in ACT_KINDS
@@ -129,11 +182,13 @@ class InterpLibrary:
                 out_bits=d.out_bits, lookup_bits=d.lookup_bits, k=d.k,
                 degree=d.degree, sq_trunc=d.sq_trunc, lin_trunc=d.lin_trunc,
                 act_lo=lo if act else 0.0, act_hi=hi if act else 0.0,
-                act_span=act_out_span(kind, lo, hi) if act else 0.0))
-        r_max = max(1 << d.lookup_bits for d in designs)
+                act_span=act_out_span(kind, lo, hi) if act else 0.0,
+                seg_depth=seg_depth,
+                seg_meta=tuple(getattr(d, "leaf_meta", ()))))
+        r_max = max(m.rows_used for m in metas)
         packed = np.zeros((len(designs), r_max, 3), np.int32)
-        for i, d in enumerate(designs):
-            packed[i, : 1 << d.lookup_bits] = d.packed_coeffs()
+        for i, (m, d) in enumerate(zip(metas, designs)):
+            packed[i, : m.rows_used] = d.packed_coeffs()
         return cls(jnp.asarray(packed), tuple(metas)).seal()
 
     # -- introspection -----------------------------------------------------
@@ -143,7 +198,11 @@ class InterpLibrary:
 
     @property
     def r_max(self) -> int:
-        return max(1 << m.lookup_bits for m in self.metas)
+        return max(m.rows_used for m in self.metas)
+
+    @property
+    def segmented_kinds(self) -> tuple[str, ...]:
+        return tuple(m.kind for m in self.metas if m.seg_depth)
 
     def __contains__(self, kind: str) -> bool:
         return kind in self._index
@@ -220,8 +279,10 @@ class InterpLibrary:
 
     def manifest(self) -> dict:
         f, r_max, _ = np.shape(self.coeffs)
+        version = (_FORMAT_VERSION_SEG if any(m.seg_depth for m in self.metas)
+                   else _FORMAT_VERSION)
         return {
-            "version": _FORMAT_VERSION,
+            "version": version,
             "kinds": list(self.kinds),
             "n_funcs": int(f),
             "r_max": int(r_max),
@@ -243,10 +304,17 @@ class InterpLibrary:
         from repro.kernels.interp.ref import interp_eval_ref
 
         fid = self.func_id(kind)
+        m = self.metas[fid]
+        if m.seg_depth:
+            # non-uniform slot: route through the segment-index datapath
+            # (same code the fused kernels inline; jnp gather oracle here)
+            from repro.kernels.interp.ref import interp_eval_seg_ref
+
+            rows = jax.lax.index_in_dim(self.coeffs, fid, 0, keepdims=False)
+            return interp_eval_seg_ref(codes, rows, seg=m.seg_spec())
         if use_kernel or (use_kernel is None and _on_tpu()):
             return self.eval_fused(codes, fid, use_kernel=True,
                                    interpret=interpret)
-        m = self.metas[fid]
         rows = jax.lax.index_in_dim(self.coeffs, fid, 0, keepdims=False)
         return interp_eval_ref(
             codes, rows[: 1 << m.lookup_bits], eval_bits=m.eval_bits,
@@ -255,7 +323,18 @@ class InterpLibrary:
 
     def eval_fused(self, codes, fids, use_kernel: bool = True,
                    interpret: bool | None = None):
-        """Fused multi-function evaluation: element i reads table fids[i]."""
+        """Fused multi-function evaluation: element i reads table fids[i].
+
+        Uniform slots only — a segmented function's datapath is per-leaf,
+        not per-function, so it cannot ride the (F, 5) meta operand; use
+        ``eval_int`` (or the fused softmax/rmsnorm/flash kernels, which
+        inline the segment gather) for those kinds.
+        """
+        seg = self.segmented_kinds
+        if seg:
+            raise ValueError(
+                f"eval_fused cannot address segmented slots {seg}; "
+                f"evaluate those kinds through eval_int")
         from repro.kernels.interp.ops import library_eval
 
         return library_eval(codes, fids, self.coeffs, self.meta_rows(),
@@ -308,7 +387,7 @@ class InterpLibrary:
         if base.suffix in (".json", ".npz"):
             base = base.with_suffix("")
         man = json.loads(base.with_suffix(".json").read_text())
-        if man.get("version") != _FORMAT_VERSION:
+        if man.get("version") not in (_FORMAT_VERSION, _FORMAT_VERSION_SEG):
             raise ValueError(f"unsupported library version {man.get('version')}")
         with np.load(base.parent / man["coeffs_file"]) as z:
             coeffs = z["coeffs"].astype(np.int32)
@@ -316,7 +395,7 @@ class InterpLibrary:
             np.ascontiguousarray(coeffs).tobytes()).hexdigest()[:16]
         if man.get("coeffs_sha") and sha != man["coeffs_sha"]:
             raise ValueError(f"corrupt library ROM {base}.npz")
-        metas = tuple(FuncMeta(**f) for f in man["funcs"])
+        metas = tuple(_meta_from_dict(f) for f in man["funcs"])
         return cls(jnp.asarray(coeffs), metas).seal(sha)
 
 

@@ -99,6 +99,15 @@ class AsicTarget:
     def objective(self, design: TableDesign, ad: AreaDelay) -> float:
         return ad.area * ad.delay
 
+    def decoder_estimate(self, n_leaves: int, depth: int) -> AreaDelay:
+        """Segment-index decoder: a 2^depth x ceil(log2 S)-bit ROM feeding
+        the coefficient LUT address — same cell model as the main ROM plus
+        one extra serial lookup level on the critical path."""
+        idx_bits = max(n_leaves - 1, 1).bit_length()
+        area = 0.25 * (1 << depth) * idx_bits
+        delay = 1.0 + 0.35 * depth + 0.2 * math.log2(max(idx_bits, 2.0))
+        return AreaDelay(area=area, delay=delay)
+
 
 @register_target("fpga-lut")
 class FpgaLutTarget:
@@ -118,8 +127,10 @@ class FpgaLutTarget:
         wa, wb, wc = design.lut_widths
         s = max(w - design.sq_trunc, 0)
         lb = max(w - design.lin_trunc, 0)
-        # ROM as distributed LUTRAM: one 6-LUT holds 64x1 bits.
-        rom_luts = (wa + wb + wc) * max((1 << r) // 64, 1)
+        # ROM as distributed LUTRAM: one 6-LUT holds 64x1 bits. Segmented
+        # designs carry their (smaller) stored row count in ``rows``.
+        rows = int(getattr(design, "rows", 0) or (1 << r))
+        rom_luts = (wa + wb + wc) * max(rows // 64, 1)
         # soft multipliers: ~half a LUT per partial-product bit.
         mul_luts = 0.5 * wb * lb
         if design.degree == 2 and s > 0:
@@ -135,6 +146,13 @@ class FpgaLutTarget:
 
     def objective(self, design: TableDesign, ad: AreaDelay) -> tuple:
         return (round(ad.area), ad.delay)
+
+    def decoder_estimate(self, n_leaves: int, depth: int) -> AreaDelay:
+        """Segment-index table as LUTRAM plus one extra LUT level of
+        address indirection before the coefficient read."""
+        idx_bits = max(n_leaves - 1, 1).bit_length()
+        luts = idx_bits * max((1 << depth) // 64, 1)
+        return AreaDelay(area=float(luts), delay=1.0)
 
 
 @register_target("pallas-tpu")
@@ -152,8 +170,12 @@ class PallasTpuTarget:
     name = "pallas-tpu"
     policy = DecisionPolicy(maximize_sq_trunc=False, maximize_lin_trunc=False)
 
+    # A segmented slot's packed seg table lives inside the coefficient ROM
+    # rows (ROM v2), so the ``rows`` override below already pays its VMEM.
+    seg_table_in_rom = True
+
     def estimate(self, design: TableDesign) -> AreaDelay:
-        rows = 1 << design.lookup_bits
+        rows = int(getattr(design, "rows", 0) or (1 << design.lookup_bits))
         wa, wb, _ = design.lut_widths
         w = design.eval_bits
         s = max(w - design.sq_trunc, 0)
@@ -167,3 +189,9 @@ class PallasTpuTarget:
     def objective(self, design: TableDesign, ad: AreaDelay) -> tuple:
         # VMEM bytes first (already 2x when not int32-packable), then width
         return (ad.area, ad.delay)
+
+    def decoder_estimate(self, n_leaves: int, depth: int) -> AreaDelay:
+        """VMEM is already counted via ``rows`` (the packed table rides in
+        the slot); the marginal cost is the extra one-hot gather contraction,
+        whose width scales with the 2^depth cell count."""
+        return AreaDelay(area=0.0, delay=float(depth))

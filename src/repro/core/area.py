@@ -41,7 +41,11 @@ def estimate(design: TableDesign) -> AreaDelay:
     acc_w = max(wc, wa + 2 * s, wb + lb) + 2  # accumulator width
 
     # --- area ---------------------------------------------------------------
-    lut_bits = (1 << r) * (wa + wb + wc)
+    # Non-uniform designs store fewer rows than their address span (the
+    # segment decoder is costed separately by the target); uniform designs
+    # have no ``rows`` attribute and keep the 2^r ROM.
+    rows = int(getattr(design, "rows", 0) or (1 << r))
+    lut_bits = rows * (wa + wb + wc)
     area = 0.25 * lut_bits  # ROM cell ~ 1/4 logic cell
     if design.degree == 2 and s > 0:
         area += 0.5 * s * s  # dedicated squarer (folded Booth array)

@@ -341,7 +341,9 @@ def _run_decision_pooled(spec, lookup_bits, degree, impl, k_max, pool,
     if ds is None or not ds.feasible:
         return None
 
-    n_regions = 1 << lookup_bits
+    # region count comes from the bound rows, not 2^R: a segmented caller
+    # (repro.segment) passes one row per same-width leaf via ``bounds``
+    n_regions = len(ds.candidates)
     w = ds.eval_bits
     k = ds.k
     a_sets: list[list[int]] = [[c.a for c in ds.candidates[r]] for r in range(n_regions)]
@@ -368,15 +370,18 @@ def _run_decision_pooled(spec, lookup_bits, degree, impl, k_max, pool,
         lin_t, region_cands = j, trial
 
     # -- step 4: Algorithm 1 width minimization, a -> b -> c ---------------
+    verify_bounds = (ds.L, ds.U) if bounds is not None else None
     return finalize_design(spec, lookup_bits, ds.L, ds.U, k, deg, sq_t, lin_t,
-                           region_cands, linear_possible)
+                           region_cands, linear_possible,
+                           verify_bounds=verify_bounds)
 
 
 def finalize_design(spec, lookup_bits: int, L: np.ndarray, U: np.ndarray,
                     k: int, deg: int, sq_t: int, lin_t: int,
                     region_cands: list[list[Candidate]],
                     linear_possible: bool,
-                    alg1_fn=None) -> tuple[TableDesign, DecisionReport] | None:
+                    alg1_fn=None, verify_bounds=None
+                    ) -> tuple[TableDesign, DecisionReport] | None:
     """Step 4 of the §III procedure: Algorithm-1 width minimization over the
     surviving candidates (a -> b -> c), first-survivor pick per region, and
     the final exhaustive verification.
@@ -384,9 +389,14 @@ def finalize_design(spec, lookup_bits: int, L: np.ndarray, U: np.ndarray,
     ``alg1_fn`` must be *value-identical* to :func:`alg1_interval_precision`
     (the default); the fleet engine injects its vectorized twin
     (``repro.core.fleet.fleet_alg1``), property-tested as bit-identical.
+    ``verify_bounds=(L, U)`` verifies the design directly against those bound
+    rows instead of ``spec.bound_arrays()`` — required when the rows are not
+    the spec's full-domain reshape (segmented depth groups, where ``spec`` is
+    a width-only pseudo-spec and only the first ``n_regions * 2^w`` codes are
+    meaningful).
     """
     alg1 = alg1_fn if alg1_fn is not None else alg1_interval_precision
-    n_regions = 1 << lookup_bits
+    n_regions = len(region_cands)
     w = spec.in_bits - lookup_bits
     # The interval sets fed to Algorithm 1 skip union() normalization: the
     # width search only takes min/max over each set's intervals, which is
@@ -499,7 +509,14 @@ def finalize_design(spec, lookup_bits: int, L: np.ndarray, U: np.ndarray,
         sq_trunc=sq_t, lin_trunc=lin_t, a=av, b=bv, c=cv,
         a_meta=a_meta, b_meta=b_meta, c_meta=c_meta,
     )
-    ok, _ = design.verify(spec)
+    if verify_bounds is None:
+        ok, _ = design.verify(spec)
+    else:
+        vb_lo, vb_hi = verify_bounds
+        codes = np.arange(n_regions << w, dtype=np.int64)
+        y = design.eval_int(codes)
+        ok = bool(np.all((y >= vb_lo.reshape(-1).astype(np.int64))
+                         & (y <= vb_hi.reshape(-1).astype(np.int64))))
     assert ok, f"decision produced an invalid design for {spec.name} R={lookup_bits}"
     report = DecisionReport(lookup_bits, deg, k, sq_t, lin_t,
                             design.lut_widths, linear_possible)

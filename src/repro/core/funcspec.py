@@ -25,17 +25,22 @@ import numpy as np
 # read these — the window lives here, next to the bound makers, and nowhere
 # else.
 ACT_LO, ACT_HI = -8.0, 8.0
-ACT_KINDS = ("silu", "sigmoid", "softplus", "gelu")
+ACT_KINDS = ("silu", "sigmoid", "softplus", "gelu", "tanh")
 
 
 def act_out_span(kind: str, lo: float = ACT_LO, hi: float = ACT_HI) -> float:
     """Output span S of a direct activation table: the stored integer is
     ``value * 2^out_bits / S``, so the float glue rescales by
-    ``S / 2^out_bits``. sigmoid's range is (0, 1); the others scale by the
-    input window width so the signed/linear tails stay representable."""
+    ``S / 2^out_bits``. sigmoid's range is (0, 1), tanh's (-1, 1); the
+    others scale by the input window width so the signed/linear tails stay
+    representable."""
     if kind not in ACT_KINDS:
         raise KeyError(f"{kind!r} is not a direct activation table")
-    return 1.0 if kind == "sigmoid" else hi - lo
+    if kind == "sigmoid":
+        return 1.0
+    if kind == "tanh":
+        return 2.0
+    return hi - lo
 
 
 @dataclasses.dataclass(frozen=True)
@@ -240,7 +245,24 @@ def make_gelu(bits: int, out_bits: int | None = None, lo: float = ACT_LO, hi: fl
     )
 
 
+def make_tanh(bits: int, out_bits: int | None = None, lo: float = ACT_LO, hi: float = ACT_HI,
+              ulp: float = 1.0) -> FunctionSpec:
+    """``y = tanh(s)`` — signed output in (-1, 1), span 2 (Jamba/Mamba gates,
+    classic RNN cells; the VLSI segmentation literature's canonical case)."""
+    out_bits = out_bits if out_bits is not None else bits
+
+    def value(codes: np.ndarray) -> np.ndarray:
+        s = lo + (hi - lo) * codes.astype(np.float64) / (1 << bits)
+        return np.tanh(s) * (1 << out_bits) / 2.0
+
+    return FunctionSpec(
+        f"tanh{bits}", bits, out_bits, lambda c: _float_bounds(value(c), ulp), value, ulp,
+        signed_output=True,
+    )
+
+
 MAKERS: dict[str, Callable[..., FunctionSpec]] = {
+    "tanh": make_tanh,
     "recip": make_reciprocal,
     "log2": make_log2,
     "exp2": make_exp2,

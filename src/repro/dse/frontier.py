@@ -94,6 +94,15 @@ def load_frontier(path: str | pathlib.Path) -> dict[str, Any]:
     return doc
 
 
+def _param_axes(doc: dict[str, Any]) -> set[str]:
+    """Union of trial-parameter field names across a frontier's points."""
+    axes: set[str] = set()
+    for pts in doc.get("groups", {}).values():
+        for p in pts:
+            axes.update(p.get("params", {}))
+    return axes
+
+
 def compare_frontiers(fresh: dict[str, Any], committed: dict[str, Any]
                       ) -> list[str]:
     """Regressions of ``fresh`` against ``committed`` (empty = healthy).
@@ -101,13 +110,23 @@ def compare_frontiers(fresh: dict[str, Any], committed: dict[str, Any]
     A committed frontier point regresses when no fresh point in the same
     target group weakly dominates its objective vector. Meta blocks and
     extra fresh points are ignored — the committed artifact is a floor,
-    not an exact expectation.
+    not an exact expectation. Trial-parameter axes may *grow*: a fresh
+    study whose params are a superset of the committed ones (a new
+    TrialParams field with a default, e.g. ``segmentation``) compares
+    cleanly against an older artifact; only a *vanished* committed axis is
+    flagged, since the fresh study can then no longer express the
+    committed points.
     """
     problems: list[str] = []
     if fresh.get("objectives") != committed.get("objectives"):
         return [f"objective axes changed: fresh {fresh.get('objectives')} "
                 f"vs committed {committed.get('objectives')} — "
                 f"regenerate the committed artifact"]
+    lost_axes = _param_axes(committed) - _param_axes(fresh)
+    if lost_axes and fresh.get("groups"):
+        return [f"trial axes {sorted(lost_axes)} present in the committed "
+                f"frontier are missing from the fresh study — the fresh "
+                f"study cannot express the committed points"]
     for target, committed_pts in committed.get("groups", {}).items():
         fresh_pts = fresh.get("groups", {}).get(target)
         if not fresh_pts:

@@ -44,22 +44,29 @@ def run_meta(seed: int | None = None, *, stamp_time: bool = True,
     return meta
 
 
-def _migrate_unversioned(path: pathlib.Path, existing: dict) -> dict:
-    """Lift a pre-schema snapshot ({table: rows} at top level) into the
-    versioned envelope, backing the original up exactly once."""
+def _migrate_unversioned(path: pathlib.Path, existing) -> dict:
+    """Lift a pre-schema snapshot into the versioned envelope, backing the
+    original up exactly once. Handles both legacy layouts: the multi-table
+    ``{table: rows}`` dict and the bare row *list* a per-table
+    ``benchmarks.common.emit`` used to write (wrapped as ``{stem: rows}``)."""
     backup = path.with_name(path.stem + ".pre-schema.json")
     if not backup.exists():
         backup.write_text(json.dumps(existing, indent=1))
+    if not isinstance(existing, dict):
+        existing = {path.stem: existing}
     return {"schema": RECORD_SCHEMA, "meta": {}, "tables": existing}
 
 
 def read_snapshot(path: str | pathlib.Path) -> dict[str, Any]:
-    """Snapshot tables (empty dict when the file is absent). Accepts both
-    the versioned envelope and the legacy bare-tables layout."""
+    """Snapshot tables (empty dict when the file is absent). Accepts the
+    versioned envelope and both legacy layouts (bare tables dict / bare
+    row list keyed by the file stem)."""
     path = pathlib.Path(path)
     if not path.exists():
         return {}
     data = json.loads(path.read_text())
+    if not isinstance(data, dict):
+        return {path.stem: data}
     if "schema" in data and "tables" in data:
         return dict(data["tables"])
     return dict(data)
@@ -77,7 +84,8 @@ def update_snapshot(path: str | pathlib.Path, tables: dict[str, Any], *,
     path = pathlib.Path(path)
     if path.exists():
         existing = json.loads(path.read_text())
-        if not ("schema" in existing and "tables" in existing):
+        if not (isinstance(existing, dict) and "schema" in existing
+                and "tables" in existing):
             existing = _migrate_unversioned(path, existing)
         elif existing["schema"] > RECORD_SCHEMA:
             raise ValueError(f"{path}: snapshot schema {existing['schema']} "

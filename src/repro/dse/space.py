@@ -38,26 +38,29 @@ class SearchSpace:
     horizons: tuple[int, ...] = (8,)
     batches: tuple[int, ...] = (4,)
     arch: str = "yi_6b"
+    segmentations: tuple[str, ...] = ("uniform",)
 
     def __len__(self) -> int:
         n = 1
         for axis in (self.kinds, self.lookup_bits, self.targets, self.bits,
                      self.out_bits, self.ulps, self.degrees, self.engines,
-                     self.fused, self.horizons, self.batches):
+                     self.fused, self.horizons, self.batches,
+                     self.segmentations):
             n *= len(axis)
         return n
 
     def trials(self) -> Iterator[TrialParams]:
         """Deterministic enumeration (itertools.product in axis order)."""
         for (kind, r, target, bits, out_bits, ulp, degree, engine, fused,
-             horizon, batch) in itertools.product(
+             horizon, batch, segmentation) in itertools.product(
                 self.kinds, self.lookup_bits, self.targets, self.bits,
                 self.out_bits, self.ulps, self.degrees, self.engines,
-                self.fused, self.horizons, self.batches):
+                self.fused, self.horizons, self.batches, self.segmentations):
             yield TrialParams(kind=kind, lookup_bits=r, target=target,
                               bits=bits, out_bits=out_bits, ulp=ulp,
                               degree=degree, engine=engine, fused=fused,
-                              horizon=horizon, batch=batch, arch=self.arch)
+                              horizon=horizon, batch=batch, arch=self.arch,
+                              segmentation=segmentation)
 
     def to_dict(self) -> dict[str, Any]:
         d = dataclasses.asdict(self)
@@ -95,4 +98,18 @@ def default_space() -> SearchSpace:
                        arch="yi_6b")
 
 
-PRESETS = {"smoke": smoke_space, "default": default_space}
+def segment_space() -> SearchSpace:
+    """The study-8 increment: the four activation/transcendental kinds the
+    segment subsystem most benefits, both layouts per point, every target.
+    A deterministic chunk of the full product — small enough to regenerate
+    from scratch, big enough that uniform and hier compete on every
+    frontier group."""
+    return SearchSpace(kinds=("exp2neg", "recip", "sigmoid", "tanh"),
+                       lookup_bits=(5, 6),
+                       targets=("asic", "fpga-lut", "pallas-tpu"),
+                       fused=(True,), horizons=(8,), batches=(2,),
+                       arch="yi_6b", segmentations=("uniform", "hier"))
+
+
+PRESETS = {"smoke": smoke_space, "default": default_space,
+           "segment": segment_space}

@@ -164,9 +164,11 @@ class Study:
         return self._specs[key]
 
     def _evaluate(self, p: TrialParams) -> TrialRecord:
-        ex = self._explorer(p.engine)
         spec = self._spec(p)
         t0 = time.perf_counter()
+        if p.segmentation == "hier":
+            return self._evaluate_hier(p, spec, t0)
+        ex = self._explorer(p.engine)
         entry = ex.explore_r(spec, p.lookup_bits, target=p.target,
                              degree=p.degree)
         if entry is None:
@@ -196,6 +198,45 @@ class Study:
         return TrialRecord(p, "ok", metrics=metrics, objectives=objectives,
                            timing=timing)
 
+    def _evaluate_hier(self, p: TrialParams, spec: FunctionSpec,
+                       t0: float) -> TrialRecord:
+        """Non-uniform trial: the greedy segmenter with ``lookup_bits`` as
+        the depth cap, costed by the segment-aware estimator (uniform cost
+        model over stored rows + the target's segment decoder)."""
+        from repro.segment import estimate_segmented, explore_segmented
+
+        design = explore_segmented(spec, max_depth=p.lookup_bits,
+                                   degree=p.degree, engine=p.engine)
+        if design is None:
+            return TrialRecord(p, "infeasible",
+                               timing={"eval_s": time.perf_counter() - t0})
+        ad = estimate_segmented(design, p.target)
+        margin = accuracy_margin_ulp(design, spec)
+        metrics: dict[str, Any] = {
+            "area": float(ad.area),
+            "delay": float(ad.delay),
+            "accuracy_margin": margin,
+            "degree": design.degree,
+            "k": design.k,
+            "rows": design.rows_used,
+            "leaves": design.n_leaves,
+        }
+        timing: dict[str, float] = {}
+        served = self.probe.measure(p)
+        wall = served.pop("wall_tokens_per_s", None)
+        if wall is not None:
+            timing["wall_tokens_per_s"] = wall
+        retries = served.pop("probe_retries", None)
+        if retries:
+            timing["retries"] = int(retries)
+        metrics.update(served)
+        objectives = [metrics["area"], metrics["delay"], -float(margin)]
+        if self.measure != "none":
+            objectives.append(-float(metrics["tokens_per_s"]))
+        timing["eval_s"] = time.perf_counter() - t0
+        return TrialRecord(p, "ok", metrics=metrics, objectives=objectives,
+                           timing=timing)
+
     # -- the resumable loop ------------------------------------------------
     def run(self, max_trials: int | None = None,
             compact: bool = False) -> dict[str, TrialRecord]:
@@ -216,8 +257,11 @@ class Study:
         if max_trials is not None:
             todo = todo[:max_trials]
         # one fleet program per engine primes every cold trial's envelopes
+        # (hier trials walk their own segmentations — nothing to prime)
         by_engine: dict[str, list] = {}
         for p in todo:
+            if p.segmentation == "hier":
+                continue
             by_engine.setdefault(p.engine, []).append(
                 (self._spec(p), p.lookup_bits))
         for engine, pairs in by_engine.items():

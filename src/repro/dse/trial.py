@@ -36,6 +36,9 @@ class TrialParams:
     Serving axes: ``fused`` (one-dispatch tick vs serial oracle),
     ``horizon`` (decode steps per fused dispatch), ``batch`` (slot count),
     ``arch`` (config-zoo architecture the serve probe decodes with).
+    ``segmentation`` selects the table layout: ``"uniform"`` (the paper's
+    2^R equal regions) or ``"hier"`` (repro.segment's greedy dyadic tree,
+    with ``lookup_bits`` as the depth cap).
     """
 
     kind: str
@@ -50,6 +53,7 @@ class TrialParams:
     horizon: int = 8
     batch: int = 4
     arch: str = "yi_6b"
+    segmentation: str = "uniform"
 
     def spec(self) -> FunctionSpec:
         """Resolve the FunctionSpec exactly as ``ExploreConfig.spec`` does:

@@ -31,6 +31,11 @@ def flash_attention_lib_ref(q: jax.Array, k: jax.Array, v: jax.Array,
 
     def rom_lut(meta):
         rows = _rom_rows(coeffs, meta)
+        seg = meta["eval"].get("seg")
+        if seg is not None:  # ROM v2 slot: segment-index datapath
+            from repro.kernels.interp.ref import interp_eval_seg_ref
+
+            return lambda c: interp_eval_seg_ref(c, rows, seg=seg)
         return lambda c: interp_eval_ref(c, rows, **meta["eval"])
 
     n, sq, d = q.shape

@@ -74,9 +74,70 @@ def _lut(codes: jax.Array, coeffs: jax.Array, *, eval_bits: int, k: int,
                      degree=degree)
 
 
+def _lut_seg(codes: jax.Array, rows: jax.Array, *, seg: tuple) -> jax.Array:
+    """Non-uniform (ROM v2) slot evaluation: segment-index gather, then the
+    per-leaf fixed-point tail.
+
+    ``rows`` is one function's slot of a v2 library ROM: rows ``[0, S)``
+    hold the S per-leaf coefficient triples and rows ``[S, S + ceil(2^D/3))``
+    the segment-index table packed 3 int32 entries per row. ``seg`` is the
+    static ``FuncMeta.seg_spec()`` tuple ``(in_bits, depth, n_leaves,
+    leaf_meta)`` with one ``(eval_bits, k, sq_trunc, lin_trunc, degree)``
+    row per leaf — this is the address decoder the paper's uniform layout
+    avoids: the top D input bits index a 2^D table that names the leaf, and
+    the leaf supplies both the coefficient row and the datapath constants.
+    Both gathers are one-hot MXU contractions like the uniform kernels; the
+    shifts take per-element amounts (vector shifts), exactly as in
+    ``_library_kernel``. Degenerate segmentations (every leaf at depth R)
+    reproduce the uniform ``_lut`` bitwise: the cell index equals the
+    region index, every leaf row carries the uniform datapath constants,
+    and the int32 accumulate is order-insensitive (wrapping adds commute).
+    """
+    in_bits, depth, n_leaves, leaf_meta = seg
+    n_cells = 1 << depth
+    n_table_rows = (n_cells + 2) // 3
+    # unpack the segment-index table: (T, 3) rows -> flat 2^D leaf ids
+    table = jax.lax.slice_in_dim(rows, n_leaves, n_leaves + n_table_rows)
+    seg_tab = jax.lax.slice_in_dim(table.reshape(-1), 0, n_cells)
+    flat_cell = jax.lax.shift_right_logical(
+        codes, in_bits - depth).reshape(-1)
+    n = flat_cell.shape[0]
+    iota_c = jax.lax.broadcasted_iota(jnp.int32, (n, n_cells), 1)
+    onehot_c = (flat_cell[:, None] == iota_c).astype(jnp.int32)
+    leaf = jax.lax.dot_general(
+        onehot_c, seg_tab[:, None], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)[:, 0]
+    # per-leaf datapath constants: unrolled scalar-literal selection off the
+    # leaf one-hot. A materialized (S, 5) meta matrix would be a captured
+    # constant — which Pallas rejects — while scalar literals fold into the
+    # jaxpr; S is static and small, so the unroll is a handful of vector
+    # multiply-adds.
+    iota_l = jax.lax.broadcasted_iota(jnp.int32, (n, n_leaves), 1)
+    onehot_l = (leaf[:, None] == iota_l).astype(jnp.int32)
+
+    def pick(j: int) -> jax.Array:
+        acc = onehot_l[:, 0] * leaf_meta[0][j]
+        for i in range(1, n_leaves):
+            acc = acc + onehot_l[:, i] * leaf_meta[i][j]
+        return acc.reshape(codes.shape)
+
+    eb, k, sq, lin, deg = (pick(j) for j in range(5))
+    one = jnp.int32(1)
+    x = jnp.bitwise_and(codes, jax.lax.shift_left(one, eb) - 1)
+    sel = jax.lax.dot_general(
+        onehot_l, jax.lax.slice_in_dim(rows, 0, n_leaves),
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32).reshape(codes.shape + (3,))
+    xs = jax.lax.shift_left(jax.lax.shift_right_logical(x, sq), sq)
+    xl = jax.lax.shift_left(jax.lax.shift_right_logical(x, lin), lin)
+    xs = jnp.where(deg == 2, xs, 0)
+    acc = sel[..., 0] * xs * xs + sel[..., 1] * xl + sel[..., 2]
+    return jax.lax.shift_right_arithmetic(acc, k)
+
+
 def _lut_rom(codes: jax.Array, rom: jax.Array, *, fid: int, r_max: int,
              eval_bits: int, k: int, sq_trunc: int, lin_trunc: int,
-             degree: int) -> jax.Array:
+             degree: int, seg: tuple | None = None) -> jax.Array:
     """Table evaluation against a library ROM (static function id).
 
     ``rom`` is an :class:`repro.api.InterpLibrary` coefficient ROM flattened
@@ -89,24 +150,32 @@ def _lut_rom(codes: jax.Array, rom: jax.Array, *, fid: int, r_max: int,
     rmsnorm / flashattn) thread the whole library ROM as ONE operand and
     evaluate each transcendental in-registers instead of launching a
     standalone table kernel between ops.
+
+    ``seg`` (a static ``FuncMeta.seg_spec()`` tuple) switches the slot to
+    the non-uniform ROM-v2 datapath: the per-call eval_bits/k/truncation
+    scalars are ignored (each leaf carries its own) and the rows decode
+    through :func:`_lut_seg` instead of :func:`_lut`.
     """
     rows = jax.lax.slice_in_dim(rom, fid * r_max, (fid + 1) * r_max)
+    if seg is not None:
+        return _lut_seg(codes, rows, seg=seg)
     return _lut(codes, rows, eval_bits=eval_bits, k=k, sq_trunc=sq_trunc,
                 lin_trunc=lin_trunc, degree=degree)
 
 
 def _rom_kernel(codes_ref, rom_ref, out_ref, *, fid: int, r_max: int,
                 eval_bits: int, k: int, sq_trunc: int, lin_trunc: int,
-                degree: int):
+                degree: int, seg: tuple | None = None):
     out_ref[...] = _lut_rom(codes_ref[...], rom_ref[...], fid=fid,
                             r_max=r_max, eval_bits=eval_bits, k=k,
                             sq_trunc=sq_trunc, lin_trunc=lin_trunc,
-                            degree=degree)
+                            degree=degree, seg=seg)
 
 
 def rom_eval_2d(codes: jax.Array, rom: jax.Array, *, fid: int, r_max: int,
                 eval_bits: int, k: int, sq_trunc: int, lin_trunc: int,
-                degree: int, interpret: bool = True) -> jax.Array:
+                degree: int, seg: tuple | None = None,
+                interpret: bool = True) -> jax.Array:
     """Golden-test harness for ``_lut_rom``: evaluate one function of a
     flattened ``(F * r_max, 3)`` ROM on (rows, 128) codes through the same
     in-kernel datapath the fused consumers use."""
@@ -115,7 +184,7 @@ def rom_eval_2d(codes: jax.Array, rom: jax.Array, *, fid: int, r_max: int,
     n_rows = rom.shape[0]
     kernel = functools.partial(_rom_kernel, fid=fid, r_max=r_max,
                                eval_bits=eval_bits, k=k, sq_trunc=sq_trunc,
-                               lin_trunc=lin_trunc, degree=degree)
+                               lin_trunc=lin_trunc, degree=degree, seg=seg)
     return pl.pallas_call(
         kernel,
         grid=(rows // BLOCK_ROWS,),

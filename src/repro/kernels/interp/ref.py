@@ -26,6 +26,35 @@ def library_eval_ref(codes: jax.Array, fids: jax.Array, coeffs: jax.Array,
     return jax.lax.shift_right_arithmetic(acc, k)
 
 
+def interp_eval_seg_ref(codes: jax.Array, rows: jax.Array, *,
+                        seg: tuple) -> jax.Array:
+    """Gather-semantics oracle for the non-uniform (ROM v2) slot datapath.
+
+    ``rows`` is one function's slot: ``[0, S)`` per-leaf coefficient
+    triples, then the segment-index table packed 3 int32 per row. ``seg``
+    is the static ``FuncMeta.seg_spec()`` tuple ``(in_bits, depth,
+    n_leaves, leaf_meta)``. Bit-identical to the in-kernel ``_lut_seg``
+    one-hot path (tests/kernels) and to ``SegmentedDesign.eval_int``.
+    """
+    in_bits, depth, n_leaves, leaf_meta = seg
+    n_cells = 1 << depth
+    n_table_rows = (n_cells + 2) // 3
+    seg_tab = rows[n_leaves:n_leaves + n_table_rows].reshape(-1)[:n_cells]
+    codes = codes.astype(jnp.int32)
+    cell = jax.lax.shift_right_logical(codes, in_bits - depth)
+    leaf = seg_tab[cell]
+    m = jnp.asarray(leaf_meta, jnp.int32)[leaf]  # (..., 5)
+    eb, k, sq, lin, deg = (m[..., i] for i in range(5))
+    one = jnp.int32(1)
+    x = jnp.bitwise_and(codes, jax.lax.shift_left(one, eb) - 1)
+    sel = rows[:n_leaves][leaf]  # (..., 3)
+    xs = jax.lax.shift_left(jax.lax.shift_right_logical(x, sq), sq)
+    xl = jax.lax.shift_left(jax.lax.shift_right_logical(x, lin), lin)
+    xs = jnp.where(deg == 2, xs, 0)
+    acc = sel[..., 0] * xs * xs + sel[..., 1] * xl + sel[..., 2]
+    return jax.lax.shift_right_arithmetic(acc, k)
+
+
 def interp_eval_ref(codes: jax.Array, coeffs: jax.Array, *, eval_bits: int,
                     k: int, sq_trunc: int, lin_trunc: int, degree: int) -> jax.Array:
     r = jax.lax.shift_right_logical(codes, eval_bits)

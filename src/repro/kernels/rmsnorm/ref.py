@@ -28,14 +28,22 @@ def fused_rmsnorm_ref(x, gamma, coeffs, meta, eps=1e-6):
     codes = jnp.where(even, frac_code, halfcode + frac_code).astype(jnp.int32)
     h = jnp.where(even, e // 2, (e - 1) // 2)
     ev = meta["eval"]
-    r = jax.lax.shift_right_logical(codes, ev["eval_bits"])
-    xi = jnp.bitwise_and(codes, (1 << ev["eval_bits"]) - 1)
-    sel = coeffs[r]
-    xs = jax.lax.shift_left(jax.lax.shift_right_logical(xi, ev["sq_trunc"]), ev["sq_trunc"])
-    xl = jax.lax.shift_left(jax.lax.shift_right_logical(xi, ev["lin_trunc"]), ev["lin_trunc"])
-    acc = sel[..., 1] * xl + sel[..., 2]
-    if ev["degree"] == 2:
-        acc = acc + sel[..., 0] * xs * xs
-    tab = jax.lax.shift_right_arithmetic(acc, ev["k"]).astype(jnp.float32)
+    if ev.get("seg") is not None:  # ROM v2 slot: segment-index datapath
+        from repro.kernels.interp.ref import interp_eval_seg_ref
+
+        tab = interp_eval_seg_ref(codes, coeffs,
+                                  seg=ev["seg"]).astype(jnp.float32)
+    else:
+        r = jax.lax.shift_right_logical(codes, ev["eval_bits"])
+        xi = jnp.bitwise_and(codes, (1 << ev["eval_bits"]) - 1)
+        sel = coeffs[r]
+        xs = jax.lax.shift_left(
+            jax.lax.shift_right_logical(xi, ev["sq_trunc"]), ev["sq_trunc"])
+        xl = jax.lax.shift_left(
+            jax.lax.shift_right_logical(xi, ev["lin_trunc"]), ev["lin_trunc"])
+        acc = sel[..., 1] * xl + sel[..., 2]
+        if ev["degree"] == 2:
+            acc = acc + sel[..., 0] * xs * xs
+        tab = jax.lax.shift_right_arithmetic(acc, ev["k"]).astype(jnp.float32)
     rs = tab * (2.0 ** -meta["out_bits"]) * jnp.exp2(-h.astype(jnp.float32))
     return (xf * rs * gamma.astype(jnp.float32)).astype(x.dtype)

@@ -28,19 +28,30 @@ def _meta(design: TableDesign) -> dict:
 
 def lib_meta(library, kind: str) -> dict:
     """The kernel meta dict of one library slot: the per-table ``_meta``
-    fields plus the function's static ROM row offset (``fid``)."""
+    fields plus the function's static ROM row offset (``fid``).
+
+    A non-uniform (ROM v2) slot additionally carries its static
+    ``seg_spec()`` tuple under ``eval["seg"]`` — the in-kernel ``_lut_rom``
+    read and the jnp oracles route through the segment-index datapath when
+    the key is present, so every fused consumer (softmax / rmsnorm /
+    flashattn) decodes segmented slots with zero extra dispatches. Uniform
+    slots omit the key entirely, keeping their meta dicts unchanged.
+    """
     m = library.meta(kind)
+    ev = {
+        "eval_bits": m.eval_bits,
+        "k": m.k,
+        "sq_trunc": m.sq_trunc,
+        "lin_trunc": m.lin_trunc,
+        "degree": m.degree,
+    }
+    if m.segmented:
+        ev["seg"] = m.seg_spec()
     return {
         "in_bits": m.in_bits,
         "out_bits": m.out_bits,
         "fid": library.func_id(kind),
-        "eval": {
-            "eval_bits": m.eval_bits,
-            "k": m.k,
-            "sq_trunc": m.sq_trunc,
-            "lin_trunc": m.lin_trunc,
-            "degree": m.degree,
-        },
+        "eval": ev,
     }
 
 

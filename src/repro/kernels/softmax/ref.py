@@ -9,8 +9,13 @@ LOG2E = 1.4426950408889634
 
 def _rom_rows(coeffs, meta: dict):
     """Slice one function's live rows out of a padded (F, R_max, 3) ROM."""
-    n_regions = 1 << (meta["in_bits"] - meta["eval"]["eval_bits"])
-    return coeffs[meta["fid"], :n_regions]
+    seg = meta["eval"].get("seg")
+    if seg is not None:  # ROM v2 slot: per-leaf coeffs + packed seg table
+        _, depth, n_leaves, _ = seg
+        n_rows = n_leaves + ((1 << depth) + 2) // 3
+    else:
+        n_rows = 1 << (meta["in_bits"] - meta["eval"]["eval_bits"])
+    return coeffs[meta["fid"], :n_rows]
 
 
 def fused_softmax_lib_ref(x, coeffs, exp_meta, recip_meta):
@@ -24,7 +29,12 @@ def fused_softmax_lib_ref(x, coeffs, exp_meta, recip_meta):
 
 
 def fused_softmax_ref(x, exp_coeffs, recip_coeffs, exp_meta, recip_meta):
-    def lut(codes, coeffs, eval_bits, k, sq_trunc, lin_trunc, degree):
+    def lut(codes, coeffs, eval_bits, k, sq_trunc, lin_trunc, degree,
+            seg=None):
+        if seg is not None:
+            from repro.kernels.interp.ref import interp_eval_seg_ref
+
+            return interp_eval_seg_ref(codes, coeffs, seg=seg)
         r = jax.lax.shift_right_logical(codes, eval_bits)
         xi = jnp.bitwise_and(codes, (1 << eval_bits) - 1)
         sel = coeffs[r]

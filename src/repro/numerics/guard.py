@@ -143,6 +143,9 @@ class GuardedNumerics:
     def gelu(self, x):
         return self._act("gelu", x)
 
+    def tanh(self, x):
+        return self._act("tanh", x)
+
     # -- guarded composites ------------------------------------------------
     def softmax(self, x, axis: int = -1):
         xf = x.astype(jnp.float32)

@@ -122,9 +122,10 @@ def _range_glue(x, in_bits: int, out_bits: int, span: float, ev,
 
 def _act_tails(kind: str, x, y, lo: float = ACT_LO, hi: float = ACT_HI):
     """Outside the table window the activations are linear (right tail) or
-    saturate; sigmoid saturates to 1/0, the rest to x/0."""
-    top = 1.0 if kind == "sigmoid" else x
-    return jnp.where(x >= hi, top, jnp.where(x <= lo, 0.0, y)).astype(x.dtype)
+    saturate; sigmoid saturates to 1/0, tanh to 1/-1, the rest to x/0."""
+    top = 1.0 if kind in ("sigmoid", "tanh") else x
+    bot = -1.0 if kind == "tanh" else 0.0
+    return jnp.where(x >= hi, top, jnp.where(x <= lo, bot, y)).astype(x.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -175,6 +176,10 @@ def approx_gelu(x: jax.Array, design: TableDesign | None = None) -> jax.Array:
     return _approx_act("gelu", x, design)
 
 
+def approx_tanh(x: jax.Array, design: TableDesign | None = None) -> jax.Array:
+    return _approx_act("tanh", x, design)
+
+
 # ---------------------------------------------------------------------------
 # composite ops
 # ---------------------------------------------------------------------------
@@ -212,6 +217,7 @@ class ExactNumerics:
     gelu = staticmethod(partial(jax.nn.gelu, approximate=True))
     sigmoid = staticmethod(jax.nn.sigmoid)
     softplus = staticmethod(jax.nn.softplus)
+    tanh = staticmethod(jnp.tanh)
 
     @staticmethod
     def exp_neg(x):
@@ -290,6 +296,9 @@ class InterpNumerics:
 
     def gelu(self, x):
         return self._act("gelu", x)
+
+    def tanh(self, x):
+        return self._act("tanh", x)
 
     def softmax(self, x, axis: int = -1):
         xf = x.astype(jnp.float32)

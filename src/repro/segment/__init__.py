@@ -1,0 +1,28 @@
+"""repro.segment — non-uniform (hierarchical power-of-two) segmentation.
+
+The uniform paper layout is the degenerate case of a dyadic prefix tree
+(every leaf at the same depth); this package generates, decides, costs and
+packs the general case end to end:
+
+  * :class:`Segmentation` — the combinatorial tree (tree.py)
+  * :func:`decide_segmentation` — §III decisions per depth group (decide.py)
+  * :func:`explore_segmented` — the greedy split refinement (segmenter.py)
+  * :class:`SegmentedDesign` — the verified artifact + int64 oracle (design.py)
+  * :func:`estimate_segmented` — target costs incl. decoder (cost.py)
+
+DESIGN.md §15 walks the whole pipeline.
+"""
+from repro.segment.cost import estimate_segmented
+from repro.segment.decide import decide_segmentation
+from repro.segment.design import SegmentedDesign
+from repro.segment.segmenter import explore_segmented, min_uniform_depth
+from repro.segment.tree import Segmentation
+
+__all__ = [
+    "Segmentation",
+    "SegmentedDesign",
+    "decide_segmentation",
+    "explore_segmented",
+    "min_uniform_depth",
+    "estimate_segmented",
+]

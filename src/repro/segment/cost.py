@@ -1,0 +1,66 @@
+"""Cost estimation for segmented designs against the registered targets.
+
+A :class:`~repro.segment.design.SegmentedDesign` is costed as the uniform
+model over a *conservative scalar view* (widest datapath over the leaves,
+stored row count instead of the 2^R address span) **plus** the target's
+segment-index decoder — the extra address-translation hardware a
+non-uniform layout needs (``Target.decoder_estimate``). Targets that pack
+the seg table into the coefficient ROM itself (pallas-tpu, ROM v2) set
+``seg_table_in_rom`` and get the full ``rows_used`` charged as ROM; the
+others store only the per-leaf coefficient rows there and pay the table
+inside ``decoder_estimate``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.area import AreaDelay
+from repro.core.table import CoeffMeta
+from repro.segment.design import SegmentedDesign
+
+
+@dataclasses.dataclass(frozen=True)
+class _CostView:
+    """Duck-typed stand-in for TableDesign in the uniform cost models:
+    worst-case (widest) per-leaf datapath + explicit stored row count."""
+
+    lookup_bits: int
+    eval_bits: int
+    degree: int
+    sq_trunc: int
+    lin_trunc: int
+    a_meta: CoeffMeta
+    b_meta: CoeffMeta
+    c_meta: CoeffMeta
+    rows: int
+
+    @property
+    def lut_widths(self) -> tuple[int, int, int]:
+        return (self.a_meta.width, self.b_meta.width, self.c_meta.width)
+
+
+def cost_view(design: SegmentedDesign, rows: int | None = None) -> _CostView:
+    metas = [m for m in design.leaf_meta]
+    return _CostView(
+        lookup_bits=design.seg_depth,
+        eval_bits=max(m[0] for m in metas),
+        degree=max(m[4] for m in metas),
+        sq_trunc=min(m[2] for m in metas),
+        lin_trunc=min(m[3] for m in metas),
+        a_meta=design.a_meta, b_meta=design.b_meta, c_meta=design.c_meta,
+        rows=int(rows if rows is not None else design.n_leaves))
+
+
+def estimate_segmented(design: SegmentedDesign, target) -> AreaDelay:
+    """(area, delay) of a segmented design under ``target``: uniform model
+    over the conservative view + the segment-index decoder."""
+    from repro.api.target import get_target
+
+    t = get_target(target)
+    packed = bool(getattr(t, "seg_table_in_rom", False))
+    view = cost_view(design, rows=design.rows_used if packed
+                     else design.n_leaves)
+    base = t.estimate(view)
+    dec = t.decoder_estimate(design.n_leaves, design.seg_depth) \
+        if hasattr(t, "decoder_estimate") else AreaDelay(0.0, 0.0)
+    return AreaDelay(area=base.area + dec.area, delay=base.delay + dec.delay)

@@ -1,0 +1,159 @@
+"""SegmentedDesign: a verified non-uniform piecewise-polynomial artifact.
+
+The non-uniform counterpart of :class:`repro.core.table.TableDesign`: one
+(a, b, c) coefficient row *per leaf* of a :class:`~repro.segment.tree.
+Segmentation`, plus the per-leaf datapath constants (eval_bits, k,
+truncations, degree) that the uniform design keeps as scalars. ``eval_int``
+is the exact int64 oracle of the whole artifact — bit-identical to the
+jnp/Pallas segment-index datapath (``kernels/interp``) and used by the
+exhaustive ``verify`` sweep, the same contract the uniform design has.
+
+Duck-typing contract: :meth:`repro.api.InterpLibrary.from_designs` consumes
+``seg_depth`` / ``leaf_meta`` / ``packed_coeffs()`` plus the usual
+name/width fields, so a SegmentedDesign drops into a library slot (ROM v2)
+next to uniform TableDesigns with no special casing at the call site.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.funcspec import FunctionSpec
+from repro.core.table import CoeffMeta
+from repro.segment.tree import Segmentation
+
+
+@dataclasses.dataclass
+class SegmentedDesign:
+    """A concrete, verified non-uniform piecewise-polynomial implementation.
+
+    ``leaf_meta[i]`` is the (eval_bits, k, sq_trunc, lin_trunc, degree) row
+    of leaf i — the static per-leaf datapath the kernels gather through the
+    segment-index table. The scalar ``k`` / ``degree`` / truncation
+    attributes mirror leaf 0 (a *representative*, for FuncMeta's uniform
+    fields); per-leaf values always come from ``leaf_meta``.
+    """
+
+    name: str
+    in_bits: int
+    out_bits: int
+    seg: Segmentation
+    a: np.ndarray  # (S,) int64 — one row per leaf, left to right
+    b: np.ndarray
+    c: np.ndarray
+    leaf_meta: tuple[tuple[int, int, int, int, int], ...]
+    a_meta: CoeffMeta  # merged storage formats (widest over depth groups)
+    b_meta: CoeffMeta
+    c_meta: CoeffMeta
+
+    def __post_init__(self):
+        s = self.seg.n_leaves
+        assert len(self.a) == len(self.b) == len(self.c) == s, \
+            (len(self.a), s)
+        assert len(self.leaf_meta) == s, (len(self.leaf_meta), s)
+        for i, (eb, *_rest) in enumerate(self.leaf_meta):
+            assert eb == self.in_bits - self.seg.depths[i], \
+                f"leaf {i}: eval_bits {eb} != B - d"
+
+    # -- representative scalars (FuncMeta's uniform fields) ----------------
+    @property
+    def seg_depth(self) -> int:
+        return self.seg.max_depth
+
+    @property
+    def lookup_bits(self) -> int:
+        """For a segmented slot the 'lookup' is the segment-index table
+        depth D — what the top input bits actually address."""
+        return self.seg.max_depth
+
+    @property
+    def eval_bits(self) -> int:
+        """Widest per-leaf evaluation width (worst-case datapath)."""
+        return max(m[0] for m in self.leaf_meta)
+
+    @property
+    def k(self) -> int:
+        return self.leaf_meta[0][1]
+
+    @property
+    def sq_trunc(self) -> int:
+        return self.leaf_meta[0][2]
+
+    @property
+    def lin_trunc(self) -> int:
+        return self.leaf_meta[0][3]
+
+    @property
+    def degree(self) -> int:
+        """2 if any leaf is quadratic (the squarer must exist)."""
+        return max(m[4] for m in self.leaf_meta)
+
+    @property
+    def n_leaves(self) -> int:
+        return self.seg.n_leaves
+
+    @property
+    def lut_widths(self) -> tuple[int, int, int]:
+        return (self.a_meta.width, self.b_meta.width, self.c_meta.width)
+
+    @property
+    def rows_used(self) -> int:
+        """ROM-v2 slot rows: per-leaf coeffs + the packed seg table."""
+        return self.n_leaves + ((1 << self.seg_depth) + 2) // 3
+
+    rows = rows_used  # cost-model override (targets read getattr 'rows')
+
+    # -- evaluation / verification ----------------------------------------
+    def eval_int(self, codes: np.ndarray) -> np.ndarray:
+        """Exact int64 oracle of the segment-index datapath.
+
+        cell = top D bits -> seg table -> leaf; x = code & (2^W_leaf - 1)
+        (leaves are aligned, so the low W_leaf bits ARE the intra-leaf
+        offset); then the per-leaf Figure-1 tail. The accumulation order
+        matches the kernels' ``a*xs*xs + b*xl + c`` — int64 is exact here,
+        and the int32 kernels agree bitwise because wrapping adds commute.
+        """
+        codes = np.asarray(codes, dtype=np.int64)
+        d_max = self.seg_depth
+        cell = codes >> (self.in_bits - d_max)
+        leaf = self.seg.seg_table().astype(np.int64)[cell]
+        meta = np.asarray(self.leaf_meta, np.int64)[leaf]  # (..., 5)
+        eb, k, sq, lin, deg = (meta[..., i] for i in range(5))
+        x = codes & ((np.int64(1) << eb) - 1)
+        xs = (x >> sq) << sq
+        xl = (x >> lin) << lin
+        sq_term = np.where(deg == 2, self.a[leaf] * xs * xs, 0)
+        acc = sq_term + self.b[leaf] * xl + self.c[leaf]
+        return acc >> k
+
+    def verify(self, spec: FunctionSpec) -> tuple[bool, int]:
+        """Exhaustive int64 sweep over every input code (same contract as
+        ``TableDesign.verify``). Returns (ok, worst violation in ULPs)."""
+        lo, hi = spec.bound_arrays()
+        codes = np.arange(1 << self.in_bits, dtype=np.int64)
+        y = self.eval_int(codes)
+        worst = int(max((lo - y).max(), (y - hi).max()))
+        return worst <= 0, max(worst, 0)
+
+    def max_error_ulp(self, spec: FunctionSpec) -> float:
+        if spec.value is None:
+            raise ValueError("spec has no real-valued target")
+        codes = np.arange(1 << self.in_bits, dtype=np.int64)
+        y = self.eval_int(codes).astype(np.float64)
+        return float(np.abs(y - spec.value(codes)).max())
+
+    # -- ROM packing -------------------------------------------------------
+    @property
+    def fits_int32(self) -> bool:
+        mat = np.stack([self.a, self.b, self.c], axis=1)
+        return bool(np.abs(mat).max() < 2**31)
+
+    def packed_coeffs(self) -> np.ndarray:
+        """(rows_used, 3) int32 ROM-v2 slot: per-leaf coefficient rows, then
+        the packed segment-index table (``Segmentation.packed_table``)."""
+        mat = np.stack([self.a, self.b, self.c], axis=1)
+        if np.abs(mat).max() >= 2**31:
+            raise ValueError(f"{self.name}: coefficients exceed int32")
+        return np.concatenate(
+            [mat.astype(np.int32), self.seg.packed_table()], axis=0)

@@ -1,0 +1,138 @@
+"""Hierarchical power-of-two segmentations (dyadic prefix trees).
+
+The paper's layout is *uniform*: the top R input bits select one of 2^R
+equal regions. The classic VLSI refinement (Lee/Cheung-style hierarchical
+segmentation; PAPERS.md) keeps the hardware-friendly power-of-two address
+decode but lets region *widths* vary: segments are the leaves of a binary
+prefix tree over the input domain, so every leaf is an aligned dyadic
+interval ``[p * 2^(B-d), (p+1) * 2^(B-d))`` at some depth ``d``. The region
+index then comes from a small 2^D-entry table addressed by the top
+``D = max(d)`` input bits — a one-level indirection instead of 2^B
+comparators, which is exactly what the segment-index datapath in
+``kernels/interp`` (``_lut_seg``) and the ROM-v2 slot layout implement.
+
+:class:`Segmentation` is the pure combinatorial object: an ordered tuple of
+leaf depths whose dyadic intervals tile ``[0, 2^B)`` exactly. Everything
+else (bounds, coefficients, costs) lives in the sibling modules.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Segmentation:
+    """Leaves of a dyadic prefix tree tiling ``[0, 2^in_bits)``.
+
+    ``depths[i]`` is the tree depth of leaf ``i`` (left to right); leaf i
+    covers ``2^(in_bits - depths[i])`` input codes. Validity — each leaf
+    aligned to its own width and the widths summing to the full domain — is
+    checked at construction, so every instance is a correct tiling.
+    """
+
+    in_bits: int
+    depths: tuple[int, ...]
+
+    def __post_init__(self):
+        b = self.in_bits
+        if b <= 0:
+            raise ValueError(f"in_bits must be positive, got {b}")
+        if not self.depths:
+            raise ValueError("segmentation needs at least one leaf")
+        pos = 0
+        for i, d in enumerate(self.depths):
+            if not 0 <= d <= b:
+                raise ValueError(f"leaf {i}: depth {d} outside [0, {b}]")
+            width = 1 << (b - d)
+            if pos % width:
+                raise ValueError(
+                    f"leaf {i}: start {pos} not aligned to width {width}")
+            pos += width
+        if pos != 1 << b:
+            raise ValueError(
+                f"leaves cover [0, {pos}), domain is [0, {1 << b})")
+
+    # -- constructors ------------------------------------------------------
+    @classmethod
+    def uniform(cls, in_bits: int, lookup_bits: int) -> "Segmentation":
+        """The degenerate segmentation: 2^R equal leaves — the paper's
+        uniform layout expressed as a prefix tree (every leaf at depth R)."""
+        return cls(in_bits, (lookup_bits,) * (1 << lookup_bits))
+
+    def split(self, leaf: int) -> "Segmentation":
+        """Replace leaf ``leaf`` by its two children (depth + 1)."""
+        d = self.depths[leaf]
+        if d >= self.in_bits:
+            raise ValueError(f"leaf {leaf} already at max depth {d}")
+        return Segmentation(
+            self.in_bits,
+            self.depths[:leaf] + (d + 1, d + 1) + self.depths[leaf + 1:])
+
+    def split_many(self, leaves) -> "Segmentation":
+        """Split several leaves at once (indices into the current tree)."""
+        out = list(self.depths)
+        for i in sorted(set(leaves), reverse=True):
+            d = out[i]
+            if d >= self.in_bits:
+                raise ValueError(f"leaf {i} already at max depth {d}")
+            out[i:i + 1] = [d + 1, d + 1]
+        return Segmentation(self.in_bits, tuple(out))
+
+    # -- structure ---------------------------------------------------------
+    @property
+    def n_leaves(self) -> int:
+        return len(self.depths)
+
+    @property
+    def max_depth(self) -> int:
+        """D: the segment-index table is addressed by the top D input bits."""
+        return max(self.depths)
+
+    @property
+    def is_uniform(self) -> bool:
+        return len(set(self.depths)) == 1
+
+    def leaf_starts(self) -> np.ndarray:
+        """(S,) int64 first code of each leaf."""
+        widths = np.array([1 << (self.in_bits - d) for d in self.depths],
+                          np.int64)
+        starts = np.zeros(len(widths), np.int64)
+        np.cumsum(widths[:-1], out=starts[1:])
+        return starts
+
+    def leaf_widths(self) -> np.ndarray:
+        return np.array([1 << (self.in_bits - d) for d in self.depths],
+                        np.int64)
+
+    def seg_table(self) -> np.ndarray:
+        """(2^D,) int32 leaf index per cell of the top-D-bit address space —
+        the content of the ROM-v2 segment-index table. Cell c belongs to the
+        leaf whose dyadic interval contains code ``c << (B - D)``; leaves at
+        depth d < D own ``2^(D - d)`` consecutive cells."""
+        d_max = self.max_depth
+        out = np.empty(1 << d_max, np.int32)
+        pos = 0
+        for i, d in enumerate(self.depths):
+            n = 1 << (d_max - d)
+            out[pos:pos + n] = i
+            pos += n
+        return out
+
+    def packed_table(self) -> np.ndarray:
+        """The seg table packed 3 int32 entries per ROM row:
+        ``(ceil(2^D / 3), 3)`` — the rows appended after the per-leaf
+        coefficients in a ROM-v2 slot (``FuncMeta.rows_used``)."""
+        tab = self.seg_table()
+        n_rows = (len(tab) + 2) // 3
+        out = np.zeros(n_rows * 3, np.int32)
+        out[: len(tab)] = tab
+        return out.reshape(n_rows, 3)
+
+    def depth_groups(self) -> dict[int, list[int]]:
+        """depth -> leaf indices at that depth (insertion-ordered)."""
+        groups: dict[int, list[int]] = {}
+        for i, d in enumerate(self.depths):
+            groups.setdefault(d, []).append(i)
+        return groups

@@ -119,6 +119,25 @@ def test_check_flags_injected_regression(tmp_path):
     assert any("vanished" in p for p in compare_frontiers(missing, fresh))
 
 
+def test_check_accepts_axis_superset(tmp_path):
+    """A fresh study whose trial axes strictly contain the committed one's
+    (ISSUE 8: the new ``segmentation`` axis vs the pre-segment
+    FRONTIER_6.json) must not be flagged — only a *lost* axis is a
+    regression, because then the fresh space cannot express the committed
+    points."""
+    study = _run_full(tmp_path / "a")
+    fresh = load_frontier(study.frontier_path())
+    # committed predates the new axis: strip it from every point's params
+    committed = json.loads(json.dumps(fresh))
+    for pts in committed["groups"].values():
+        for pt in pts:
+            pt["params"].pop("segmentation", None)
+    assert compare_frontiers(fresh, committed) == []
+    # the reverse direction — the fresh study LOST an axis — is flagged
+    problems = compare_frontiers(committed, fresh)
+    assert problems and "segmentation" in problems[0]
+
+
 def test_measure_change_refused(tmp_path):
     _run_full(tmp_path / "a")
     with pytest.raises(ValueError, match="measure"):

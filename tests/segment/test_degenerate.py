@@ -1,0 +1,80 @@
+"""The ISSUE 8 proof obligation: a degenerate (all-equal-depth)
+segmentation reproduces the uniform §III pipeline BITWISE — same
+coefficients, same datapath constants, same evaluation on every input
+code — and the per-group decisions agree across region engines."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.api.config import spec_for
+from repro.core.decision import run_decision
+from repro.segment import Segmentation, decide_segmentation
+from repro.segment.segmenter import min_uniform_depth
+
+KINDS = ("tanh", "sigmoid", "gelu", "silu")
+BITS = 10
+
+
+def _min_r(spec):
+    return min_uniform_depth(spec, engine="batched")
+
+
+@pytest.mark.parametrize("kind", KINDS)
+def test_degenerate_equals_uniform_bitwise(kind):
+    spec = spec_for(kind, BITS)
+    r = _min_r(spec)
+    uni, _report = run_decision(spec, r, engine="batched")
+    seg = Segmentation.uniform(spec.in_bits, r)
+    sd = decide_segmentation(spec, seg, engine="batched")
+    assert sd is not None, f"{kind}: degenerate decision infeasible at R={r}"
+
+    # identical coefficient ROM, row for row
+    np.testing.assert_array_equal(sd.a, uni.a)
+    np.testing.assert_array_equal(sd.b, uni.b)
+    np.testing.assert_array_equal(sd.c, uni.c)
+    # identical datapath constants on every leaf
+    w = spec.in_bits - r
+    for m in sd.leaf_meta:
+        assert m == (w, uni.k, uni.sq_trunc, uni.lin_trunc, uni.degree)
+    # identical storage formats
+    assert (sd.a_meta, sd.b_meta, sd.c_meta) == \
+        (uni.a_meta, uni.b_meta, uni.c_meta)
+
+    # and the oracles agree on EVERY input code (exhaustive)
+    codes = np.arange(1 << spec.in_bits, dtype=np.int64)
+    np.testing.assert_array_equal(sd.eval_int(codes), uni.eval_int(codes))
+    ok, worst = sd.verify(spec)
+    assert ok and worst == 0
+
+
+def test_group_decisions_engine_invariant():
+    """batched vs pooled region engines produce the same segmented design —
+    the same invariance the uniform pipeline guarantees (ISSUE 3)."""
+    spec = spec_for("tanh", BITS)
+    r = _min_r(spec)
+    seg = Segmentation.uniform(spec.in_bits, r).split(0).split(0)
+    a = decide_segmentation(spec, seg, engine="batched")
+    b = decide_segmentation(spec, seg, engine="pooled")
+    assert (a is None) == (b is None)
+    if a is not None:
+        np.testing.assert_array_equal(a.a, b.a)
+        np.testing.assert_array_equal(a.b, b.b)
+        np.testing.assert_array_equal(a.c, b.c)
+        assert a.leaf_meta == b.leaf_meta
+
+
+def test_nonuniform_refinement_still_verifies():
+    """Splitting leaves of a feasible tree never breaks the certificate:
+    each child's bounds are a subset of its parent's rows."""
+    spec = spec_for("sigmoid", BITS)
+    r = _min_r(spec)
+    seg = Segmentation.uniform(spec.in_bits, r)
+    for leaf in (0, 2, 5):
+        seg = seg.split(leaf)
+    sd = decide_segmentation(spec, seg, engine="batched")
+    assert sd is not None
+    ok, worst = sd.verify(spec)
+    assert ok and worst == 0
+    assert sd.n_leaves == (1 << r) + 3
+    assert sd.seg_depth == r + 1

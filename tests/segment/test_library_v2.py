@@ -1,0 +1,113 @@
+"""InterpLibrary ROM v2: segmented slots in the library artifact.
+
+Contract under test (ISSUE 8): a library with any segmented slot saves as
+manifest version 2 and round-trips; an all-uniform library still saves as
+version 1 with a byte-identical manifest and checksum-identical ROM to the
+pre-segment code path; the fused multi-function kernel refuses segmented
+slots loudly (their datapath is per-leaf) while the per-kind entry points
+route through the segment-index oracle bit-exactly."""
+from __future__ import annotations
+
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import InterpLibrary, default_explorer, load_library
+from repro.api.config import spec_for
+from repro.segment import explore_segmented, min_uniform_depth
+from repro.segment.segmenter import explore_segmented as _explore
+
+
+@pytest.fixture(scope="module")
+def seg_design():
+    spec = spec_for("tanh", 8)
+    sd = explore_segmented(spec, max_depth=min_uniform_depth(
+        spec, engine="batched"), engine="batched")
+    assert sd is not None
+    return sd
+
+
+@pytest.fixture(scope="module")
+def mixed_lib(seg_design):
+    ex = default_explorer()
+    uni = ex.get_table("sigmoid")
+    return InterpLibrary.from_designs([seg_design, uni],
+                                      ["tanh", "sigmoid"])
+
+
+def test_segmented_slot_evaluates_bitwise(mixed_lib, seg_design):
+    codes = jnp.arange(1 << seg_design.in_bits, dtype=jnp.int32)
+    got = np.asarray(mixed_lib.eval_int(codes, "tanh"), np.int64)
+    want = seg_design.eval_int(np.arange(1 << seg_design.in_bits))
+    np.testing.assert_array_equal(got, want)
+
+
+def test_mixed_library_saves_as_v2_and_round_trips(mixed_lib, tmp_path):
+    assert mixed_lib.manifest()["version"] == 2
+    assert mixed_lib.segmented_kinds == ("tanh",)
+    path = mixed_lib.save(tmp_path / "lib")
+    back = load_library(path)
+    assert back.metas == mixed_lib.metas
+    np.testing.assert_array_equal(np.asarray(back.coeffs),
+                                  np.asarray(mixed_lib.coeffs))
+    codes = jnp.arange(1 << back.meta("tanh").in_bits, dtype=jnp.int32)
+    np.testing.assert_array_equal(np.asarray(back.eval_int(codes, "tanh")),
+                                  np.asarray(mixed_lib.eval_int(codes, "tanh")))
+    # the uniform co-resident slot is untouched by its segmented neighbour
+    codes = jnp.arange(1 << back.meta("sigmoid").in_bits, dtype=jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(back.eval_int(codes, "sigmoid")),
+        np.asarray(mixed_lib.eval_int(codes, "sigmoid")))
+
+
+def test_uniform_library_still_saves_v1_checksum_identical(tmp_path):
+    """ROM v2 must not perturb v1 artifacts: an all-uniform library's
+    manifest stays version 1 and its content-addressed ROM file name (the
+    sealed hash) is reproducible across saves."""
+    lib = default_explorer().compile()
+    assert lib.segmented_kinds == ()
+    man = lib.manifest()
+    assert man["version"] == 1
+    for entry in man["funcs"]:
+        assert "seg_depth" not in entry and "seg_meta" not in entry
+    p1 = lib.save(tmp_path / "a")
+    p2 = lib.save(tmp_path / "b")
+    m1, m2 = json.loads(p1.read_text()), json.loads(p2.read_text())
+    # the ROM file is content-addressed <stem>.<hash>.npz: equal content
+    # hash across saves proves the sealed bytes are reproducible
+    assert m1["coeffs_file"].split(".")[1] == m2["coeffs_file"].split(".")[1]
+    assert {k: v for k, v in m1.items() if k != "coeffs_file"} == \
+        {k: v for k, v in m2.items() if k != "coeffs_file"}
+    back = load_library(p1)
+    np.testing.assert_array_equal(np.asarray(back.coeffs),
+                                  np.asarray(lib.coeffs))
+
+
+def test_eval_fused_refuses_segmented_slots(mixed_lib):
+    codes = jnp.zeros((4,), jnp.int32)
+    fids = jnp.zeros((4,), jnp.int32)
+    with pytest.raises(ValueError, match="segmented"):
+        mixed_lib.eval_fused(codes, fids)
+
+
+def test_compile_segmented_swaps_only_improving_slots():
+    ex = default_explorer()
+    lib_u = ex.compile()
+    lib_s = ex.compile_segmented()
+    assert set(lib_s.kinds) == set(lib_u.kinds)
+    total_u = sum(m.rows_used for m in lib_u.metas)
+    total_s = sum(m.rows_used for m in lib_s.metas)
+    assert total_s < total_u  # at least one slot improved, none regressed
+    for kind in lib_s.kinds:
+        mu, ms = lib_u.meta(kind), lib_s.meta(kind)
+        if ms.seg_depth:
+            assert ms.rows_used < mu.rows_used
+        else:
+            assert ms == mu
+
+
+def test_explore_segmented_reexported_identity():
+    # the package-level name and the segmenter module resolve to one object
+    assert explore_segmented is _explore

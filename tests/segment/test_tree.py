@@ -1,0 +1,61 @@
+"""Segmentation (dyadic prefix tree) combinatorics: construction guards,
+splitting, the seg-index table, and the ROM-v2 packing of it."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.segment import Segmentation
+
+
+def test_uniform_constructor_is_equal_depth_tiling():
+    seg = Segmentation.uniform(8, 3)
+    assert seg.n_leaves == 8 and seg.max_depth == 3 and seg.is_uniform
+    assert np.array_equal(seg.leaf_widths(), np.full(8, 32))
+    assert np.array_equal(seg.seg_table(), np.arange(8))
+
+
+def test_invalid_tilings_rejected():
+    with pytest.raises(ValueError, match="cover"):
+        Segmentation(4, (1,))  # half the domain
+    with pytest.raises(ValueError, match="cover"):
+        Segmentation(4, (1, 1, 1))  # 150% of the domain
+    with pytest.raises(ValueError, match="aligned"):
+        Segmentation(4, (2, 1, 2, 2))  # depth-1 leaf starting at 1/4
+    with pytest.raises(ValueError, match="depth"):
+        Segmentation(4, (0, 5))  # depth past in_bits
+    with pytest.raises(ValueError, match="at least one leaf"):
+        Segmentation(4, ())
+    with pytest.raises(ValueError, match="positive"):
+        Segmentation(0, (0,))
+
+
+def test_split_refines_one_leaf():
+    seg = Segmentation.uniform(6, 2)  # 4 leaves of width 16
+    s2 = seg.split(1)
+    assert s2.depths == (2, 3, 3, 2, 2)
+    assert np.array_equal(s2.leaf_starts(), [0, 16, 24, 32, 48])
+    with pytest.raises(ValueError, match="max depth"):
+        Segmentation(4, (0,)).split(0).split(0).split(0).split(0).split(0)
+
+
+def test_split_many_matches_sequential_splits():
+    seg = Segmentation.uniform(6, 2)
+    assert seg.split_many([0, 2]).depths == seg.split(2).split(0).depths
+    # duplicate indices collapse (a leaf splits once per call)
+    assert seg.split_many([3, 3]).depths == seg.split(3).depths
+
+
+def test_seg_table_assigns_cells_by_depth():
+    # depths (1, 2, 2): leaf 0 owns the left half of the 2^2 address space
+    seg = Segmentation(4, (1, 2, 2))
+    assert np.array_equal(seg.seg_table(), [0, 0, 1, 2])
+    assert seg.depth_groups() == {1: [0], 2: [1, 2]}
+
+
+def test_packed_table_pads_to_rom_rows():
+    seg = Segmentation(4, (1, 2, 2))  # 4 cells -> 2 rows of 3
+    packed = seg.packed_table()
+    assert packed.shape == (2, 3) and packed.dtype == np.int32
+    assert np.array_equal(packed.reshape(-1)[:4], seg.seg_table())
+    assert np.all(packed.reshape(-1)[4:] == 0)  # zero padding, never junk

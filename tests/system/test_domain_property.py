@@ -23,9 +23,10 @@ from repro.numerics import ops as nops
 from repro.numerics.guard import DomainViolation, GuardedNumerics
 from repro.numerics.ops import FusedInterpNumerics, InterpNumerics
 
-ACT_KINDS = ("gelu", "sigmoid", "silu", "softplus")
+ACT_KINDS = ("gelu", "sigmoid", "silu", "softplus", "tanh")
 PER_TABLE = {"gelu": nops.approx_gelu, "sigmoid": nops.approx_sigmoid,
-             "silu": nops.approx_silu, "softplus": nops.approx_softplus}
+             "silu": nops.approx_silu, "softplus": nops.approx_softplus,
+             "tanh": nops.approx_tanh}
 
 
 @pytest.fixture(scope="module")
@@ -69,9 +70,10 @@ def test_activation_out_of_window_clamps_to_tails(lib, kind):
                   ACT_HI, ACT_HI + 100.0], np.float32)
     y = _assert_paths_agree(lib, kind, x)
     assert np.all(np.isfinite(y))
-    top = 1.0 if kind == "sigmoid" else x[-1]
+    top = 1.0 if kind in ("sigmoid", "tanh") else x[-1]
+    bot = -1.0 if kind == "tanh" else 0.0
     assert y[-1] == np.float32(top)  # right tail: identity (or 1)
-    assert y[0] == np.float32(0.0)  # left tail: saturates to 0
+    assert y[0] == np.float32(bot)  # left tail: saturates to 0 (or -1)
     # saturation, not modular wrap: deep out-of-window equals the edge tail
     assert y[0] == np.asarray(PER_TABLE[kind](
         jnp.asarray([ACT_LO - 1e6], jnp.float32)), np.float32)[0]
