@@ -1,0 +1,128 @@
+"""Per-layer heterogeneous numerics benchmark (ISSUE 9): the NumericsPlan
+serving stack plus the budget-driven auto-assigner.
+
+Two tables, folded into ``BENCH_9.json`` by ``benchmarks.run`` (the CI
+plan-smoke job uploads it):
+
+  plan_bitwise    the degenerate-plan acceptance oracle: a fused serve
+                  under ``NumericsPlan.uniform("interp-fused", L)`` vs the
+                  homogeneous ``numerics="interp"`` fused engine — token
+                  streams must be *bitwise identical* (the run() assertion
+                  enforces it; a drift here means the plan machinery is
+                  not pure plumbing in the uniform case).
+  plan_auto       per arch: :func:`repro.plan.assign.auto_plan` under the
+                  whole-model output-error budget, verified end to end
+                  (measured prefill-logit error vs all-exact MUST fit the
+                  budget — asserted), plus a real fused serve under the
+                  assigned mixed plan with the engine's deterministic
+                  dispatch/transfer counters. The assigned plan MUST beat
+                  the all-exact plan on modeled decode tokens/sec —
+                  that gap is the subsystem's reason to exist.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.configs.base import get_smoke_config
+from repro.models import transformer as tf
+from repro.plan import NumericsPlan
+from repro.plan.assign import auto_plan
+
+ARCHS = ("yi_6b", "minicpm3_4b")
+BUDGET = 0.05
+SLOTS, CACHE_LEN, HORIZON = 2, 64, 8
+N_REQ, MAX_NEW = 3, 8
+SEED = 0
+
+# modeled per-dispatch/transfer costs — same constants as repro.dse.probe
+DISPATCH_COST_S = 1e-4
+TRANSFER_COST_S = 2e-5
+
+
+def _serve_once(cfg, params) -> tuple[dict, dict]:
+    from repro.serve.engine import Request, ServeEngine
+
+    eng = ServeEngine(cfg, params, slots=SLOTS, cache_len=CACHE_LEN,
+                      fused=True, horizon=HORIZON)
+    rng = np.random.default_rng(SEED)
+    for i in range(N_REQ):
+        prompt = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+        eng.submit(Request(i, prompt, max_new=MAX_NEW))
+    t0 = time.perf_counter()
+    done = eng.run()
+    wall = time.perf_counter() - t0
+    steps = max(eng.stats["decode_steps"], 1)
+    modeled_t = (eng.stats["dispatches"] * DISPATCH_COST_S
+                 + eng.stats["transfers"] * TRANSFER_COST_S)
+    return {r.rid: r.out for r in done}, {
+        "tokens": sum(len(out) for out in (r.out for r in done)),
+        "wall_s": round(wall, 4),
+        "engine_tokens_per_s": round(steps / max(modeled_t, 1e-12), 1),
+        "dispatches_per_token": round(eng.stats["dispatches"] / steps, 4),
+        "transfers_per_token": round(eng.stats["transfers"] / steps, 4),
+    }
+
+
+def _bitwise_rows() -> list[dict]:
+    cfg = get_smoke_config("yi_6b")
+    params = tf.init_params(jax.random.key(SEED), cfg)
+    plan_cfg = cfg.replace(
+        plan=NumericsPlan.uniform("interp-fused", cfg.n_layers))
+    interp_cfg = cfg.replace(numerics="interp")
+    got, plan_stats = _serve_once(plan_cfg, params)
+    want, ref_stats = _serve_once(interp_cfg, params)
+    assert got == want, ("uniform NumericsPlan drifted from the homogeneous "
+                         "fused interp engine — plan plumbing is not pure")
+    return [{
+        "arch": "yi_6b", "engine": name, "tokens": st["tokens"],
+        "engine_tokens_per_s": st["engine_tokens_per_s"],
+        "dispatches_per_token": st["dispatches_per_token"],
+        "bitwise_identical": True, "wall_s": st["wall_s"],
+    } for name, st in (("uniform-plan", plan_stats),
+                       ("homogeneous", ref_stats))]
+
+
+def _auto_rows() -> list[dict]:
+    rows = []
+    for arch in ARCHS:
+        cfg = get_smoke_config(arch)
+        params = tf.init_params(jax.random.key(SEED), cfg)
+        rep = auto_plan(cfg, error_budget=BUDGET, verify=True, params=params)
+        assert rep.measured_error is not None
+        assert rep.measured_error <= BUDGET, \
+            f"{arch}: measured error {rep.measured_error} > budget {BUDGET}"
+        assert rep.modeled_tokens_per_s > rep.exact_tokens_per_s, \
+            f"{arch}: assigned plan does not beat all-exact"
+        _, serve_stats = _serve_once(cfg.replace(plan=rep.plan), params)
+        interp_sites = sum(1 for _l, _s, a in rep.plan.assignments()
+                           if a.interp)
+        rows.append({
+            "arch": arch, "budget": BUDGET,
+            "predicted_error": round(rep.predicted_error, 6),
+            "measured_error": round(rep.measured_error, 6),
+            "modeled_tokens_per_s": round(rep.modeled_tokens_per_s, 1),
+            "exact_tokens_per_s": round(rep.exact_tokens_per_s, 1),
+            "speedup": round(rep.speedup, 4),
+            "slots": ",".join(rep.plan.slot_keys()) or "-",
+            "interp_sites": interp_sites,
+            "flipped_to_exact": len(rep.flipped),
+            **serve_stats,
+        })
+    return rows
+
+
+def run():
+    emit("plan_bitwise", _bitwise_rows())
+    emit("plan_auto", _auto_rows(),
+         cols=["arch", "budget", "predicted_error", "measured_error",
+               "modeled_tokens_per_s", "exact_tokens_per_s", "speedup",
+               "slots", "interp_sites", "flipped_to_exact", "tokens",
+               "dispatches_per_token", "wall_s"])
+
+
+if __name__ == "__main__":
+    run()

@@ -143,13 +143,15 @@ class InterpLibrary:
     hook and performs no validation (leaves may be tracers).
     """
 
-    __slots__ = ("coeffs", "metas", "_index", "_meta_rows", "_sealed_sha")
+    __slots__ = ("coeffs", "metas", "_index", "_meta_rows", "_walk_rows",
+                 "_sealed_sha")
 
     def __init__(self, coeffs, metas: tuple[FuncMeta, ...]):
         self.coeffs = coeffs  # (F, R_max, 3) int32 — the only dynamic leaf
         self.metas = tuple(metas)
         self._index = {m.kind: i for i, m in enumerate(self.metas)}
         self._meta_rows = None  # lazy (F, 5) device array
+        self._walk_rows = None  # lazy ((F, 5), (L, 5)) walk/datapath arrays
         self._sealed_sha = None  # integrity baseline (seal/verify_resident)
 
     # -- construction ------------------------------------------------------
@@ -239,6 +241,34 @@ class InterpLibrary:
             self._meta_rows = rows
         return self._meta_rows
 
+    def walk_rows(self):
+        """Operands of the generalized multi-function ROM walk: a ``(F, 5)``
+        int32 walk table of ``(in_bits, depth, seg_flag, leaf_base,
+        n_leaves)`` rows — depth is R for a uniform slot, the segment-index
+        depth D for a segmented one — plus an ``(L, 5)`` datapath table with
+        one ``(eval_bits, k, sq_trunc, lin_trunc, degree)`` row per uniform
+        function and one per segmented leaf (``leaf_base`` indexes it)."""
+        import jax
+        import jax.numpy as jnp
+
+        if self._walk_rows is None:
+            walk, dp = [], []
+            for m in self.metas:
+                base = len(dp)
+                if m.seg_depth:
+                    walk.append((m.in_bits, m.seg_depth, 1, base,
+                                 len(m.seg_meta)))
+                    dp.extend(m.seg_meta)
+                else:
+                    walk.append((m.in_bits, m.lookup_bits, 0, base, 1))
+                    dp.append(m.datapath_row())
+            rows = (jnp.asarray(np.array(walk, np.int32)),
+                    jnp.asarray(np.array(dp, np.int32)))
+            if any(isinstance(r, jax.core.Tracer) for r in rows):
+                return rows  # see meta_rows: never cache a traced constant
+            self._walk_rows = rows
+        return self._walk_rows
+
     # -- integrity ---------------------------------------------------------
     def rom_sha(self) -> str:
         """Checksum of the ROM bits actually resident right now (downloads
@@ -305,17 +335,16 @@ class InterpLibrary:
 
         fid = self.func_id(kind)
         m = self.metas[fid]
-        if m.seg_depth:
-            # non-uniform slot: route through the segment-index datapath
-            # (same code the fused kernels inline; jnp gather oracle here)
-            from repro.kernels.interp.ref import interp_eval_seg_ref
-
-            rows = jax.lax.index_in_dim(self.coeffs, fid, 0, keepdims=False)
-            return interp_eval_seg_ref(codes, rows, seg=m.seg_spec())
         if use_kernel or (use_kernel is None and _on_tpu()):
             return self.eval_fused(codes, fid, use_kernel=True,
                                    interpret=interpret)
         rows = jax.lax.index_in_dim(self.coeffs, fid, 0, keepdims=False)
+        if m.seg_depth:
+            # jnp path of a non-uniform slot: the segment-index gather
+            # oracle (bit-identical to the in-kernel walk)
+            from repro.kernels.interp.ref import interp_eval_seg_ref
+
+            return interp_eval_seg_ref(codes, rows, seg=m.seg_spec())
         return interp_eval_ref(
             codes, rows[: 1 << m.lookup_bits], eval_bits=m.eval_bits,
             k=m.k, sq_trunc=m.sq_trunc, lin_trunc=m.lin_trunc,
@@ -325,16 +354,20 @@ class InterpLibrary:
                    interpret: bool | None = None):
         """Fused multi-function evaluation: element i reads table fids[i].
 
-        Uniform slots only — a segmented function's datapath is per-leaf,
-        not per-function, so it cannot ride the (F, 5) meta operand; use
-        ``eval_int`` (or the fused softmax/rmsnorm/flash kernels, which
-        inline the segment gather) for those kinds.
+        Serves any mix of uniform (v1) and segmented (v2) slots. An
+        all-uniform library keeps the original (F, 5)-meta fast path —
+        byte-stable programs for v1 artifacts — while the presence of any
+        segmented slot switches the call onto the generalized ROM walk
+        (``library_walk``): per-function walk rows plus per-leaf datapath
+        rows as kernel operands, same one-hot gathers and fixed-point
+        tail, bit-identical per slot to the specialized paths.
         """
-        seg = self.segmented_kinds
-        if seg:
-            raise ValueError(
-                f"eval_fused cannot address segmented slots {seg}; "
-                f"evaluate those kinds through eval_int")
+        if any(m.seg_depth for m in self.metas):
+            from repro.kernels.interp.ops import library_walk
+
+            walk, dp = self.walk_rows()
+            return library_walk(codes, fids, self.coeffs, walk, dp,
+                                use_kernel=use_kernel, interpret=interpret)
         from repro.kernels.interp.ops import library_eval
 
         return library_eval(codes, fids, self.coeffs, self.meta_rows(),

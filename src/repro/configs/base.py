@@ -9,6 +9,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+from repro.plan.schema import NumericsPlan
+
 
 @dataclasses.dataclass(frozen=True)
 class MoEConfig:
@@ -80,6 +82,10 @@ class ModelConfig:
     max_pos: int = 32768  # learned-position table height (learned_pos only)
     tie_embeddings: bool = False
     numerics: str = "exact"  # exact | interp  (the paper's technique switch)
+    # per-layer heterogeneous numerics (DESIGN.md §16). When set, the plan
+    # overrides ``numerics``: each layer x op site carries its own backend
+    # and library slot. Frozen/hashable so configs still key jit caches.
+    plan: Optional[NumericsPlan] = None
     # runtime policy
     param_dtype: str = "bfloat16"
     remat: str = "block"  # none | block | full

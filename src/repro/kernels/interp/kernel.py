@@ -263,6 +263,106 @@ def library_eval_2d(codes: jax.Array, fids: jax.Array, coeffs: jax.Array,
     )(codes, fids, flat, meta)
 
 
+def _library_walk_kernel(codes_ref, fids_ref, rom_ref, walk_ref, dp_ref,
+                         out_ref, *, n_funcs: int, r_max: int, n_dp: int):
+    """Generalized multi-function ROM walk: uniform (v1) and segmented
+    (v2) slots in one program.
+
+    Per function, ``walk_ref`` carries ``(in_bits, depth, seg_flag,
+    leaf_base, n_leaves)``: depth is R for a uniform slot and the
+    segment-index depth D for a segmented one, so ``cell = code >>
+    (in_bits - depth)`` is the region index (uniform) or the prefix-tree
+    cell (segmented). A segmented element resolves the cell to a leaf id
+    through the packed segment-index table — whose entries are row-major
+    in the flattened ROM, so entry index ``(fid*r_max + n_leaves)*3 +
+    cell`` needs no integer division by the 3-per-row packing — while a
+    uniform element's leaf IS its cell. The coefficient row is then
+    ``fid*r_max + leaf`` for both layouts, and the per-element datapath
+    constants gather from ``dp_ref`` at ``leaf_base (+ leaf)``: one row
+    per uniform function, one per segmented leaf. Every gather is a
+    one-hot MXU contraction and the fixed-point tail is the same
+    vector-shift datapath as ``_library_kernel``/``_lut_seg``, so each
+    slot evaluates bit-identically to its specialized path.
+
+    Unlike ``_lut_seg`` (whose leaf meta must fold into the jaxpr as
+    scalar literals), the walk and datapath tables here are real kernel
+    operands — the per-function layout varies, so it must be data.
+    """
+    codes = codes_ref[...]  # (BLOCK_ROWS, LANES) int32
+    fids = fids_ref[...]
+    rom = rom_ref[...]  # (n_funcs * r_max, 3) int32
+    n = codes.size
+    shape = codes.shape
+    one = jnp.int32(1)
+    flat_f = fids.reshape(-1)
+    iota_f = jax.lax.broadcasted_iota(jnp.int32, (n, n_funcs), 1)
+    onehot_f = (flat_f[:, None] == iota_f).astype(jnp.int32)
+    w = jax.lax.dot_general(
+        onehot_f, walk_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    in_b, depth, segf, lbase, nlv = (w[:, i].reshape(shape) for i in range(5))
+    cell = jax.lax.shift_right_logical(codes, in_b - depth)
+    # segment-index read (garbage for uniform elements, masked below)
+    eidx = ((fids * r_max + nlv) * 3 + cell).reshape(-1)
+    iota_e = jax.lax.broadcasted_iota(jnp.int32, (n, n_funcs * r_max * 3), 1)
+    onehot_e = (eidx[:, None] == iota_e).astype(jnp.int32)
+    leaf_seg = jax.lax.dot_general(
+        onehot_e, rom.reshape(-1, 1), (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)[:, 0].reshape(shape)
+    leaf = jnp.where(segf == 1, leaf_seg, cell)
+    # coefficient read: row = fid * r_max + leaf for both layouts
+    row = (fids * r_max + leaf).reshape(-1)
+    iota_r = jax.lax.broadcasted_iota(jnp.int32, (n, n_funcs * r_max), 1)
+    onehot_r = (row[:, None] == iota_r).astype(jnp.int32)
+    sel = jax.lax.dot_general(
+        onehot_r, rom, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32).reshape(shape + (3,))
+    # per-element datapath constants
+    drow = (lbase + jnp.where(segf == 1, leaf, 0)).reshape(-1)
+    iota_d = jax.lax.broadcasted_iota(jnp.int32, (n, n_dp), 1)
+    onehot_d = (drow[:, None] == iota_d).astype(jnp.int32)
+    dp = jax.lax.dot_general(
+        onehot_d, dp_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+    eb, k, sq, lin, deg = (dp[:, i].reshape(shape) for i in range(5))
+    x = jnp.bitwise_and(codes, jax.lax.shift_left(one, eb) - 1)
+    xs = jax.lax.shift_left(jax.lax.shift_right_logical(x, sq), sq)
+    xl = jax.lax.shift_left(jax.lax.shift_right_logical(x, lin), lin)
+    xs = jnp.where(deg == 2, xs, 0)
+    acc = sel[..., 0] * xs * xs + sel[..., 1] * xl + sel[..., 2]
+    out_ref[...] = jax.lax.shift_right_arithmetic(acc, k)
+
+
+def library_walk_2d(codes: jax.Array, fids: jax.Array, coeffs: jax.Array,
+                    walk: jax.Array, dp: jax.Array, *,
+                    interpret: bool = True) -> jax.Array:
+    """codes/fids: (rows, 128) int32, rows % 8 == 0; coeffs: (F, R_max, 3);
+    walk: (F, 5) int32 rows of (in_bits, depth, seg_flag, leaf_base,
+    n_leaves); dp: (L, 5) int32 per-leaf datapath rows."""
+    rows, lanes = codes.shape
+    assert lanes == LANES and rows % BLOCK_ROWS == 0, codes.shape
+    assert fids.shape == codes.shape, (fids.shape, codes.shape)
+    n_funcs, r_max, _ = coeffs.shape
+    n_dp = dp.shape[0]
+    flat = coeffs.reshape(n_funcs * r_max, 3)
+    kernel = functools.partial(_library_walk_kernel, n_funcs=n_funcs,
+                               r_max=r_max, n_dp=n_dp)
+    return pl.pallas_call(
+        kernel,
+        grid=(rows // BLOCK_ROWS,),
+        in_specs=[
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((n_funcs * r_max, 3), lambda i: (0, 0)),
+            pl.BlockSpec((n_funcs, 5), lambda i: (0, 0)),
+            pl.BlockSpec((n_dp, 5), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANES), jnp.int32),
+        interpret=interpret,
+    )(codes, fids, flat, walk, dp)
+
+
 def interp_eval_2d(codes: jax.Array, coeffs: jax.Array, *, eval_bits: int,
                    k: int, sq_trunc: int, lin_trunc: int, degree: int,
                    interpret: bool = True) -> jax.Array:

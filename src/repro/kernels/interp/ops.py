@@ -9,9 +9,9 @@ import jax.numpy as jnp
 
 from repro.core.table import TableDesign
 from repro.kernels.interp.kernel import (BLOCK_ROWS, LANES, interp_eval_2d,
-                                         library_eval_2d)
+                                         library_eval_2d, library_walk_2d)
 from repro.kernels.interp.ref import (interp_eval_ref, interp_eval_wide,
-                                      library_eval_ref)
+                                      library_eval_ref, library_walk_ref)
 
 
 def _on_tpu() -> bool:
@@ -88,3 +88,36 @@ def library_eval(codes: jax.Array, fids: jax.Array, coeffs: jax.Array,
         return library_eval_ref(codes, fids, coeffs, meta)
     interpret = (not _on_tpu()) if interpret is None else interpret
     return _library_eval_padded(codes, fids, coeffs, meta, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def _library_walk_padded(codes, fids, coeffs, walk, dp, *, interpret):
+    n = codes.size
+    tile = BLOCK_ROWS * LANES
+    pad = (-n) % tile
+    flat = jnp.pad(codes.reshape(-1), (0, pad)).reshape(-1, LANES)
+    flat_f = jnp.pad(fids.reshape(-1), (0, pad)).reshape(-1, LANES)
+    out = library_walk_2d(flat, flat_f, coeffs, walk, dp, interpret=interpret)
+    return out.reshape(-1)[:n].reshape(codes.shape)
+
+
+def library_walk(codes: jax.Array, fids: jax.Array, coeffs: jax.Array,
+                 walk: jax.Array, dp: jax.Array, use_kernel: bool = True,
+                 interpret: bool | None = None) -> jax.Array:
+    """Generalized fused evaluation over a mixed uniform/segmented library:
+    element i walks function ``fids[i]``'s slot whatever its layout. This
+    is ``library_eval`` minus its all-uniform restriction — the per-slot
+    address decode (region index vs segment-index table) rides per-function
+    ``walk`` rows and per-leaf ``dp`` datapath rows instead of one (F, 5)
+    meta operand.
+
+    codes/fids: int32, any (matching) shape; coeffs: (F, R_max, 3) int32
+    padded ROM; walk: (F, 5) int32; dp: (L, 5) int32.
+    """
+    codes = codes.astype(jnp.int32)
+    fids = jnp.broadcast_to(jnp.asarray(fids, jnp.int32), codes.shape)
+    if not use_kernel:
+        return library_walk_ref(codes, fids, coeffs, walk, dp)
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    return _library_walk_padded(codes, fids, coeffs, walk, dp,
+                                interpret=interpret)

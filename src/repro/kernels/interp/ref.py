@@ -26,6 +26,43 @@ def library_eval_ref(codes: jax.Array, fids: jax.Array, coeffs: jax.Array,
     return jax.lax.shift_right_arithmetic(acc, k)
 
 
+def library_walk_ref(codes: jax.Array, fids: jax.Array, coeffs: jax.Array,
+                     walk: jax.Array, dp: jax.Array) -> jax.Array:
+    """Gather-semantics oracle for the generalized multi-function ROM walk
+    (uniform v1 + segmented v2 slots in one call).
+
+    coeffs: (F, R_max, 3) int32; walk: (F, 5) int32 rows of (in_bits,
+    depth, seg_flag, leaf_base, n_leaves); dp: (L, 5) int32 per-leaf
+    (eval_bits, k, sq_trunc, lin_trunc, degree) rows — one per uniform
+    function, one per segmented leaf. Bit-identical per slot to
+    ``library_eval_ref`` (uniform) and ``interp_eval_seg_ref``
+    (segmented).
+    """
+    codes = codes.astype(jnp.int32)
+    f, r_max, _ = coeffs.shape
+    rom = coeffs.reshape(f * r_max, 3)
+    w = walk[fids]  # (..., 5)
+    in_b, depth, segf, lbase, nlv = (w[..., i] for i in range(5))
+    cell = jax.lax.shift_right_logical(codes, in_b - depth)
+    # the packed segment-index table's entries are row-major in the
+    # flattened ROM: entry index = (fid*r_max + n_leaves)*3 + cell.
+    # Uniform elements read garbage here (clamped in bounds) and mask it.
+    entries = rom.reshape(-1)
+    eidx = (fids * r_max + nlv) * 3 + cell
+    leaf_seg = entries[jnp.clip(eidx, 0, entries.shape[0] - 1)]
+    leaf = jnp.where(segf == 1, leaf_seg, cell)
+    sel = rom[fids * r_max + leaf]  # (..., 3)
+    m = dp[lbase + jnp.where(segf == 1, leaf, 0)]  # (..., 5)
+    eb, k, sq, lin, deg = (m[..., i] for i in range(5))
+    one = jnp.int32(1)
+    x = jnp.bitwise_and(codes, jax.lax.shift_left(one, eb) - 1)
+    xs = jax.lax.shift_left(jax.lax.shift_right_logical(x, sq), sq)
+    xl = jax.lax.shift_left(jax.lax.shift_right_logical(x, lin), lin)
+    xs = jnp.where(deg == 2, xs, 0)
+    acc = sel[..., 0] * xs * xs + sel[..., 1] * xl + sel[..., 2]
+    return jax.lax.shift_right_arithmetic(acc, k)
+
+
 def interp_eval_seg_ref(codes: jax.Array, rows: jax.Array, *,
                         seg: tuple) -> jax.Array:
     """Gather-semantics oracle for the non-uniform (ROM v2) slot datapath.

@@ -10,9 +10,18 @@
 trial; ``resume`` is ``run`` restricted to an existing study dir (space,
 probe mode and seed come from its ``study.json``) — with ``--assert-no-exec``
 it exits nonzero if any trial had to be executed, which is how CI proves
-the resume path replays instead of recomputing. ``report`` prints the
-frontier; ``check`` compares the study's frontier against a committed
-artifact and exits 1 on regression.
+the resume path replays instead of recomputing. ``--write-frontier`` emits
+``frontier.json`` even when the space is only partially journaled (the
+committed prefix studies rely on this). ``report`` prints the frontier;
+``check`` compares the study's frontier against a committed artifact and
+exits 1 on regression.
+
+``plan`` runs the budget-driven per-layer numerics assigner (DESIGN.md
+§16) against the committed frontiers and writes the resulting
+:class:`repro.plan.NumericsPlan` snapshot:
+
+    PYTHONPATH=src python -m repro.launch.dse plan --arch yi_6b --smoke \\
+        --budget 0.05 --save-plan artifacts/plans/yi_6b.json
 """
 from __future__ import annotations
 
@@ -66,7 +75,9 @@ def cmd_run(args, resume_only: bool = False) -> int:
         return 2
     with Study(root, space, measure=getattr(args, "measure", None),
                seed=getattr(args, "seed", None)) as study:
-        study.run(max_trials=args.max_trials, compact=args.compact)
+        records = study.run(max_trials=args.max_trials, compact=args.compact)
+        if args.write_frontier:
+            print(f"frontier -> {study.write_frontier(records)}")
         row = _print_summary(study)
         if args.emit_bench:
             _emit_bench({**row, "seed": study.seed})
@@ -117,6 +128,37 @@ def cmd_check(args) -> int:
     return 0
 
 
+def cmd_plan(args) -> int:
+    from repro.configs.base import get_config, get_smoke_config
+    from repro.plan import save_plan
+    from repro.plan.assign import auto_plan
+
+    cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
+    report = auto_plan(cfg, error_budget=args.budget, target=args.target,
+                       verify=not args.no_verify, seed=args.seed)
+    plan = report.plan
+    print(f"plan[{report.arch}]: budget {report.error_budget:.3g} -> "
+          f"predicted {report.predicted_error:.3g}"
+          + (f", measured {report.measured_error:.3g}"
+             if report.measured_error is not None else "")
+          + f"; slots {list(plan.slot_keys())}"
+          + (f", downgraded {list(report.flipped)}" if report.flipped else ""))
+    print(f"  modeled decode: {report.modeled_tokens_per_s:.1f} tok/s vs "
+          f"{report.exact_tokens_per_s:.1f} all-exact "
+          f"({report.speedup:.3f}x)")
+    if args.save_plan:
+        save_plan(args.save_plan, plan, seed=args.seed,
+                  meta_extra={"arch": args.arch, "smoke": args.smoke,
+                              "report": report.to_dict()})
+        print(f"saved plan -> {args.save_plan}")
+    if (report.measured_error is not None
+            and report.measured_error > args.budget):
+        print(f"PLAN ERROR BUDGET VIOLATED: {report.measured_error:.3g} > "
+              f"{args.budget:.3g}", file=sys.stderr)
+        return 1
+    return 0
+
+
 def main(argv: list[str] | None = None) -> int:
     ap = argparse.ArgumentParser(prog="repro.launch.dse")
     sub = ap.add_subparsers(dest="cmd", required=True)
@@ -129,6 +171,9 @@ def main(argv: list[str] | None = None) -> int:
         p.add_argument("--emit-bench", action="store_true",
                        help=f"fold a summary row into "
                             f"artifacts/bench/{BENCH_SNAPSHOT}")
+        p.add_argument("--write-frontier", action="store_true",
+                       help="emit frontier.json even if the space is only "
+                            "partially journaled")
         if with_space:
             p.add_argument("--preset", choices=sorted(PRESETS),
                            default="smoke")
@@ -155,6 +200,23 @@ def main(argv: list[str] | None = None) -> int:
     p_chk.add_argument("--against", required=True,
                        help="committed frontier artifact path")
 
+    p_pln = sub.add_parser("plan", help="budget-driven per-layer numerics "
+                                        "assignment (DESIGN.md §16)")
+    from repro.configs.base import ARCH_IDS
+    p_pln.add_argument("--arch", choices=ARCH_IDS, required=True)
+    p_pln.add_argument("--smoke", action="store_true")
+    p_pln.add_argument("--budget", type=float, default=0.05,
+                       help="whole-model relative output-error bound")
+    p_pln.add_argument("--target", choices=("asic", "fpga-lut", "pallas-tpu"),
+                       default="asic",
+                       help="frontier cost group the slots are picked from")
+    p_pln.add_argument("--save-plan", default=None,
+                       help="write the NumericsPlan snapshot here")
+    p_pln.add_argument("--no-verify", action="store_true",
+                       help="skip the measured end-to-end error check "
+                            "(predicted budget only; no table compilation)")
+    p_pln.add_argument("--seed", type=int, default=0)
+
     args = ap.parse_args(argv)
     if args.cmd == "run":
         return cmd_run(args)
@@ -162,6 +224,8 @@ def main(argv: list[str] | None = None) -> int:
         return cmd_run(args, resume_only=True)
     if args.cmd == "report":
         return cmd_report(args)
+    if args.cmd == "plan":
+        return cmd_plan(args)
     return cmd_check(args)
 
 

@@ -7,6 +7,13 @@ With ``--numerics interp`` the engine serves from a compiled interpolation
 library; ``--library PATH`` loads a saved artifact (no exploration at all),
 ``--save-library PATH`` persists the compiled artifact for the next launch.
 
+Per-layer heterogeneous numerics (DESIGN.md §16): ``--plan PATH`` serves
+under a saved :class:`repro.plan.NumericsPlan` (the schema-versioned
+snapshot envelope ``repro.launch.dse plan --save-plan`` emits — one
+backend + library slot per layer x op site); ``--save-plan PATH`` writes
+the plan the engine actually served under (useful with ``--numerics`` to
+snapshot a uniform plan for later editing).
+
 Robustness knobs (DESIGN.md §14): ``--deadline-ms N`` gives every request a
 TTL (expired work is retired with a structured ``deadline_exceeded`` error),
 ``--max-queue N`` bounds the admission queue (overflow submissions raise
@@ -45,6 +52,12 @@ def main():
                     help="serve from this saved InterpLibrary (json/npz base)")
     ap.add_argument("--save-library", default=None,
                     help="persist the engine's compiled library here")
+    ap.add_argument("--plan", default=None,
+                    help="serve under this saved NumericsPlan snapshot "
+                         "(per-layer x per-op-site numerics)")
+    ap.add_argument("--save-plan", default=None,
+                    help="write the served plan (from --plan, or a uniform "
+                         "plan matching --numerics) as a snapshot")
     ap.add_argument("--serial", action="store_true",
                     help="per-op dispatch path (the pre-fused oracle) "
                          "instead of the fused single-dispatch tick")
@@ -70,11 +83,29 @@ def main():
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     if args.numerics:
         cfg = cfg.replace(numerics=args.numerics)
+    if args.plan:
+        from repro.plan import load_plan
+
+        plan = load_plan(args.plan)
+        if plan.n_layers != cfg.n_layers:
+            ap.error(f"--plan has {plan.n_layers} layers but {args.arch} "
+                     f"(smoke={args.smoke}) has {cfg.n_layers}")
+        cfg = cfg.replace(plan=plan)
+        if args.library:
+            ap.error("--plan engines compile one library per plan slot; "
+                     "--library cannot override them")
     if args.library or args.save_library:
         if args.numerics == "exact":
             ap.error("--library/--save-library require interp numerics")
-        if cfg.numerics != "interp":
+        if cfg.plan is None and cfg.numerics != "interp":
             cfg = cfg.replace(numerics="interp")  # the flags imply it
+    if args.save_plan:
+        from repro.plan import plan_for, save_plan
+
+        served = cfg.plan if cfg.plan is not None else plan_for(cfg)
+        save_plan(args.save_plan, served, seed=args.seed,
+                  meta_extra={"arch": args.arch, "smoke": args.smoke})
+        print(f"saved plan -> {args.save_plan}")
     library = InterpLibrary.load(args.library) if args.library else None
     params = tf.init_params(jax.random.key(args.seed), cfg)
     kw = dict(slots=args.slots, cache_len=args.cache_len, library=library,
@@ -88,7 +119,12 @@ def main():
     else:
         eng = ServeEngine(cfg, params, journal=args.journal, **kw)
     if args.save_library and eng.library is not None:
-        print(f"saved library -> {eng.library.save(args.save_library)}")
+        if isinstance(eng.library, dict):  # plan engine: one artifact/slot
+            for key, lib in sorted(eng.library.items()):
+                print(f"saved library [{key}] -> "
+                      f"{lib.save(f'{args.save_library}.{key}')}")
+        else:
+            print(f"saved library -> {eng.library.save(args.save_library)}")
     if not args.resume:
         rng = np.random.default_rng(args.seed)
         for i in range(args.requests):

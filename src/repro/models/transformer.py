@@ -175,36 +175,81 @@ def _maybe_remat(fn, cfg):
 
 def apply_segment(p_seg: Params, seg: Segment, h, positions, cfg, numerics,
                   mode: str = "train", caches=None, cache_len: int = 0,
-                  cross_kv=None, pos=None):
+                  cross_kv=None, pos=None, layer_offset: int = 0):
     """Scan a segment. caches: pytree stacked over `repeat` (or None).
+
+    ``numerics`` is either one backend for the whole segment (the
+    homogeneous path) or a plan-resolved object exposing ``for_layer(i)``
+    (``repro.plan.numerics.PlanNumerics``); ``layer_offset`` is the global
+    index of this segment's first layer. Heterogeneous plans split the scan
+    into runs of consecutive layers with identical assignments — a uniform
+    plan collapses to a single run over the unsliced stack, i.e. exactly
+    the homogeneous program.
 
     Returns (h, stacked caches or None, aux sum).
     """
+    npat = len(seg.pattern)
 
-    def body(carry, xs):
-        h_in = carry
-        p_layer, cache_layer = xs
-        aux_sum = jnp.zeros((), jnp.float32)
-        new_caches = {}
-        for i, kind in enumerate(seg.pattern):
-            c_i = cache_layer[str(i)] if cache_layer is not None else None
-            h_out, nc, aux = apply_block(
-                p_layer[str(i)], kind, h_in, positions, cfg, numerics,
-                mode=mode, cache=c_i, cache_len=cache_len,
-                cross_kv=cross_kv, pos=pos)
-            h_in = h_out
-            new_caches[str(i)] = nc
-            aux_sum = aux_sum + aux
-        return h_in, (new_caches, aux_sum)
+    def make_body(layer_nums):
+        def body(carry, xs):
+            h_in = carry
+            p_layer, cache_layer = xs
+            aux_sum = jnp.zeros((), jnp.float32)
+            new_caches = {}
+            for i, kind in enumerate(seg.pattern):
+                c_i = cache_layer[str(i)] if cache_layer is not None else None
+                h_out, nc, aux = apply_block(
+                    p_layer[str(i)], kind, h_in, positions, cfg,
+                    layer_nums[i], mode=mode, cache=c_i, cache_len=cache_len,
+                    cross_kv=cross_kv, pos=pos)
+                h_in = h_out
+                new_caches[str(i)] = nc
+                aux_sum = aux_sum + aux
+            return h_in, (new_caches, aux_sum)
+        return body
+
+    plan_aware = hasattr(numerics, "for_layer")
+
+    def nums_at(r: int):
+        if not plan_aware:
+            return (numerics,) * npat
+        return tuple(numerics.for_layer(layer_offset + r * npat + j)
+                     for j in range(npat))
 
     if seg.repeat == 1:
-        h, (ncache, aux) = body(h, (p_seg, caches))
+        h, (ncache, aux) = make_body(nums_at(0))(h, (p_seg, caches))
         return h, ncache, aux
 
-    body_fn = _maybe_remat(body, cfg) if mode == "train" else body
-    xs = (p_seg, caches)
-    h, (ncaches, auxs) = jax.lax.scan(body_fn, h, xs)
-    return h, ncaches, auxs.sum()
+    # runs of consecutive scan steps whose per-position numerics agree
+    # (plan backends are interned, so equal assignments compare identical)
+    groups: list[list] = []  # [start, length, layer_nums]
+    for r in range(seg.repeat):
+        nt = nums_at(r)
+        if groups and groups[-1][2] == nt:
+            groups[-1][1] += 1
+        else:
+            groups.append([r, 1, nt])
+
+    if len(groups) == 1:
+        body_fn = (_maybe_remat(make_body(groups[0][2]), cfg)
+                   if mode == "train" else make_body(groups[0][2]))
+        h, (ncaches, auxs) = jax.lax.scan(body_fn, h, (p_seg, caches))
+        return h, ncaches, auxs.sum()
+
+    aux_total = jnp.zeros((), jnp.float32)
+    nc_parts = []
+    for start, length, nt in groups:
+        def sl(x, start=start, length=length):
+            return jax.lax.slice_in_dim(x, start, start + length, axis=0)
+        p_sl = jax.tree.map(sl, p_seg)
+        c_sl = jax.tree.map(sl, caches) if caches is not None else None
+        body_fn = (_maybe_remat(make_body(nt), cfg) if mode == "train"
+                   else make_body(nt))
+        h, (nc, auxs) = jax.lax.scan(body_fn, h, (p_sl, c_sl))
+        nc_parts.append(nc)
+        aux_total = aux_total + auxs.sum()
+    ncaches = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *nc_parts)
+    return h, ncaches, aux_total
 
 
 # ---------------------------------------------------------------------------
@@ -308,14 +353,17 @@ def backbone(p: Params, h, positions, cfg, numerics, mode="train",
     """Run all segments. Returns (h, caches-per-segment, aux)."""
     aux = jnp.zeros((), jnp.float32)
     new_caches = {}
+    offset = 0
     for i, seg in enumerate(layer_plan(cfg)):
         name = f"seg{i}"
         c = caches[name] if caches is not None else None
         h, nc, a = apply_segment(p["segments"][name], seg, h, positions, cfg,
                                  numerics, mode=mode, caches=c,
-                                 cache_len=cache_len, cross_kv=cross_kv, pos=pos)
+                                 cache_len=cache_len, cross_kv=cross_kv,
+                                 pos=pos, layer_offset=offset)
         new_caches[name] = nc
         aux = aux + a
+        offset += seg.repeat * len(seg.pattern)
     h = apply_norm(p["final_norm"], h, cfg, numerics)
     return h, new_caches, aux
 

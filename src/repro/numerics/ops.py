@@ -400,7 +400,17 @@ def get_numerics(cfg_or_name="exact", library=None, fused: bool = False):
     kernel; it requires a bound library. ``"interp-guarded"`` is the
     degraded-mode backend (DESIGN.md §14): the same per-table interp
     datapath behind the :class:`repro.numerics.guard.GuardedNumerics`
-    domain clamp."""
+    domain clamp.
+
+    A config carrying a :class:`repro.plan.NumericsPlan` resolves to a
+    :class:`repro.plan.numerics.PlanNumerics` instead — per-layer x per-site
+    backends; ``fused`` is then ignored (each site assignment names its own
+    lowering) and ``library`` may be a dict keyed by plan slot."""
+    plan = getattr(cfg_or_name, "plan", None)
+    if plan is not None:
+        from repro.plan.numerics import plan_numerics
+
+        return plan_numerics(plan, libraries=library)
     name = getattr(cfg_or_name, "numerics", cfg_or_name)
     if name == "exact":
         return ExactNumerics()

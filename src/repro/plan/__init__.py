@@ -1,0 +1,30 @@
+"""Per-layer heterogeneous numerics: plan schema, resolution, auto-assign.
+
+``repro.plan.schema`` is dependency-light (imported by ``configs.base``);
+``repro.plan.numerics`` resolves a plan into backend objects; the
+budget-driven auto-assigner lives in ``repro.plan.assign`` and is imported
+lazily (it pulls in the DSE stack).
+"""
+from repro.plan.schema import (PLAN_BACKENDS, PLAN_SCHEMA, SITE_KINDS, SITES,
+                               LayerAssign, NumericsPlan, SiteAssign,
+                               SlotSpec, load_plan, plan_for, save_plan)
+
+__all__ = [
+    "PLAN_BACKENDS", "PLAN_SCHEMA", "SITE_KINDS", "SITES", "LayerAssign",
+    "NumericsPlan", "SiteAssign", "SlotSpec", "load_plan", "plan_for",
+    "save_plan", "auto_plan", "plan_numerics", "compile_plan_libraries",
+    "PlanNumerics", "SiteNumerics",
+]
+
+
+def __getattr__(name):
+    if name in ("plan_numerics", "compile_plan_libraries", "PlanNumerics",
+                "SiteNumerics"):
+        from repro.plan import numerics as _n
+
+        return getattr(_n, name)
+    if name in ("auto_plan", "PlanReport"):
+        from repro.plan import assign as _a
+
+        return getattr(_a, name)
+    raise AttributeError(name)

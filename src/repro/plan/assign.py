@@ -1,0 +1,359 @@
+"""Budget-driven auto-assignment of per-layer numerics (DESIGN.md §16).
+
+:func:`auto_plan` searches the per-layer (R, degree, segmentation) space
+for a :class:`NumericsPlan` that maximizes *modeled* decode tokens/sec
+subject to a whole-model output-error budget:
+
+  1. **Candidate slots** are seeded from committed DSE frontier artifacts
+     (``artifacts/dse/FRONTIER_*.json``): for each op site, the slot whose
+     tables minimize the site's summed frontier delay across the site's
+     kinds (``SITE_KINDS``) wins; sites with no frontier coverage fall
+     back to the Explorer's per-kind defaults.
+  2. **Error composition** is additive over layers and sites: each interp
+     site contributes a certified relative-error term derived from its
+     kinds' spec widths (the :func:`repro.numerics.ops.softmax_ulp_bound`
+     construction generalized per site), weighted by layer sensitivity
+     (edge layers 2x — the embedding-adjacent and logits-adjacent blocks
+     amplify numerics error the most).
+  3. **Greedy budget descent**: start all-interp (max throughput), flip
+     the (layer, site) with the largest weighted error to exact until the
+     predicted whole-model error fits the budget. Deterministic: ties
+     break on (layer index, site order).
+  4. **End-to-end verification** (``verify=True``): prefill logits under
+     the plan vs. all-exact on deterministic tokens; while the *measured*
+     relative error exceeds the budget, keep flipping sites in the same
+     greedy order and re-measure. The returned plan's ``measured_error``
+     is therefore guaranteed ``<= error_budget`` (worst case the plan
+     degenerates to all-exact, error 0).
+
+Candidate slot libraries compile through one Explorer session with the
+envelope probes batched up front (``prime_envelopes`` — the fleet engine
+answers every (spec, R) in one stacked program).
+
+The throughput model extends the DSE probe's dispatch/transfer cost model
+(:mod:`repro.dse.probe`) below the tick: a fused tick costs
+``(DISPATCH_COST_S + TRANSFER_COST_S) / horizon`` per decoded token, and
+each layer's op sites add a per-step term — one fused table lookup
+(``delay x DELAY_UNIT_S``, delay from the frontier metrics) for an interp
+site vs. a multi-op exact transcendental (``EXACT_SITE_COST_S``). All
+constants are modeled, not wall clock: scores are bit-reproducible, which
+is what lets the bench artifact regress them in CI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import pathlib
+from typing import Any, Optional
+
+from repro.plan.schema import (SITE_KINDS, SITES, LayerAssign, NumericsPlan,
+                               SiteAssign, SlotSpec)
+
+# modeled per-token cost of one op site, per layer (seconds). An exact
+# site evaluates a transcendental through multiple vector ops; an interp
+# site is one fused ROM lookup whose latency scales with the frontier's
+# delay estimate (levels of logic -> modeled seconds).
+EXACT_SITE_COST_S = 5e-7
+DELAY_UNIT_S = 1e-9
+DEFAULT_DELAY = 8.0  # frontier delay proxy when a kind has no coverage
+
+_REPO = pathlib.Path(__file__).resolve().parents[3]
+DEFAULT_FRONTIERS = (_REPO / "artifacts" / "dse" / "FRONTIER_8.json",
+                     _REPO / "artifacts" / "dse" / "FRONTIER_6.json")
+
+
+def _site_weight(layer: int, n_layers: int) -> float:
+    """Edge layers amplify numerics error the most (embedding-adjacent and
+    logits-adjacent); interior layers get unit weight."""
+    return 2.0 if layer in (0, n_layers - 1) else 1.0
+
+
+def _rel_error(kind: str) -> float:
+    """Certified relative error of one table kind from its spec widths —
+    the ``softmax_ulp_bound`` construction: ~2 output ulps plus half an
+    input ulp through the function's slope."""
+    from repro.api.config import spec_for
+
+    spec = spec_for(kind)
+    return (2.0 ** -spec.out_bits) * 2 + 2.0 ** -(spec.in_bits + 1)
+
+
+def site_errors() -> dict[str, float]:
+    """Per-site certified relative error of an interp assignment.
+
+    softmax composes the exponential and the normalization reciprocal
+    exactly as :func:`repro.numerics.ops.softmax_ulp_bound`; rmsnorm rides
+    its rsqrt table; the activation site takes the worst of its kinds
+    (the plan does not know which activation a layer's FFN uses).
+    """
+    from repro.api.config import spec_for
+
+    exp, recip = spec_for("exp2neg"), spec_for("recip")
+    exp_rel = ((2.0 ** -exp.out_bits) * 2
+               + math.log(2.0) * 2.0 ** -(exp.in_bits + 1))
+    recip_rel = 2.0 ** -recip.in_bits
+    return {
+        "softmax": 2 * exp_rel + 2 * recip_rel,
+        "rmsnorm": _rel_error("rsqrt"),
+        "act": max(_rel_error(k) for k in SITE_KINDS["act"]),
+    }
+
+
+# ---------------------------------------------------------------------------
+# frontier-seeded candidate slots
+# ---------------------------------------------------------------------------
+
+def load_frontier_candidates(paths=DEFAULT_FRONTIERS, *, target: str = "asic"
+                             ) -> dict[str, dict[int, dict[str, Any]]]:
+    """``{kind: {lookup_bits: {"area", "delay", "segmentation"}}}`` from
+    committed frontier artifacts. Later paths only fill gaps (earlier ones
+    win), so FRONTIER_8 (which carries segmentation points) seeds before
+    FRONTIER_6. Missing files are skipped — the assigner then falls back
+    to default slots rather than failing."""
+    out: dict[str, dict[int, dict[str, Any]]] = {}
+    for path in paths:
+        p = pathlib.Path(path)
+        if not p.exists():
+            continue
+        doc = json.loads(p.read_text())
+        groups = doc.get("groups", doc.get("tables", {}).get("groups", {}))
+        for entry in groups.get(target, []):
+            params, metrics = entry.get("params", {}), entry.get("metrics", {})
+            kind, r = params.get("kind"), params.get("lookup_bits")
+            if kind is None or r is None:
+                continue
+            out.setdefault(kind, {}).setdefault(int(r), {
+                "area": float(metrics.get("area", 0.0)),
+                "delay": float(metrics.get("delay", DEFAULT_DELAY)),
+                "segmentation": params.get("segmentation", "uniform"),
+            })
+    return out
+
+
+def _choose_slot(site: str, cand: dict[str, dict[int, dict[str, Any]]]
+                 ) -> tuple[SlotSpec, float]:
+    """The site's slot: the R minimizing summed frontier delay over the
+    site's kinds (ties: smaller summed area, then smaller R), restricted
+    to heights every kind of the site has coverage for. Returns the slot
+    and its summed delay (the throughput model's per-site latency proxy).
+    No common coverage -> the default slot at the default delay proxy."""
+    kinds = SITE_KINDS[site]
+    heights: Optional[set] = None
+    for k in kinds:
+        rs = set(cand.get(k, {}))
+        heights = rs if heights is None else (heights & rs)
+    if not heights:
+        return SlotSpec(), DEFAULT_DELAY * len(kinds)
+    scored = []
+    for r in sorted(heights):
+        entries = [cand[k][r] for k in kinds]
+        delay = sum(e["delay"] for e in entries)
+        area = sum(e["area"] for e in entries)
+        seg = ("hier" if all(e["segmentation"] == "hier" for e in entries)
+               else "uniform")
+        scored.append((delay, area, r, seg))
+    delay, _area, r, seg = min(scored)
+    return SlotSpec(lookup_bits=r, segmentation=seg), delay
+
+
+# ---------------------------------------------------------------------------
+# modeled throughput
+# ---------------------------------------------------------------------------
+
+def modeled_tokens_per_s(plan: NumericsPlan, slot_delays: dict[str, float],
+                         *, horizon: int = 8) -> float:
+    """Modeled decode tokens/sec of a fused plan engine: the amortized
+    tick dispatch plus every (layer, site) term. ``slot_delays`` maps slot
+    keys to their summed frontier delay (``_choose_slot``)."""
+    from repro.dse.probe import DISPATCH_COST_S, TRANSFER_COST_S
+
+    per_step = (DISPATCH_COST_S + TRANSFER_COST_S) / max(1, horizon)
+    for _label, _site, a in plan.assignments():
+        if a.interp:
+            delay = slot_delays.get(a.slot.key, DEFAULT_DELAY * 2)
+            per_step += delay * DELAY_UNIT_S
+        else:
+            per_step += EXACT_SITE_COST_S
+    return 1.0 / per_step
+
+
+# ---------------------------------------------------------------------------
+# the assigner
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PlanReport:
+    """The assigner's full accounting — what the bench artifact records."""
+
+    plan: NumericsPlan
+    arch: str
+    error_budget: float
+    predicted_error: float
+    measured_error: Optional[float]
+    modeled_tokens_per_s: float
+    exact_tokens_per_s: float
+    site_errors: dict[str, float]
+    slot_delays: dict[str, float]
+    flipped: tuple  # (layer, site) pairs downgraded to exact, greedy order
+
+    @property
+    def speedup(self) -> float:
+        return self.modeled_tokens_per_s / max(self.exact_tokens_per_s, 1e-12)
+
+    def to_dict(self) -> dict[str, Any]:
+        return {
+            "arch": self.arch,
+            "plan": self.plan.to_dict(),
+            "error_budget": self.error_budget,
+            "predicted_error": self.predicted_error,
+            "measured_error": self.measured_error,
+            "modeled_tokens_per_s": self.modeled_tokens_per_s,
+            "exact_tokens_per_s": self.exact_tokens_per_s,
+            "speedup": self.speedup,
+            "site_errors": self.site_errors,
+            "slot_delays": self.slot_delays,
+            "flipped": [list(f) for f in self.flipped],
+        }
+
+
+def predicted_error(plan: NumericsPlan, errs: dict[str, float]) -> float:
+    """Additive sensitivity-weighted composition over every interp site."""
+    n = plan.n_layers
+    total = 0.0
+    for i, la in enumerate(plan.layers):
+        w = _site_weight(i, n)
+        for s in SITES:
+            if la.site(s).interp:
+                total += w * errs[s]
+    for s in SITES:
+        if plan.rest.site(s).interp:
+            total += errs[s]
+    return total
+
+
+def _measure_error(cfg_plan, cfg_exact, params, *, seed: int,
+                   prompt_len: int) -> float:
+    """End-to-end relative output error: prefill logits under the plan vs.
+    all-exact numerics on deterministic tokens (max |delta| over the
+    logits range)."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.models import transformer as tf
+    from repro.numerics.ops import get_numerics
+
+    rng = np.random.default_rng(seed)
+    tokens = jnp.asarray(rng.integers(0, cfg_exact.vocab_size,
+                                      (1, prompt_len)).astype(np.int32))
+    cache_len = max(prompt_len + 1, cfg_exact.sliding_window or 0)
+    got, _, _ = tf.prefill(params, tokens, cfg_plan,
+                           get_numerics(cfg_plan), cache_len)
+    want, _, _ = tf.prefill(params, tokens, cfg_exact,
+                            get_numerics(cfg_exact), cache_len)
+    got, want = np.asarray(got, np.float64), np.asarray(want, np.float64)
+    scale = max(float(np.abs(want).max()), 1e-12)
+    return float(np.abs(got - want).max()) / scale
+
+
+def auto_plan(cfg, *, error_budget: float, backend: str = "interp-fused",
+              frontier_paths=DEFAULT_FRONTIERS, target: str = "asic",
+              horizon: int = 8, verify: bool = True, params=None,
+              explorer=None, seed: int = 0, prompt_len: int = 16
+              ) -> PlanReport:
+    """Assign per-layer numerics for ``cfg`` under an output-error budget.
+
+    Returns a :class:`PlanReport` whose ``plan`` maximizes modeled decode
+    tokens/sec subject to ``predicted_error <= error_budget`` — and, with
+    ``verify=True`` (needs ``params``, or initializes smoke params from
+    ``seed``), subject to the *measured* end-to-end prefill-logit error
+    too. ``rest`` (final norm, projector, encoder glue) stays exact: its
+    single evaluation per token is throughput-negligible but sits closest
+    to the logits.
+    """
+    n = cfg.n_layers
+    errs = site_errors()
+    cand = load_frontier_candidates(frontier_paths, target=target)
+    slots: dict[str, SlotSpec] = {}
+    slot_delays: dict[str, float] = {}
+    for s in SITES:
+        slot, delay = _choose_slot(s, cand)
+        slots[s] = slot
+        slot_delays.setdefault(slot.key, delay)
+
+    def build(flipped: set) -> NumericsPlan:
+        layers = []
+        for i in range(n):
+            la = LayerAssign(**{
+                s: (SiteAssign("exact", slots[s]) if (i, s) in flipped
+                    else SiteAssign(backend, slots[s]))
+                for s in SITES})
+            layers.append(la)
+        return NumericsPlan(layers=tuple(layers), rest=LayerAssign())
+
+    # greedy flip order: largest weighted site error first; deterministic
+    # tie-break on (layer, site order). Every flip buys the same modeled
+    # throughput loss (EXACT_SITE_COST_S dominates any table delay), so
+    # max-error-reduction-per-cost == max-error-reduction.
+    order = sorted(((i, s) for i in range(n) for s in SITES),
+                   key=lambda t: (-_site_weight(t[0], n) * errs[t[1]],
+                                  t[0], SITES.index(t[1])))
+    flipped: set = set()
+    plan = build(flipped)
+    pred = predicted_error(plan, errs)
+    it = iter(order)
+    while pred > error_budget:
+        try:
+            flipped.add(next(it))
+        except StopIteration:
+            break
+        plan = build(flipped)
+        pred = predicted_error(plan, errs)
+
+    measured: Optional[float] = None
+    if verify:
+        import jax
+
+        from repro.models import transformer as tf
+
+        if params is None:
+            params = tf.init_params(jax.random.key(seed), cfg)
+        # batch the envelope probes of every slot x kind through the fleet
+        # engine before any library compiles serially off the warm cache
+        if plan.uses_interp:
+            from repro.api import default_explorer
+            from repro.api.config import spec_for
+
+            ex = explorer if explorer is not None else default_explorer()
+            pairs = []
+            for s in SITES:
+                r = slots[s].lookup_bits
+                if r is not None:
+                    pairs.extend((spec_for(k), r) for k in SITE_KINDS[s])
+            if pairs:
+                ex.prime_envelopes(pairs)
+        cfg_exact = cfg.replace(numerics="exact", plan=None)
+        while True:
+            measured = _measure_error(cfg.replace(plan=plan), cfg_exact,
+                                      params, seed=seed,
+                                      prompt_len=prompt_len)
+            if measured <= error_budget or not plan.uses_interp:
+                break
+            try:
+                flipped.add(next(it))
+            except StopIteration:
+                plan = plan.degrade_exact()
+                continue
+            plan = build(flipped)
+        pred = predicted_error(plan, errs)
+
+    return PlanReport(
+        plan=plan, arch=getattr(cfg, "name", "?"),
+        error_budget=float(error_budget), predicted_error=pred,
+        measured_error=measured,
+        modeled_tokens_per_s=modeled_tokens_per_s(plan, slot_delays,
+                                                  horizon=horizon),
+        exact_tokens_per_s=modeled_tokens_per_s(
+            NumericsPlan.uniform("exact", n), slot_delays, horizon=horizon),
+        site_errors=errs, slot_delays=slot_delays,
+        flipped=tuple(sorted(flipped)))

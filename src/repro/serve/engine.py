@@ -63,7 +63,12 @@ from repro.serve.journal import ServeJournal, load_requests
 
 def _interp(cfg) -> bool:
     """Does this config's numerics backend consult an InterpLibrary?
-    Covers the plain, explicitly-fused and degraded-guarded backend names."""
+    Covers the plain, explicitly-fused and degraded-guarded backend names —
+    and per-layer plans (DESIGN.md §16), which consult one library per
+    distinct slot as long as any site assignment is non-exact."""
+    plan = getattr(cfg, "plan", None)
+    if plan is not None:
+        return plan.uses_interp
     return cfg.numerics in INTERP_BACKENDS
 
 
@@ -209,6 +214,15 @@ class ServeEngine:
     construction (generation, if the disk cache is cold, happens here — not
     inside the first jitted step). Exact-numerics engines carry no library.
 
+    When ``cfg.plan`` is a :class:`repro.plan.NumericsPlan` (per-layer
+    heterogeneous numerics, DESIGN.md §16) the engine threads a *dict* of
+    libraries — one per distinct plan slot, compiled at construction when
+    none is passed — and the degradation ladder gains a per-layer rung: a
+    corrupt slot ROM downgrades exactly the layers reading that slot
+    (:meth:`_degrade_slots`), the rest stay fused, and
+    ``stats["degradations"]`` becomes a per-layer-label dict (``"engine"``
+    counts whole-ladder rungs).
+
     ``fused`` (default): each engine tick is ONE donated-buffer dispatch
     covering up to ``horizon`` decode steps (``make_engine_tick``); interp
     numerics run the library-bound fused kernels. ``fused=False`` keeps the
@@ -290,7 +304,15 @@ class ServeEngine:
             # here again. To serve from a custom session (cache dir, worker
             # pool), install it with repro.api.set_default_explorer() before
             # constructing the engine — or pass a compiled/loaded library.
-            library = default_explorer().compile()
+            # A plan engine compiles one library per distinct plan slot and
+            # threads the dict as a pytree (each value replicates/donates
+            # like the single-library case).
+            if cfg.plan is not None:
+                from repro.plan.numerics import compile_plan_libraries
+
+                library = compile_plan_libraries(cfg.plan)
+            else:
+                library = default_explorer().compile()
         self.library = library
         self.numerics = get_numerics(
             cfg, library, fused=self.fused and _interp(cfg))
@@ -301,9 +323,13 @@ class ServeEngine:
         self.queue: collections.deque[Request] = collections.deque()
         self.finished: list[Request] = []
         self.failed: list[Request] = []
+        # plan engines attribute degradations per layer label ("0", "7",
+        # "rest", or "engine" for whole-ladder rungs); plan-less engines
+        # keep the historical scalar counter
         self.stats = {"dispatches": 0, "transfers": 0, "ticks": 0,
                       "decode_steps": 0, "rejected": 0, "expired": 0,
-                      "watchdog_trips": 0, "degradations": 0,
+                      "watchdog_trips": 0,
+                      "degradations": {} if cfg.plan is not None else 0,
                       "rom_verifies": 0, "rom_faults": 0, "slot_failures": 0,
                       "resumed": 0, "resume_skipped_done": 0,
                       "resume_replay_steps": 0}
@@ -390,16 +416,42 @@ class ServeEngine:
         return "serial" if _interp(self.cfg) else "exact"
 
     def _record_fault(self, reason: str, detail: str = "",
-                      action: str = "") -> None:
-        self.faults.append({"tick": self.stats["ticks"], "reason": reason,
-                            "detail": detail, "action": action})
+                      action: str = "", layers: tuple | None = None) -> None:
+        entry = {"tick": self.stats["ticks"], "reason": reason,
+                 "detail": detail, "action": action}
+        if layers is not None:
+            entry["layers"] = tuple(layers)
+        self.faults.append(entry)
+
+    def _count_degradation(self, label: str) -> None:
+        d = self.stats["degradations"]
+        if isinstance(d, dict):
+            d[label] = d.get(label, 0) + 1
+        else:
+            self.stats["degradations"] = d + 1
 
     def verify_library(self) -> bool:
-        """Re-checksum the resident ROM; on mismatch degrade to exact
-        numerics (both interp rungs would gather the corrupt ROM)."""
+        """Re-checksum the resident ROM(s); on mismatch degrade — a plan
+        engine checks every slot library and downgrades only the layers
+        reading a corrupt one (:meth:`_degrade_slots`); a homogeneous
+        engine jumps straight to exact (both interp rungs would gather the
+        corrupt ROM)."""
         if self.library is None:
             return True
         self.stats["rom_verifies"] += 1
+        if isinstance(self.library, dict):
+            bad: list[tuple[str, str]] = []
+            for key in sorted(self.library):
+                try:
+                    self.library[key].verify_resident()
+                except LibraryIntegrityError as e:
+                    bad.append((key, str(e)))
+            if not bad:
+                return True
+            self.stats["rom_faults"] += len(bad)
+            self._degrade_slots([k for k, _ in bad], "rom_integrity",
+                                detail="; ".join(m for _, m in bad))
+            return False
         try:
             self.library.verify_resident()
             return True
@@ -408,14 +460,43 @@ class ServeEngine:
             self._degrade("rom_integrity", to="exact", detail=str(e))
             return False
 
+    def _degrade_slots(self, slot_keys: list, reason: str,
+                       detail: str = "") -> None:
+        """Per-layer degradation rung (plan engines, DESIGN.md §16): every
+        site reading a poisoned slot library drops to exact — in the named
+        layers only. The rest of the stack keeps its fused interp datapath;
+        ``stats["degradations"]`` and the fault log name the layers."""
+        plan = self.cfg.plan
+        keys = sorted(set(slot_keys))
+        layers: list = []
+        for k in keys:
+            for lab in plan.layers_using_slot(k):
+                if lab not in layers:
+                    layers.append(lab)
+        layers.sort(key=str)
+        self.cfg = self.cfg.replace(plan=plan.degrade_layers(layers, keys))
+        self.library = {k: v for k, v in self.library.items()
+                        if k not in set(keys)} or None
+        for lab in layers:
+            self._count_degradation(str(lab))
+        self._record_fault(reason, detail=detail,
+                           action=f"slots:{','.join(keys)}->exact",
+                           layers=tuple(str(x) for x in layers))
+        self._trips = 0
+        self.numerics = get_numerics(
+            self.cfg, self.library, fused=self.fused and _interp(self.cfg))
+        self._build_programs()
+
     def _degrade(self, reason: str, to: str | None = None,
                  detail: str = "") -> None:
         """Walk one rung down the degradation ladder (or jump to ``to``).
 
         fused → serial flips the dispatch mode and, for interp engines,
-        swaps in the domain-guarded numerics; → exact drops the library.
-        The KV pool and host slot mirrors carry over — in-flight requests
-        keep decoding, just on the safer datapath.
+        swaps in the domain-guarded numerics (a plan engine guards every
+        interp site, :meth:`NumericsPlan.degrade_serial`); → exact drops
+        the library (plan: every site to exact). The KV pool and host slot
+        mirrors carry over — in-flight requests keep decoding, just on the
+        safer datapath.
         """
         was = self._rung()
         if to is None:
@@ -426,17 +507,22 @@ class ServeEngine:
             self._record_fault(reason, detail=detail, action=f"hold:{was}")
             self._trips = 0
             return
+        plan = self.cfg.plan
         if to == "serial":
             self.fused = False
-            if _interp(self.cfg) and self.cfg.numerics != "interp-guarded":
+            if plan is not None:
+                self.cfg = self.cfg.replace(plan=plan.degrade_serial())
+            elif _interp(self.cfg) and self.cfg.numerics != "interp-guarded":
                 self.cfg = self.cfg.replace(numerics="interp-guarded")
         elif to == "exact":
-            if self.cfg.numerics != "exact":
+            if plan is not None:
+                self.cfg = self.cfg.replace(plan=plan.degrade_exact())
+            elif self.cfg.numerics != "exact":
                 self.cfg = self.cfg.replace(numerics="exact")
             self.library = None
         else:
             raise ValueError(f"unknown degradation rung {to!r}")
-        self.stats["degradations"] += 1
+        self._count_degradation("engine")
         self._record_fault(reason, detail=detail, action=f"{was}->{to}")
         self._trips = 0
         self.numerics = get_numerics(

@@ -71,7 +71,11 @@ def make_train_step(cfg, step_cfg: StepConfig, library=None) -> Callable:
 
     ``library``: optional compiled :class:`repro.api.InterpLibrary` binding
     the interp numerics to one packed artifact (closure leaf — jit folds the
-    replicated coefficient ROM into the step like any other constant)."""
+    replicated coefficient ROM into the step like any other constant). When
+    ``cfg.plan`` carries a :class:`repro.plan.NumericsPlan`, pass a dict
+    keyed by the plan's slot keys instead (or None to compile per slot) —
+    ``get_numerics`` resolves the per-layer backends either way, so a
+    heterogeneous plan trains through the same step function."""
     numerics = get_numerics(cfg, library)
     pdt = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[cfg.param_dtype]
 

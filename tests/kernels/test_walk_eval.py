@@ -1,0 +1,117 @@
+"""Generalized multi-function ROM walk: golden bit-exactness over mixed
+uniform + segmented libraries (ISSUE 9).
+
+Contract: ``library_walk`` — the kernel behind ``eval_fused`` whenever any
+slot is segmented — is bit-identical per element to the per-kind int64
+oracles (``TableDesign.eval_int`` for uniform slots,
+``SegmentedDesign.eval_int`` for segmented ones), on both the jnp-ref and
+interpreted-Pallas paths, and collapses to ``library_eval`` bit-for-bit on
+an all-uniform library (the v1 fast path is a special case of the walk).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import InterpLibrary, default_explorer
+from repro.api.config import spec_for
+from repro.kernels.interp.ops import library_eval, library_walk
+from repro.segment import explore_segmented, min_uniform_depth
+
+SEG_KINDS = ("tanh", "gelu")
+UNI_KINDS = ("sigmoid", "exp2neg")
+
+
+@pytest.fixture(scope="module")
+def designs():
+    """Two dyadic prefix-tree slots interleaved with two uniform ones —
+    the walk must decode each element by its own slot's layout."""
+    out = {}
+    ex = default_explorer()
+    for kind in SEG_KINDS:
+        spec = spec_for(kind, 8)
+        sd = explore_segmented(spec, max_depth=min_uniform_depth(
+            spec, engine="batched"), engine="batched")
+        assert sd is not None
+        out[kind] = sd
+    for kind in UNI_KINDS:
+        out[kind] = ex.get_table(kind)
+    return out
+
+
+@pytest.fixture(scope="module")
+def seg_lib(designs):
+    kinds = ("tanh", "sigmoid", "gelu", "exp2neg")  # interleaved layouts
+    lib = InterpLibrary.from_designs([designs[k] for k in kinds], list(kinds))
+    assert set(lib.segmented_kinds) == set(SEG_KINDS)
+    return lib
+
+
+@pytest.fixture(scope="module")
+def uni_lib():
+    return default_explorer().compile()
+
+
+def test_walk_matches_int64_oracle_every_kind(seg_lib, designs):
+    """Exhaustive per-kind sweep: one fused walk call over every code of
+    every slot == the per-design int64 oracle, ref and kernel paths."""
+    parts, fid_parts, want = [], [], []
+    for kind in seg_lib.kinds:
+        m = seg_lib.meta(kind)
+        codes = np.arange(1 << m.in_bits, dtype=np.int64)
+        parts.append(codes.astype(np.int32))
+        fid_parts.append(np.full(codes.size, seg_lib.func_id(kind), np.int32))
+        want.append(designs[kind].eval_int(codes))
+    codes = jnp.asarray(np.concatenate(parts))
+    fids = jnp.asarray(np.concatenate(fid_parts))
+    want = np.concatenate(want)
+    walk, dp = seg_lib.walk_rows()
+    ref = np.asarray(library_walk(codes, fids, seg_lib.coeffs, walk, dp,
+                                  use_kernel=False), np.int64)
+    np.testing.assert_array_equal(ref, want)
+    kern = np.asarray(library_walk(codes, fids, seg_lib.coeffs, walk, dp,
+                                   use_kernel=True, interpret=True), np.int64)
+    np.testing.assert_array_equal(kern, want)
+
+
+def test_walk_collapses_to_library_eval_on_uniform(uni_lib):
+    """On an all-uniform library the walk's answer is bitwise the v1 fused
+    kernel's — the special case eval_fused still fast-paths."""
+    rng = np.random.default_rng(11)
+    n_funcs = len(uni_lib.kinds)
+    fids_np = rng.integers(0, n_funcs, 4096).astype(np.int32)
+    codes_np = np.array([rng.integers(0, 1 << uni_lib.metas[f].in_bits)
+                         for f in fids_np], np.int32)
+    codes, fids = jnp.asarray(codes_np), jnp.asarray(fids_np)
+    walk, dp = uni_lib.walk_rows()
+    for use_kernel in (False, True):
+        a = np.asarray(library_walk(codes, fids, uni_lib.coeffs, walk, dp,
+                                    use_kernel=use_kernel, interpret=True))
+        b = np.asarray(library_eval(codes, fids, uni_lib.coeffs,
+                                    uni_lib.meta_rows(),
+                                    use_kernel=use_kernel, interpret=True))
+        np.testing.assert_array_equal(a, b)
+
+
+def test_eval_fused_routes_mixed_library_through_walk(seg_lib):
+    """The public entry point serves segmented fids without the PR-8
+    refusal; per-kind answers equal eval_int's segment-index path."""
+    for kind in seg_lib.segmented_kinds:
+        m = seg_lib.meta(kind)
+        codes = jnp.arange(1 << m.in_bits, dtype=jnp.int32)
+        fids = jnp.full(codes.shape, seg_lib.func_id(kind), jnp.int32)
+        np.testing.assert_array_equal(
+            np.asarray(seg_lib.eval_fused(codes, fids, use_kernel=False)),
+            np.asarray(seg_lib.eval_int(codes, kind, use_kernel=False)))
+
+
+def test_walk_rows_shapes(seg_lib, uni_lib):
+    walk, dp = seg_lib.walk_rows()
+    assert walk.shape == (len(seg_lib.kinds), 5)
+    n_leaves = sum(len(m.seg_meta) if m.seg_depth else 1
+                   for m in seg_lib.metas)
+    assert dp.shape == (n_leaves, 5)
+    walk_u, dp_u = uni_lib.walk_rows()
+    assert dp_u.shape == (len(uni_lib.kinds), 5)
+    assert int(walk_u[:, 2].sum()) == 0  # no seg flags on a v1 library

@@ -1,0 +1,120 @@
+"""The budget-driven auto-assigner (ISSUE 9): frontier-seeded slots,
+additive error composition, greedy budget descent, modeled throughput.
+
+Everything here is deterministic and modeled (no wall clock): the same
+config and budget must always produce the same plan, tighter budgets can
+only flip more sites to exact, and any plan with interp sites must beat
+the all-exact plan on modeled decode tokens/sec (that gap is the whole
+point of the assigner). One end-to-end case runs ``verify=True`` on the
+smoke model and asserts the measured prefill-logit error meets the budget.
+"""
+from __future__ import annotations
+
+import jax
+import pytest
+
+from repro.configs.base import get_smoke_config
+from repro.models import transformer as tf
+from repro.plan import NumericsPlan, SITES
+from repro.plan.assign import (DEFAULT_FRONTIERS, auto_plan,
+                               load_frontier_candidates, modeled_tokens_per_s,
+                               predicted_error, site_errors)
+
+
+def test_committed_frontiers_cover_softmax_kinds():
+    cand = load_frontier_candidates(DEFAULT_FRONTIERS, target="asic")
+    assert "exp2neg" in cand and "recip" in cand
+    rs = set(cand["exp2neg"]) & set(cand["recip"])
+    assert rs, "no common lookup height for the softmax site"
+    for r, entry in cand["exp2neg"].items():
+        assert entry["delay"] > 0 and entry["area"] > 0
+
+
+def test_missing_frontier_files_are_skipped(tmp_path):
+    cand = load_frontier_candidates((tmp_path / "nope.json",))
+    assert cand == {}
+
+
+def test_site_errors_positive_and_softmax_dominates_rsqrt():
+    errs = site_errors()
+    assert set(errs) == set(SITES)
+    assert all(v > 0 for v in errs.values())
+    # softmax composes two kinds twice each — strictly the largest term
+    assert errs["softmax"] > errs["rmsnorm"]
+
+
+def test_auto_plan_deterministic():
+    cfg = get_smoke_config("yi_6b")
+    a = auto_plan(cfg, error_budget=0.05, verify=False)
+    b = auto_plan(cfg, error_budget=0.05, verify=False)
+    assert a.plan == b.plan
+    assert a.predicted_error == b.predicted_error
+    assert a.modeled_tokens_per_s == b.modeled_tokens_per_s
+
+
+def test_budget_monotonicity():
+    cfg = get_smoke_config("yi_6b")
+    loose = auto_plan(cfg, error_budget=1.0, verify=False)
+    tight = auto_plan(cfg, error_budget=loose.predicted_error / 4,
+                      verify=False)
+    assert len(tight.flipped) > len(loose.flipped)
+    assert tight.predicted_error <= loose.predicted_error
+    assert tight.predicted_error <= loose.predicted_error / 4
+    # an impossible budget degenerates to (nearly) all-exact
+    zero = auto_plan(cfg, error_budget=0.0, verify=False)
+    assert not zero.plan.uses_interp
+    assert zero.predicted_error == 0.0
+
+
+def test_interp_plan_beats_exact_on_modeled_throughput():
+    cfg = get_smoke_config("yi_6b")
+    rep = auto_plan(cfg, error_budget=0.05, verify=False)
+    assert rep.plan.uses_interp
+    assert rep.modeled_tokens_per_s > rep.exact_tokens_per_s
+    assert rep.speedup > 1.0
+    # the model itself is monotone: flipping any site to exact only slows
+    slower = modeled_tokens_per_s(rep.plan.degrade_exact(), rep.slot_delays)
+    assert slower < rep.modeled_tokens_per_s
+
+
+def test_predicted_error_weights_edge_layers():
+    errs = site_errors()
+    n = 4
+    mid = NumericsPlan.uniform("exact", n)
+    import dataclasses
+
+    from repro.plan import LayerAssign, SiteAssign
+
+    def one_interp(i):
+        layers = list(mid.layers)
+        layers[i] = LayerAssign(softmax=SiteAssign("interp"))
+        return dataclasses.replace(mid, layers=tuple(layers))
+
+    edge = predicted_error(one_interp(0), errs)
+    inner = predicted_error(one_interp(1), errs)
+    assert edge == pytest.approx(2 * inner)
+    assert predicted_error(one_interp(n - 1), errs) == pytest.approx(edge)
+
+
+def test_report_round_trips_to_dict():
+    cfg = get_smoke_config("yi_6b")
+    rep = auto_plan(cfg, error_budget=0.05, verify=False)
+    d = rep.to_dict()
+    assert d["arch"] == "yi_6b"
+    assert d["measured_error"] is None
+    assert NumericsPlan.from_dict(d["plan"]) == rep.plan
+    assert d["speedup"] == pytest.approx(rep.speedup)
+
+
+def test_auto_plan_verified_meets_budget_end_to_end():
+    """The acceptance loop on the smoke model: the verified plan's measured
+    whole-model prefill-logit error fits the budget, and the plan still
+    carries interp sites (the budget is attainable, not vacuous)."""
+    cfg = get_smoke_config("yi_6b")
+    params = tf.init_params(jax.random.key(0), cfg)
+    rep = auto_plan(cfg, error_budget=0.05, verify=True, params=params)
+    assert rep.measured_error is not None
+    assert rep.measured_error <= rep.error_budget
+    assert rep.predicted_error <= rep.error_budget
+    assert rep.plan.uses_interp
+    assert rep.speedup > 1.0

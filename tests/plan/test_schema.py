@@ -1,0 +1,137 @@
+"""NumericsPlan schema (ISSUE 9): hashable per-layer x per-op-site
+assignments, snapshot-envelope round-trips, degradation rungs.
+
+The plan is the single source of truth the configs/models/serve layers
+thread — these tests pin its invariants: value-hashability (the serve
+engine keys its jit cache on the config), exact serialization round-trip
+through the schema-versioned snapshot envelope, refusal of newer payloads,
+slot bookkeeping (``slot_keys`` / ``layers_using_slot``), and the three
+degradation rungs (serial, exact, per-layer).
+"""
+from __future__ import annotations
+
+import pytest
+
+from repro.configs.base import get_smoke_config
+from repro.plan import (PLAN_SCHEMA, SITES, LayerAssign, NumericsPlan,
+                        SiteAssign, SlotSpec, load_plan, plan_for, save_plan)
+
+
+def _mixed_plan(n=4) -> NumericsPlan:
+    """Layer 0 fully interp-fused on R5; layer 1 softmax-only interp on the
+    default slot; the rest exact. ``rest`` reads R5 through its act site."""
+    r5 = SlotSpec(lookup_bits=5)
+    layers = [LayerAssign(SiteAssign("interp-fused", r5),
+                          SiteAssign("interp-fused", r5),
+                          SiteAssign("interp-fused", r5)),
+              LayerAssign(softmax=SiteAssign("interp"))]
+    layers += [LayerAssign()] * (n - 2)
+    return NumericsPlan(layers=tuple(layers),
+                        rest=LayerAssign(act=SiteAssign("interp-guarded", r5)))
+
+
+def test_slot_key_canonicalization():
+    assert SlotSpec().key == "default"
+    assert SlotSpec(lookup_bits=6).key == "R6"
+    assert SlotSpec(lookup_bits=6, degree=2).key == "R6.d2"
+    assert SlotSpec(lookup_bits=6, degree=2, segmentation="hier").key \
+        == "R6.d2.hier"
+    assert SlotSpec(segmentation="hier").key == "hier"
+    assert SlotSpec(lookup_bits=6).table_kwargs() == {"lookup_bits": 6}
+
+
+def test_invalid_names_refused():
+    with pytest.raises(ValueError, match="backend"):
+        SiteAssign("fp8")
+    with pytest.raises(ValueError, match="segmentation"):
+        SlotSpec(segmentation="octree")
+
+
+def test_uniform_plan_collapses():
+    plan = NumericsPlan.uniform("interp-fused", 3)
+    assert plan.n_layers == 3
+    assert plan.uses_interp
+    assert plan.slot_keys() == ("default",)
+    for la in plan.layers + (plan.rest,):
+        assert la.uniform_backend == "interp-fused"
+    exact = NumericsPlan.uniform("exact", 3)
+    assert not exact.uses_interp and exact.slot_keys() == ()
+
+
+def test_mixed_layer_has_no_uniform_backend():
+    la = LayerAssign(softmax=SiteAssign("interp"))
+    assert la.uniform_backend is None
+    # same backend, different slots: still not uniform
+    la2 = LayerAssign(SiteAssign("interp", SlotSpec(lookup_bits=5)),
+                      SiteAssign("interp"), SiteAssign("interp"))
+    assert la2.uniform_backend is None
+
+
+def test_plan_is_hashable_and_config_embeddable():
+    plan = _mixed_plan()
+    assert hash(plan) == hash(_mixed_plan())
+    cfg = get_smoke_config("yi_6b").replace(plan=plan)
+    assert hash(cfg) != hash(get_smoke_config("yi_6b"))
+    assert cfg.replace(plan=plan) == cfg
+
+
+def test_round_trip_dict():
+    plan = _mixed_plan()
+    assert NumericsPlan.from_dict(plan.to_dict()) == plan
+
+
+def test_snapshot_envelope_round_trip(tmp_path):
+    plan = _mixed_plan()
+    path = tmp_path / "plan.json"
+    save_plan(path, plan, seed=3, meta_extra={"arch": "yi_6b"})
+    assert load_plan(path) == plan
+
+
+def test_newer_schema_refused():
+    doc = _mixed_plan().to_dict()
+    doc["plan_schema"] = PLAN_SCHEMA + 1
+    with pytest.raises(ValueError, match="newer"):
+        NumericsPlan.from_dict(doc)
+
+
+def test_slot_bookkeeping():
+    plan = _mixed_plan()
+    assert plan.slot_keys() == ("R5", "default")
+    assert plan.layers_using_slot("R5") == (0, "rest")
+    assert plan.layers_using_slot("default") == (1,)
+    assert plan.layers_using_slot("R9") == ()
+
+
+def test_degrade_serial_guards_every_interp_site():
+    plan = _mixed_plan().degrade_serial()
+    for _label, _site, a in plan.assignments():
+        assert a.backend in ("exact", "interp-guarded")
+    # already-guarded sites stay guarded, exact stays exact
+    assert plan.rest.act.backend == "interp-guarded"
+    assert plan.layers[2].softmax.backend == "exact"
+
+
+def test_degrade_exact_kills_all_interp():
+    plan = _mixed_plan().degrade_exact()
+    assert not plan.uses_interp
+    # slots are retained for forensics even after the downgrade
+    assert plan.layers[0].softmax.slot == SlotSpec(lookup_bits=5)
+
+
+def test_degrade_layers_is_surgical():
+    plan = _mixed_plan()
+    down = plan.degrade_layers([0, "rest"], ["R5"])
+    # layer 0 and rest lose their R5 sites...
+    assert down.layers[0].uniform_backend == "exact"
+    assert down.rest.act.backend == "exact"
+    # ...but layer 1's default-slot site is untouched
+    assert down.layers[1].softmax.backend == "interp"
+    # degrading a slot nobody poisoned is a no-op
+    assert plan.degrade_layers([1], ["R5"]) == plan
+
+
+def test_plan_for_matches_config_numerics():
+    cfg = get_smoke_config("yi_6b").replace(numerics="interp")
+    plan = plan_for(cfg)
+    assert plan == NumericsPlan.uniform("interp", cfg.n_layers)
+    assert set(s for _, s, _ in plan.assignments()) == set(SITES)

@@ -3,9 +3,9 @@
 Contract under test (ISSUE 8): a library with any segmented slot saves as
 manifest version 2 and round-trips; an all-uniform library still saves as
 version 1 with a byte-identical manifest and checksum-identical ROM to the
-pre-segment code path; the fused multi-function kernel refuses segmented
-slots loudly (their datapath is per-leaf) while the per-kind entry points
-route through the segment-index oracle bit-exactly."""
+pre-segment code path; the fused multi-function ROM walk (ISSUE 9) serves
+any mix of uniform and segmented slots bit-exactly against the per-kind
+segment-index oracle."""
 from __future__ import annotations
 
 import json
@@ -85,11 +85,31 @@ def test_uniform_library_still_saves_v1_checksum_identical(tmp_path):
                                   np.asarray(lib.coeffs))
 
 
-def test_eval_fused_refuses_segmented_slots(mixed_lib):
-    codes = jnp.zeros((4,), jnp.int32)
-    fids = jnp.zeros((4,), jnp.int32)
-    with pytest.raises(ValueError, match="segmented"):
-        mixed_lib.eval_fused(codes, fids)
+def test_eval_fused_serves_segmented_slots(mixed_lib, seg_design):
+    """The unified ROM walk replaced the PR-8 loud refusal: one fused call
+    over mixed uniform+segmented fids matches the per-kind entry points
+    bit-exactly on both the ref and interpreted-kernel paths."""
+    tanh_bits = mixed_lib.meta("tanh").in_bits
+    sig_bits = mixed_lib.meta("sigmoid").in_bits
+    codes_t = jnp.arange(1 << tanh_bits, dtype=jnp.int32)
+    codes_s = jnp.arange(1 << sig_bits, dtype=jnp.int32)
+    codes = jnp.concatenate([codes_t, codes_s])
+    fid_t = mixed_lib.kinds.index("tanh")
+    fid_s = mixed_lib.kinds.index("sigmoid")
+    fids = jnp.concatenate([jnp.full_like(codes_t, fid_t),
+                            jnp.full_like(codes_s, fid_s)])
+    want = np.concatenate([
+        np.asarray(mixed_lib.eval_int(codes_t, "tanh"), np.int64),
+        np.asarray(mixed_lib.eval_int(codes_s, "sigmoid"), np.int64)])
+    for use_kernel in (False, True):
+        got = np.asarray(mixed_lib.eval_fused(
+            codes, fids, use_kernel=use_kernel, interpret=True), np.int64)
+        np.testing.assert_array_equal(got, want)
+    # and against the int64 ground truth directly
+    np.testing.assert_array_equal(
+        np.asarray(mixed_lib.eval_fused(codes_t, jnp.full_like(
+            codes_t, fid_t), use_kernel=False), np.int64),
+        seg_design.eval_int(np.arange(1 << tanh_bits)))
 
 
 def test_compile_segmented_swaps_only_improving_slots():

@@ -1,0 +1,173 @@
+"""Plan-carrying serve engines (ISSUE 9): uniform bitwise identity, mixed
+per-layer slots through the fused tick, and the per-layer degradation rung.
+
+Oracles:
+
+  * a uniform ``NumericsPlan`` must reproduce the homogeneous engine
+    *token-bitwise* — the plan machinery (grouped scan, interned backends,
+    slot-keyed libraries) is pure plumbing in the degenerate case;
+  * a genuinely mixed plan (different slots on different layers) serves
+    through the same fused tick, compiling one library per slot;
+  * a poisoned slot library downgrades exactly the layers reading it —
+    the engine stays fused, unaffected layers keep their interp backends,
+    and ``stats["degradations"]`` / the fault log attribute the layer.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_smoke_config
+from repro.faults import TickFaultInjector, flip_rom_bit
+from repro.models import transformer as tf
+from repro.plan import LayerAssign, NumericsPlan, SiteAssign, SlotSpec
+from repro.serve.engine import Request, ServeEngine
+
+MAX_NEW = 6
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get_smoke_config("yi_6b")
+    return cfg, tf.init_params(jax.random.key(0), cfg)
+
+
+def _prompts(cfg, lengths, seed=7):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+            for n in lengths]
+
+
+def _mk(cfg, params, **kw):
+    kw.setdefault("slots", 2)
+    kw.setdefault("cache_len", 48)
+    kw.setdefault("fused", True)
+    return ServeEngine(cfg, params, **kw)
+
+
+def _run(eng, cfg, params=None, lengths=(5, 11, 3)):
+    for i, p in enumerate(_prompts(cfg, lengths)):
+        eng.submit(Request(i, p, max_new=MAX_NEW))
+    return {r.rid: r.out for r in eng.run()}
+
+
+def _two_slot_plan(n_layers):
+    """Layer 0 interp-fused on its own R5 slot; every other layer and
+    ``rest`` interp-fused on the default slot."""
+    r5 = SlotSpec(lookup_bits=5)
+    first = LayerAssign(SiteAssign("interp-fused", r5),
+                        SiteAssign("interp-fused", r5),
+                        SiteAssign("interp-fused", r5))
+    rest = LayerAssign(SiteAssign("interp-fused"), SiteAssign("interp-fused"),
+                       SiteAssign("interp-fused"))
+    return NumericsPlan(layers=(first,) + (rest,) * (n_layers - 1), rest=rest)
+
+
+def test_uniform_plan_bitwise_identical_to_homogeneous_engine(model):
+    """The ISSUE-9 acceptance oracle: serving under the degenerate uniform
+    plan produces token streams exactly equal to the homogeneous fused
+    interp engine — same libraries, same traces, zero numerics drift."""
+    cfg, params = model
+    plan_cfg = cfg.replace(
+        plan=NumericsPlan.uniform("interp-fused", cfg.n_layers))
+    interp_cfg = cfg.replace(numerics="interp")
+    got = _run(_mk(plan_cfg, params), cfg)
+    want = _run(_mk(interp_cfg, params), cfg)
+    assert got == want
+
+
+def test_uniform_exact_plan_matches_exact_engine(model):
+    cfg, params = model
+    plan_cfg = cfg.replace(plan=NumericsPlan.uniform("exact", cfg.n_layers))
+    got = _run(_mk(plan_cfg, params), cfg)
+    want = _run(_mk(cfg, params), cfg)
+    assert got == want
+
+
+def test_mixed_plan_serves_with_one_library_per_slot(model):
+    cfg, params = model
+    plan = _two_slot_plan(cfg.n_layers)
+    eng = _mk(cfg.replace(plan=plan), params)
+    assert sorted(eng.library) == ["R5", "default"]
+    done = _run(eng, cfg)
+    assert set(done) == {0, 1, 2}
+    assert all(len(out) == MAX_NEW for out in done.values())
+    assert eng.stats["degradations"] == {}
+
+
+def test_mixed_plan_slots_are_live(model):
+    """The per-layer slots are real: R5 tables on layer 0 change the
+    prefill logits relative to the all-default uniform plan (coarser
+    tables, coarser softmax) — if these matched bitwise, the slot
+    threading would be dead code. (Greedy argmax tokens may still agree —
+    interpolation error rarely crosses a decision boundary on the smoke
+    model — so the oracle is the logits, not the token stream.)"""
+    from repro.numerics.ops import get_numerics
+
+    cfg, params = model
+    tokens = np.asarray([_prompts(cfg, (8,))[0]])
+    logits = {}
+    for name, plan in (("mixed", _two_slot_plan(cfg.n_layers)),
+                       ("uniform",
+                        NumericsPlan.uniform("interp-fused", cfg.n_layers))):
+        pcfg = cfg.replace(plan=plan)
+        out, _, _ = tf.prefill(params, tokens, pcfg, get_numerics(pcfg), 16)
+        logits[name] = np.asarray(out)
+    assert not np.array_equal(logits["mixed"], logits["uniform"])
+
+
+def test_poisoned_slot_downgrades_only_its_layers(model):
+    """The per-layer degradation rung: a flipped bit in the R5 slot ROM
+    (read only by layer 0) plus one poisoned tick retires layer 0's sites
+    to exact; layer 1+ keep their fused interp backends, the engine stays
+    fused, and the fault log + degradation stats name the layer."""
+    cfg, params = model
+    plan = _two_slot_plan(cfg.n_layers)
+    eng = _mk(cfg.replace(plan=plan), params)
+    eng.library["R5"] = flip_rom_bit(eng.library["R5"], seed=3)
+    TickFaultInjector("nan", every_n=1, limit=1).install(eng)
+    for i, p in enumerate(_prompts(cfg, (5, 7))):
+        eng.submit(Request(i, p, max_new=MAX_NEW))
+    eng.run()
+    # the poisoned tick failed the in-flight requests (sentinel tripped)...
+    assert len(eng.failed) == 2
+    assert all(r.error == "non_finite_output" for r in eng.failed)
+    # ...and the integrity sweep pinned the corruption on the R5 slot
+    assert eng.stats["rom_faults"] == 1
+    assert eng.stats["degradations"] == {"0": 1}
+    fault = next(f for f in eng.faults if f["reason"] == "rom_integrity")
+    assert fault["action"] == "slots:R5->exact"
+    assert fault["layers"] == ("0",)
+    new_plan = eng.cfg.plan
+    assert new_plan.layers[0].uniform_backend == "exact"
+    assert new_plan.layers[1].uniform_backend == "interp-fused"
+    assert new_plan.rest.uniform_backend == "interp-fused"
+    assert eng.fused is True
+    assert sorted(eng.library) == ["default"]
+    # the degraded engine still serves fresh work end to end
+    for i, p in enumerate(_prompts(cfg, (4, 6), seed=9)):
+        eng.submit(Request(10 + i, p, max_new=3))
+    done = {r.rid: r.out for r in eng.run()}
+    assert set(done) == {10, 11}
+    assert all(len(out) == 3 for out in done.values())
+
+
+def test_plan_engine_serial_rung_guards_interp_sites(model):
+    """Repeated watchdog trips walk the plan-level fused -> serial rung:
+    every interp site drops to the guarded datapath, exact sites stay."""
+    cfg, params = model
+    plan = _two_slot_plan(cfg.n_layers)
+    eng = _mk(cfg.replace(plan=plan), params, slots=1, cache_len=64,
+              watchdog_limit=2)
+    TickFaultInjector("nan", every_n=1, limit=2).install(eng)
+    rng = np.random.default_rng(0)
+    for i in range(4):
+        eng.submit(Request(i, rng.integers(0, cfg.vocab_size, 4).astype(
+            np.int32), max_new=3))
+    eng.run()
+    assert eng.fused is False
+    assert eng.stats["degradations"] == {"engine": 1}
+    for _label, _site, a in eng.cfg.plan.assignments():
+        assert a.backend == "interp-guarded"
+    assert len(eng.finished) == 2
