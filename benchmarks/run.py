@@ -17,14 +17,16 @@
 | roofline_report   | SRoofline table from the dry-run sweep |
 | segment_rom       | non-uniform (ROM v2) vs uniform layout |
 | plan_serve        | per-layer NumericsPlan serving + auto-assigner |
+| serve_sharded     | mesh-sharded + AOT-warmed serving tier |
 
 After a run that produced them, the claim21 + batched_engine rows are
 folded into ``artifacts/bench/BENCH_2.json``, the serve_path rows into
 ``BENCH_3.json``, the fleet_compile rows into ``BENCH_4.json``, and the
 decode_fused rows into ``BENCH_5.json``, the segment_rom rows into
-``BENCH_8.json``, and the plan_serve rows into ``BENCH_9.json`` — the
-per-PR perf snapshots tracked by the CI bench-smoke, segment-smoke and
-plan-smoke jobs. (``BENCH_6.json`` is written by the DSE study CLI,
+``BENCH_8.json``, the plan_serve rows into ``BENCH_9.json``, and the
+serve_sharded rows into ``BENCH_10.json`` — the per-PR perf snapshots
+tracked by the CI bench-smoke, segment-smoke, plan-smoke and shard-smoke
+jobs. (``BENCH_6.json`` is written by the DSE study CLI,
 ``repro.launch.dse --emit-bench``, not by this runner.)
 
 Snapshots go through ``repro.dse.record.update_snapshot``: every file is
@@ -69,6 +71,9 @@ _SNAPSHOTS = {
     "BENCH_9.json": {
         "plan_serve": ("plan_bitwise", "plan_auto"),
     },
+    "BENCH_10.json": {
+        "serve_sharded": ("serve_sharded_offline", "serve_sharded_online"),
+    },
 }
 
 
@@ -112,7 +117,8 @@ def main() -> None:
     from benchmarks import (batched_engine, chaos_serve, claim21,
                             decode_fused, fig3_lub_sweep, fleet_compile,
                             kernels_bench, plan_serve, roofline_report,
-                            scaling, segment_rom, serve_path, table1, table2)
+                            scaling, segment_rom, serve_path, serve_sharded,
+                            table1, table2)
     mods = {
         "table1": table1, "table2": table2, "claim21": claim21,
         "scaling": scaling, "batched_engine": batched_engine,
@@ -121,6 +127,7 @@ def main() -> None:
         "serve_path": serve_path, "decode_fused": decode_fused,
         "chaos_serve": chaos_serve, "roofline_report": roofline_report,
         "segment_rom": segment_rom, "plan_serve": plan_serve,
+        "serve_sharded": serve_sharded,
     }
     only = set(args.only.split(",")) if args.only else None
     if only and not only <= set(mods):

@@ -18,6 +18,30 @@ def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def assert_rom_replicated(*operands: jax.Array) -> None:
+    """SPMD contract of every kernel in this module: the ROM-side operands
+    (coeffs / meta / walk / dp) must be **replicated** on a mesh. The fused
+    kernels gather table rows by local index — a partitioned ROM would turn
+    each gather into a cross-device lookup XLA resolves with collectives (or
+    worse, wrong rows under ``shard_map``). Sharded serving therefore places
+    the library with ``NamedSharding(mesh, P())`` per leaf and calls this
+    once at placement time; it is a no-op for tracers, committed single-
+    device arrays, and non-array leaves.
+    """
+    from jax.sharding import NamedSharding
+
+    for x in operands:
+        if not isinstance(x, jax.Array) or isinstance(x, jax.core.Tracer):
+            continue
+        s = x.sharding
+        if isinstance(s, NamedSharding) and any(
+                p is not None for p in s.spec):
+            raise ValueError(
+                f"interp ROM operand {x.shape} is partitioned "
+                f"({s.spec}); the fused kernels require a replicated ROM "
+                f"— place the library with a fully-replicated sharding")
+
+
 @partial(jax.jit, static_argnames=("eval_bits", "k", "sq_trunc", "lin_trunc",
                                    "degree", "interpret"))
 def _eval_padded(codes, coeffs, *, eval_bits, k, sq_trunc, lin_trunc, degree,

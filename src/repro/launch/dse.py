@@ -135,7 +135,8 @@ def cmd_plan(args) -> int:
 
     cfg = get_smoke_config(args.arch) if args.smoke else get_config(args.arch)
     report = auto_plan(cfg, error_budget=args.budget, target=args.target,
-                       verify=not args.no_verify, seed=args.seed)
+                       verify=not args.no_verify, seed=args.seed,
+                       calibrate=args.calibrate)
     plan = report.plan
     print(f"plan[{report.arch}]: budget {report.error_budget:.3g} -> "
           f"predicted {report.predicted_error:.3g}"
@@ -143,7 +144,8 @@ def cmd_plan(args) -> int:
              if report.measured_error is not None else "")
           + f"; slots {list(plan.slot_keys())}"
           + (f", downgraded {list(report.flipped)}" if report.flipped else ""))
-    print(f"  modeled decode: {report.modeled_tokens_per_s:.1f} tok/s vs "
+    kind = "measured" if report.calibration is not None else "modeled"
+    print(f"  {kind} decode: {report.modeled_tokens_per_s:.1f} tok/s vs "
           f"{report.exact_tokens_per_s:.1f} all-exact "
           f"({report.speedup:.3f}x)")
     if args.save_plan:
@@ -215,6 +217,11 @@ def main(argv: list[str] | None = None) -> int:
     p_pln.add_argument("--no-verify", action="store_true",
                        help="skip the measured end-to-end error check "
                             "(predicted budget only; no table compilation)")
+    p_pln.add_argument("--calibrate", action="store_true",
+                       help="score throughput from wall clock measured on "
+                            "AOT-warmed fused ticks instead of the modeled "
+                            "constants (machine-dependent; stored in the "
+                            "snapshot under report.calibration)")
     p_pln.add_argument("--seed", type=int, default=0)
 
     args = ap.parse_args(argv)

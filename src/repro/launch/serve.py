@@ -75,6 +75,22 @@ def main():
     ap.add_argument("--resume", action="store_true",
                     help="rebuild engine state from --journal instead of "
                          "submitting fresh requests")
+    ap.add_argument("--mesh", default=None, metavar="DxT",
+                    help="serve on a (data, tp) device mesh, e.g. 2x4 "
+                         "(bare N means Nx1); KV pool batch-sharded over "
+                         "data, heads over tp, ROM replicated (DESIGN.md "
+                         "§17). Needs data*tp <= len(jax.devices())")
+    ap.add_argument("--aot-buckets", default=None, metavar="B1,B2,...",
+                    help="AOT warm-up: compile the decode tick and a packed "
+                         "prefill program per bucket at construction; "
+                         "'default' uses the built-in table clipped to "
+                         "--cache-len")
+    ap.add_argument("--max-pack", type=int, default=4,
+                    help="max prompts packed into one bucketed prefill "
+                         "dispatch (power-of-two group sizes)")
+    ap.add_argument("--async-host", action="store_true",
+                    help="detokenize/journal on a background host thread "
+                         "behind a bounded queue (DESIGN.md §17)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     if args.resume and not args.journal:
@@ -108,11 +124,25 @@ def main():
         print(f"saved plan -> {args.save_plan}")
     library = InterpLibrary.load(args.library) if args.library else None
     params = tf.init_params(jax.random.key(args.seed), cfg)
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_serve_mesh, parse_mesh_spec
+
+        data, tp = parse_mesh_spec(args.mesh)
+        mesh = make_serve_mesh(data, tp)
+        print(f"serve mesh: data={data} x tp={tp} "
+              f"({len(jax.devices())} devices visible)")
+    buckets = None
+    if args.aot_buckets:
+        buckets = (True if args.aot_buckets == "default" else
+                   tuple(int(b) for b in args.aot_buckets.split(",")))
     kw = dict(slots=args.slots, cache_len=args.cache_len, library=library,
               fused=not args.serial, horizon=args.horizon,
               max_queue=args.max_queue,
               deadline_s=(args.deadline_ms / 1e3
-                          if args.deadline_ms is not None else None))
+                          if args.deadline_ms is not None else None),
+              mesh=mesh, aot_buckets=buckets, max_pack=args.max_pack,
+              async_host=args.async_host)
     t0 = time.perf_counter()
     if args.resume:
         eng = ServeEngine.resume(args.journal, cfg, params, **kw)

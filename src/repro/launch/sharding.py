@@ -18,16 +18,19 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 _state = threading.local()
 
-# logical axis -> ordered mesh-axis candidates (first divisible one wins)
+# logical axis -> ordered mesh-axis candidates (first divisible one wins).
+# Training meshes name their TP axis "model"; the serving mesh
+# (launch.mesh.make_serve_mesh) names it "tp" — both appear as candidates so
+# the same model annotations resolve on either without a separate rule set.
 DEFAULT_RULES: dict[str, tuple[tuple[str, ...], ...]] = {
     "batch": (("pod", "data"), ("data",)),
     "seq": (("model",),),  # sequence parallelism (long-context fallback)
-    "heads": (("model",),),
-    "kv_heads": (("model",),),
+    "heads": (("model",), ("tp",)),
+    "kv_heads": (("model",), ("tp",)),
     "embed": (),  # activations replicated along d_model by default
-    "mlp": (("model",),),
-    "vocab": (("model",),),
-    "expert": (("model",),),
+    "mlp": (("model",), ("tp",)),
+    "vocab": (("model",), ("tp",)),
+    "expert": (("model",), ("tp",)),
     "kv_seq": (("model",),),  # decode KV cache sequence axis
 }
 
@@ -97,10 +100,22 @@ def named_sharding(names: Sequence[Optional[str]], shape: Sequence[int],
 
 # logical parameter axes; resolution falls back left-to-right per candidate
 PARAM_RULES: dict[str, tuple[tuple[str, ...], ...]] = {
-    "tp": (("model",),),                 # Megatron column/row axis
+    "tp": (("model",), ("tp",)),         # Megatron column/row axis
     "fsdp": (("pod", "data"), ("data",)),  # ZeRO-3 shard of the other big axis
-    "expert": (("model",),),             # expert parallelism
-    "vocab": (("model",),),
+    "expert": (("model",), ("tp",)),     # expert parallelism
+    "vocab": (("model",), ("tp",)),
+}
+
+# Serving-tier parameter rules (DESIGN.md §17): weights tensor-parallel over
+# the serve mesh's "tp" axis, *replicated* over "data". The training "fsdp"
+# rule would ZeRO-shard weights over the data axis and pay a per-layer
+# all-gather on every decode tick — batch slots are the data-parallel unit
+# when serving, not parameters.
+SERVE_PARAM_RULES: dict[str, tuple[tuple[str, ...], ...]] = {
+    "tp": (("tp",), ("model",)),
+    "fsdp": (),
+    "expert": (("tp",), ("model",)),
+    "vocab": (("tp",), ("model",)),
 }
 
 # leaf-name suffix -> logical axes for the *trailing* dims (stacked layer
@@ -205,7 +220,7 @@ def cache_specs_sharding(cache_shapes: dict, cfg, mesh: Mesh) -> dict:
         if stacked:
             names = (None, *names)
         rules = dict(DEFAULT_RULES)
-        rules["tp"] = (("model",),)
+        rules["tp"] = (("model",), ("tp",))
         return NamedSharding(mesh, logical_spec(names, s.shape, mesh, rules))
 
     flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)

@@ -493,6 +493,86 @@ def prefill(p: Params, tokens: jax.Array, cfg, numerics, cache_len: int,
     return logits, caches, cross
 
 
+def mask_cache_tail(caches: Params, true_lens: jax.Array) -> Params:
+    """Mark every cache position row at or past each batch row's true length
+    as *empty* (``pos = -1``, the ``init_cache`` sentinel the attention mask
+    treats as dead).
+
+    A padded (bucketed) prefill writes the pad suffix's K/V rows with live
+    position values — a later decode step would attend to that garbage. The
+    K/V rows themselves can stay: with their ``pos`` slot at -1 the mask
+    assigns them ``NEG`` scores, and decode overwrites row ``p`` in place
+    when the sequence actually reaches position ``p``. Only positional
+    (attention) caches carry a ``pos`` leaf; SSM state is not positional and
+    cannot be padded-prefilled at all (callers gate on the layer plan).
+    """
+    lens = jnp.asarray(true_lens, jnp.int32)
+
+    def one(path, leaf):
+        field = str(getattr(path[-1], "key", path[-1])).lstrip(".")
+        if field != "pos":
+            return leaf
+        # (B, S) — or (L, B, S) for scan-stacked segments; the (B, S)
+        # validity mask broadcasts across the leading layer axis either way
+        valid = jnp.arange(leaf.shape[-1], dtype=jnp.int32) < lens[:, None]
+        return jnp.where(valid, leaf, jnp.int32(-1))
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(caches)
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(path, leaf) for path, leaf in flat])
+
+
+def prefill_padded(p: Params, tokens: jax.Array, true_lens: jax.Array, cfg,
+                   numerics, cache_len: int):
+    """Bucketed prefill: ``tokens`` is (B, S_bucket) with each row right-
+    padded to the bucket length and ``true_lens`` (B,) giving the real
+    prompt lengths. Returns (per-row logits at position ``true_len - 1``
+    (B, 1, V), caches with the pad tails masked dead, None).
+
+    Positions run 0..S_bucket-1 exactly as a full-length prefill would:
+    causality already guarantees every row below its true length computes
+    the same values as an exact-length prefill of that prompt (the pad
+    suffix can only influence *later* positions), so the gathered logits
+    match the exact path and :func:`mask_cache_tail` is the only repair the
+    caches need. Restricted to attention-cache decoder-only configs: SSM
+    state is cumulative (a pad token pollutes it for good), sliding-window
+    caches wrap ``pos % cache_len``, and encoder/frontend extras carry no
+    per-row length — callers fall back to exact-length prefill there.
+    """
+    if cfg.encoder is not None or cfg.frontend is not None:
+        raise ValueError("prefill_padded: encoder/frontend configs must "
+                         "use exact-length prefill")
+    if cfg.sliding_window is not None:
+        raise ValueError("prefill_padded: sliding-window caches wrap; use "
+                         "exact-length prefill")
+    if any(k.mixer == "ssm" for seg in layer_plan(cfg) for k in seg.pattern):
+        raise ValueError("prefill_padded: SSM state is cumulative, a pad "
+                         "suffix corrupts it; use exact-length prefill")
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    h = _embed_inputs(p, tokens, positions, cfg, numerics)
+    h, caches, _ = backbone(p, h, positions, cfg, numerics, mode="prefill",
+                            cache_len=cache_len)
+    idx = (jnp.asarray(true_lens, jnp.int32) - 1)[:, None, None]
+    logits = lm_logits(p["embed"], jnp.take_along_axis(h, idx, axis=1))
+    return logits, mask_cache_tail(caches, true_lens), None
+
+
+def extract_cache_row(cfg, pool: Params, i) -> Params:
+    """Slice batch row ``i`` out of a pooled cache, keeping the batch dim —
+    the inverse of :func:`splice_cache`'s insertion, with the same per-
+    segment batch-axis bookkeeping (scan-stacked segments lead with a layer
+    axis). ``i`` may be a traced index."""
+    out = {}
+    for si, seg in enumerate(layer_plan(cfg)):
+        name = f"seg{si}"
+        ax = 1 if seg.repeat > 1 else 0
+        out[name] = jax.tree.map(
+            lambda x: jax.lax.dynamic_slice_in_dim(x, i, 1, axis=ax),
+            pool[name])
+    return out
+
+
 def decode_step(p: Params, token: jax.Array, pos: jax.Array, caches, cfg,
                 numerics, cross=None):
     """token: (B, 1) int32; pos: scalar int32 (uniform across the batch) or

@@ -158,24 +158,115 @@ def _choose_slot(site: str, cand: dict[str, dict[int, dict[str, Any]]]
 
 
 # ---------------------------------------------------------------------------
-# modeled throughput
+# modeled / measured throughput
 # ---------------------------------------------------------------------------
 
 def modeled_tokens_per_s(plan: NumericsPlan, slot_delays: dict[str, float],
-                         *, horizon: int = 8) -> float:
+                         *, horizon: int = 8,
+                         calibration: dict | None = None) -> float:
     """Modeled decode tokens/sec of a fused plan engine: the amortized
     tick dispatch plus every (layer, site) term. ``slot_delays`` maps slot
-    keys to their summed frontier delay (``_choose_slot``)."""
+    keys to their summed frontier delay (``_choose_slot``).
+
+    With ``calibration`` (from :func:`calibrate_slot_latencies`) the
+    per-site constants come from *measured* wall clock of the AOT-warmed
+    fused tick instead of the modeled ``EXACT_SITE_COST_S`` /
+    ``DELAY_UNIT_S`` proxies: ``calibration["site_cost_s"]`` maps
+    ``"exact"`` and each slot key to a measured per-(layer, site, step)
+    cost. Slots the calibration never measured fall back to the model."""
     from repro.dse.probe import DISPATCH_COST_S, TRANSFER_COST_S
 
+    site_cost = (calibration or {}).get("site_cost_s", {})
     per_step = (DISPATCH_COST_S + TRANSFER_COST_S) / max(1, horizon)
     for _label, _site, a in plan.assignments():
         if a.interp:
-            delay = slot_delays.get(a.slot.key, DEFAULT_DELAY * 2)
-            per_step += delay * DELAY_UNIT_S
+            if a.slot.key in site_cost:
+                per_step += site_cost[a.slot.key]
+            else:
+                delay = slot_delays.get(a.slot.key, DEFAULT_DELAY * 2)
+                per_step += delay * DELAY_UNIT_S
         else:
-            per_step += EXACT_SITE_COST_S
+            per_step += site_cost.get("exact", EXACT_SITE_COST_S)
     return 1.0 / per_step
+
+
+def _measure_per_slot_step_s(cfg_run, params, *, horizon: int, slots: int,
+                             reps: int, seed: int) -> float:
+    """Wall-clock seconds per (slot, decode step) of an AOT-warmed fused
+    engine at full occupancy: construction compiles every tick chunk ahead
+    of time, one untimed ``step()`` settles admissions, then ``reps``
+    timed ticks divide out to the per-slot latency the throughput model
+    wants. Measured, not modeled — results vary run to run; callers that
+    need reproducible scores keep ``calibration=None``."""
+    import time as _time
+
+    import numpy as np
+
+    from repro.serve.engine import Request, ServeEngine
+
+    max_new = (2 + reps) * horizon + 1
+    cache_len = max(32, 8 + max_new, cfg_run.sliding_window or 0)
+    eng = ServeEngine(cfg_run, params, slots=slots, cache_len=cache_len,
+                      horizon=horizon, aot_buckets=(8,))
+    rng = np.random.default_rng(seed)
+    for i in range(slots):
+        eng.submit(Request(i, rng.integers(
+            0, cfg_run.vocab_size, 4).astype(np.int32), max_new=max_new))
+    eng.step()  # admissions + first (untimed) tick
+    n0 = eng.stats["decode_steps"]
+    t0 = _time.perf_counter()
+    for _ in range(reps):
+        eng.step()
+    dt = _time.perf_counter() - t0
+    dn = eng.stats["decode_steps"] - n0
+    return dt / max(1, dn) / slots
+
+
+def calibrate_slot_latencies(cfg, params=None, slots=None, *,
+                             horizon: int = 8, engine_slots: int = 2,
+                             reps: int = 3, seed: int = 0) -> dict[str, Any]:
+    """Measure per-(layer, site, step) decode cost from the AOT-warmed
+    fused tick — the ROADMAP's "feed the assigner *measured* per-slot
+    latencies" note.
+
+    One uniform-exact engine and one uniform interp-fused engine per
+    distinct candidate slot are AOT-warmed and timed at full occupancy;
+    subtracting the modeled amortized dispatch and dividing by the number
+    of (layer, site) terms turns each whole-engine latency into the
+    per-site constant :func:`modeled_tokens_per_s` consumes. The returned
+    dict is JSON-ready and travels in the plan snapshot envelope
+    (``meta.report.calibration``), so a saved plan records the wall clock
+    its scoring used."""
+    import jax
+
+    from repro.dse.probe import DISPATCH_COST_S, TRANSFER_COST_S
+    from repro.models import transformer as tf
+    from repro.plan.schema import plan_for
+
+    if params is None:
+        params = tf.init_params(jax.random.key(seed), cfg)
+    if slots is None:
+        cand = load_frontier_candidates()
+        slots = {s: _choose_slot(s, cand)[0] for s in SITES}
+    n_terms = max(1, cfg.n_layers * len(SITES))
+    overhead = (DISPATCH_COST_S + TRANSFER_COST_S) / max(1, horizon)
+    per_step: dict[str, float] = {}
+    site_cost: dict[str, float] = {}
+
+    def record(key: str, cfg_run) -> None:
+        t = _measure_per_slot_step_s(cfg_run, params, horizon=horizon,
+                                     slots=engine_slots, reps=reps, seed=seed)
+        per_step[key] = t
+        site_cost[key] = max(t - overhead, 1e-12) / n_terms
+
+    record("exact", cfg.replace(numerics="exact", plan=None))
+    for slot in {s.key: s for s in slots.values()}.values():
+        cfg_i = cfg.replace(numerics="exact", plan=plan_for(
+            cfg, backend="interp-fused", slot=slot))
+        record(slot.key, cfg_i)
+    return {"horizon": int(horizon), "engine_slots": int(engine_slots),
+            "reps": int(reps), "n_layers": int(cfg.n_layers),
+            "per_slot_step_s": per_step, "site_cost_s": site_cost}
 
 
 # ---------------------------------------------------------------------------
@@ -196,6 +287,10 @@ class PlanReport:
     site_errors: dict[str, float]
     slot_delays: dict[str, float]
     flipped: tuple  # (layer, site) pairs downgraded to exact, greedy order
+    # measured tick calibration (calibrate_slot_latencies) when the scores
+    # came from wall clock instead of the modeled constants; None keeps
+    # the bit-reproducible modeled scoring
+    calibration: Optional[dict] = None
 
     @property
     def speedup(self) -> float:
@@ -214,6 +309,7 @@ class PlanReport:
             "site_errors": self.site_errors,
             "slot_delays": self.slot_delays,
             "flipped": [list(f) for f in self.flipped],
+            "calibration": self.calibration,
         }
 
 
@@ -259,8 +355,8 @@ def _measure_error(cfg_plan, cfg_exact, params, *, seed: int,
 def auto_plan(cfg, *, error_budget: float, backend: str = "interp-fused",
               frontier_paths=DEFAULT_FRONTIERS, target: str = "asic",
               horizon: int = 8, verify: bool = True, params=None,
-              explorer=None, seed: int = 0, prompt_len: int = 16
-              ) -> PlanReport:
+              explorer=None, seed: int = 0, prompt_len: int = 16,
+              calibrate: bool = False) -> PlanReport:
     """Assign per-layer numerics for ``cfg`` under an output-error budget.
 
     Returns a :class:`PlanReport` whose ``plan`` maximizes modeled decode
@@ -270,6 +366,13 @@ def auto_plan(cfg, *, error_budget: float, backend: str = "interp-fused",
     too. ``rest`` (final norm, projector, encoder glue) stays exact: its
     single evaluation per token is throughput-negligible but sits closest
     to the logits.
+
+    ``calibrate=True`` replaces the modeled throughput constants with
+    wall clock measured from AOT-warmed fused engines
+    (:func:`calibrate_slot_latencies`): the report's tokens/sec columns
+    become machine-dependent measurements (stored under
+    ``report.calibration`` in the snapshot envelope) instead of the
+    bit-reproducible model — never enable it for scores CI regresses.
     """
     n = cfg.n_layers
     errs = site_errors()
@@ -347,13 +450,25 @@ def auto_plan(cfg, *, error_budget: float, backend: str = "interp-fused",
             plan = build(flipped)
         pred = predicted_error(plan, errs)
 
+    calib: Optional[dict] = None
+    if calibrate:
+        import jax
+
+        from repro.models import transformer as tf
+
+        if params is None:
+            params = tf.init_params(jax.random.key(seed), cfg)
+        calib = calibrate_slot_latencies(cfg, params, slots,
+                                         horizon=horizon, seed=seed)
+
     return PlanReport(
         plan=plan, arch=getattr(cfg, "name", "?"),
         error_budget=float(error_budget), predicted_error=pred,
         measured_error=measured,
-        modeled_tokens_per_s=modeled_tokens_per_s(plan, slot_delays,
-                                                  horizon=horizon),
+        modeled_tokens_per_s=modeled_tokens_per_s(
+            plan, slot_delays, horizon=horizon, calibration=calib),
         exact_tokens_per_s=modeled_tokens_per_s(
-            NumericsPlan.uniform("exact", n), slot_delays, horizon=horizon),
+            NumericsPlan.uniform("exact", n), slot_delays, horizon=horizon,
+            calibration=calib),
         site_errors=errs, slot_delays=slot_delays,
-        flipped=tuple(sorted(flipped)))
+        flipped=tuple(sorted(flipped)), calibration=calib)

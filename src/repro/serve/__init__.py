@@ -1,4 +1,6 @@
+from repro.serve.aot import BucketTable  # noqa: F401
 from repro.serve.engine import (Rejected, Request, ServeEngine,  # noqa: F401
                                 make_serve_step)
 from repro.serve.journal import (ReplayState, ServeJournal,  # noqa: F401
                                  ServeJournalCorrupt, load_requests)
+from repro.serve.pipeline import HostPipeline  # noqa: F401

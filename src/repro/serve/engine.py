@@ -42,10 +42,31 @@ Since ISSUE 7 the engine carries the serving-robustness layer
     (:meth:`InterpLibrary.verify_resident`);
   * a crash-recoverable admission/token journal
     (:mod:`repro.serve.journal`) with :meth:`ServeEngine.resume`.
+
+Since ISSUE 10 the engine also carries the sharded, AOT-warmed serving tier
+(DESIGN.md §17):
+
+  * ``mesh=`` — a ``("data", "tp")`` serve mesh
+    (:func:`repro.launch.mesh.make_serve_mesh`): the KV pool is sharded
+    slot-wise over ``data`` and KV-head-wise over ``tp``, weights follow
+    ``sharding.SERVE_PARAM_RULES`` (tensor-parallel, data-replicated), and
+    the library ROM(s) are replicated per device — ROM verification and the
+    degradation ladder operate on the sharded state unchanged;
+  * ``aot_buckets=`` — AOT warm-up (:mod:`repro.serve.aot`): the decode
+    tick and a grid of packed bucketed-prefill admission programs are
+    ``jit.lower().compile()``d at construction, so steady-state serving
+    never pays a compile (``stats["aot_hits"]``/``["aot_misses"]``); short
+    prompts pack several-to-one into a padded prefill dispatch
+    (:func:`repro.models.transformer.prefill_padded`);
+  * ``async_host=`` — the host pipeline (:mod:`repro.serve.pipeline`):
+    detokenize + journal bookkeeping move to a background worker behind a
+    bounded queue; the main thread's per-tick host work shrinks to the (B,)
+    watchdog-sentinel download.
 """
 from __future__ import annotations
 
 import collections
+import contextlib
 import dataclasses
 import time
 from typing import Callable
@@ -56,9 +77,12 @@ import numpy as np
 
 from repro.api import InterpLibrary, LibraryIntegrityError, default_explorer
 from repro.faults.inject import crashpoint
+from repro.launch import sharding as shlib
 from repro.models import transformer as tf
 from repro.numerics.ops import INTERP_BACKENDS, get_numerics
+from repro.serve import aot as aot_mod
 from repro.serve.journal import ServeJournal, load_requests
+from repro.serve.pipeline import HostPipeline
 
 
 def _interp(cfg) -> bool:
@@ -120,6 +144,35 @@ def make_engine_admit(cfg, cache_len: int) -> Callable:
         pos = pos.at[slot].set(prompt.shape[1])
         live = live.at[slot].set(True)
         return first, pool, tok, pos, live
+
+    return admit
+
+
+def make_engine_admit_packed(cfg, cache_len: int, pack: int) -> Callable:
+    """Bucketed admission: prefill ``pack`` right-padded prompts, splice
+    each into its slot, take each greedy first token — ONE dispatch.
+
+    admit(params, prompts (P, S_bucket), true_lens (P,), slots (P,), pool,
+    tok (B,1), pos (B,), live (B,), library=None) -> (firsts (P,), pool,
+    tok, pos, live). ``prompts`` rows are right-padded to the bucket length
+    (pad id 0 — any in-vocab id works, the pad tail is causally invisible
+    and its cache rows are masked dead by ``prefill_padded``); the splice
+    loop unrolls over the static pack size with traced slot indices, so one
+    compiled program serves every slot assignment."""
+
+    def admit(params, prompts, true_lens, slots, pool, tok, pos, live,
+              library=None):
+        numerics = get_numerics(cfg, library, fused=_interp(cfg))
+        logits, cache_p, _ = tf.prefill_padded(params, prompts, true_lens,
+                                               cfg, numerics, cache_len)
+        firsts = jnp.argmax(logits[:, 0], -1).astype(jnp.int32)  # (P,)
+        for i in range(pack):
+            one = tf.extract_cache_row(cfg, cache_p, i)
+            pool = tf.splice_cache(cfg, pool, one, slots[i])
+            tok = tok.at[slots[i], 0].set(firsts[i])
+            pos = pos.at[slots[i]].set(true_lens[i])
+            live = live.at[slots[i]].set(True)
+        return firsts, pool, tok, pos, live
 
     return admit
 
@@ -254,6 +307,31 @@ class ServeEngine:
                          admissions and emitted tokens; see
                          :meth:`resume`.
 
+    Sharded/AOT/async knobs (ISSUE 10, DESIGN.md §17):
+
+    ``mesh``             a ``("data", "tp")`` serve mesh
+                         (:func:`repro.launch.mesh.make_serve_mesh`): KV
+                         pool sharded slot-wise over ``data`` / KV-head-wise
+                         over ``tp``, weights TP-sharded + data-replicated,
+                         ROM(s) replicated, slot-state batch-sharded over
+                         ``data`` (the AOT fixed point). ``None`` = single
+                         host (legacy).
+    ``aot_buckets``      AOT warm-up: ``True`` (default bucket table
+                         clipped to ``cache_len``), a tuple of prefill
+                         bucket lengths, or ``None`` (lazy jit, legacy).
+                         Short prompts pack into one padded bucketed
+                         prefill dispatch; longer-than-every-bucket prompts
+                         fall back to exact-length admission
+                         (``stats["aot_fallbacks"]``).
+    ``max_pack``         largest packed-admission group compiled (grouping
+                         uses powers of two up to ``min(max_pack, slots)``).
+    ``async_host``       move detokenize + journal writes onto a background
+                         worker (:class:`repro.serve.pipeline.HostPipeline`)
+                         behind a bounded queue of ``pipeline_depth``
+                         chunks. ``run()``/``close()`` drain it; while
+                         running, ``Request.out`` trails the device by up to
+                         the queue depth (read it after ``run``).
+
     The degradation ladder: a *fused* engine degrades to the *serial*
     per-op path with domain-guarded numerics (``"interp-guarded"`` — the
     clamp stops a recurrent poison source); a serial engine degrades to
@@ -272,7 +350,9 @@ class ServeEngine:
                  clock: Callable[[], float] = time.monotonic,
                  watchdog_limit: int = 2, max_tick_s: float | None = None,
                  verify_rom_every: int = 0,
-                 journal: str | ServeJournal | None = None):
+                 journal: str | ServeJournal | None = None,
+                 mesh=None, aot_buckets=None, max_pack: int = 4,
+                 async_host: bool = False, pipeline_depth: int = 4):
         self.cfg, self.params = cfg, params
         self.slots, self.cache_len = slots, cache_len
         self.fused, self.horizon = bool(fused), max(1, int(horizon))
@@ -332,7 +412,12 @@ class ServeEngine:
                       "degradations": {} if cfg.plan is not None else 0,
                       "rom_verifies": 0, "rom_faults": 0, "slot_failures": 0,
                       "resumed": 0, "resume_skipped_done": 0,
-                      "resume_replay_steps": 0}
+                      "resume_replay_steps": 0,
+                      "aot_compiles": 0, "aot_hits": 0, "aot_misses": 0,
+                      "aot_reshards": 0, "aot_fallbacks": 0,
+                      "packed_admits": 0,
+                      "packed_requests": 0, "admit_dispatches": 0,
+                      "async_chunks": 0, "async_tokens": 0}
         self.faults: list[dict] = []  # structured fault/degradation log
         self._trips = 0  # watchdog trips since the last degradation
         self.journal = (journal if isinstance(journal, (ServeJournal,
@@ -343,26 +428,158 @@ class ServeEngine:
         self._tok_dev = jnp.zeros((slots, 1), jnp.int32)
         self._pos_dev = jnp.zeros((slots,), jnp.int32)
         self._live_dev = jnp.zeros((slots,), jnp.bool_)
+        # ISSUE 10: sharded / AOT-warmed / async serving tier (DESIGN.md §17)
+        self.mesh = mesh
+        self._mesh_key = aot_mod.mesh_key(mesh)
+        # per-slot emitted-token counts owned by the MAIN thread: retirement
+        # and chunk sizing cannot read len(Request.out) once the async
+        # pipeline extends it from the worker
+        self._emitted = np.zeros(slots, np.int64)
+        # bucketed (padded) prefill packing is only sound for pure
+        # attention-cache decoders: SSM state is cumulative, windowed caches
+        # wrap, encoder/frontend extras carry no per-row length
+        self._packable = (
+            cfg.sliding_window is None and cfg.encoder is None
+            and cfg.frontend is None
+            and not any(k.mixer == "ssm" for seg in tf.layer_plan(cfg)
+                        for k in seg.pattern))
+        if aot_buckets is None:
+            self.aot_buckets = None
+        elif aot_buckets is True:
+            self.aot_buckets = aot_mod.BucketTable.for_cache(cache_len)
+        elif isinstance(aot_buckets, aot_mod.BucketTable):
+            self.aot_buckets = aot_mod.BucketTable.for_cache(
+                cache_len, aot_buckets.buckets)
+        else:
+            self.aot_buckets = aot_mod.BucketTable.for_cache(
+                cache_len, aot_buckets)
+        self._pack_sizes = aot_mod.pack_sizes(max_pack, slots)
+        if async_host and not self.fused:
+            raise ValueError(
+                "async_host=True requires the fused engine: the serial "
+                "per-op path is the synchronous oracle/baseline")
+        self.pipeline = (HostPipeline(journal=self.journal,
+                                      depth=pipeline_depth)
+                         if async_host else None)
+        if mesh is not None:
+            self._shard_state()
         self._build_programs()
+        self._warm_aot()
         # serve-time ROM integrity: the load-time checksum catches a corrupt
         # artifact; this catches the resident copy going bad afterwards
         self.verify_library()
 
+    def _shard_state(self) -> None:
+        """Place params/caches/slot-state/library on the serve mesh: KV pool
+        batch-sharded over ``data`` and KV-head-sharded over ``tp``, weights
+        per ``SERVE_PARAM_RULES`` (TP over ``tp``, replicated over ``data``),
+        the library ROM(s) and the tiny slot-state vectors replicated.
+        Everything downstream — jit traces, AOT lowerings, donation — then
+        carries these shardings."""
+        mesh = self.mesh
+
+        def sds(tree):
+            return jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(jnp.shape(x),
+                                               jnp.asarray(x).dtype), tree)
+
+        pspecs = shlib.param_specs(sds(self.params), mesh,
+                                   rules=shlib.SERVE_PARAM_RULES)
+        self.params = jax.device_put(self.params, pspecs)
+        cspecs = shlib.cache_specs_sharding(sds(self.caches), self.cfg, mesh)
+        self.caches = jax.device_put(self.caches, cspecs)
+        rep = shlib.replicated(mesh)
+        # slot-state vectors go batch-over-data, matching the constraint the
+        # tick/admit programs put on their outputs — warming with the same
+        # placement makes steady state a sharding fixed point (zero
+        # per-tick reshards in stats["aot_reshards"])
+        slot_s = shlib.named_sharding(("batch",), (self.slots,), mesh)
+        tok_s = shlib.named_sharding(("batch", None), (self.slots, 1), mesh)
+        self._tok_dev = jax.device_put(self._tok_dev, tok_s)
+        self._pos_dev = jax.device_put(self._pos_dev, slot_s)
+        self._live_dev = jax.device_put(self._live_dev, slot_s)
+        if self.library is not None:
+            # one ROM replica per device: the fused kernels gather locally,
+            # and verify_resident() checksums the (replicated) leaves as-is
+            self.library = jax.device_put(self.library, rep)
+            from repro.kernels.interp.ops import assert_rom_replicated
+            assert_rom_replicated(*jax.tree.leaves(self.library))
+
+    def _ctx(self):
+        """Logical-axis rule context for every trace/lower on this engine:
+        ``constrain`` reads the thread-local rules at *trace* time, so all
+        dispatch sites wrap themselves in this (a no-op without a mesh)."""
+        if self.mesh is None:
+            return contextlib.nullcontext()
+        return shlib.axis_rules(self.mesh)
+
+    def _aot_key(self, kind: str, *extra) -> tuple:
+        """Executable-cache key: the frozen (cfg [incl. plan], geometry,
+        mesh) tuple plus the program-specific extras."""
+        return (kind, self.cfg, self.cache_len, self.slots, *extra,
+                self._mesh_key)
+
+    def _warm_aot(self) -> None:
+        """AOT warm-up (DESIGN.md §17): compile every steady-state program —
+        the fused tick at each power-of-two chunk size up to ``horizon``,
+        plus a packed bucketed-admission program per (bucket, pack-size)
+        pair — at construction, so no request ever pays a compile.
+        ``stats["aot_compiles"]`` counts fresh compiles (reconstructed
+        engines hit the shared executable cache and count nothing)."""
+        if self.aot_buckets is None:
+            return
+        if not self.fused:
+            raise ValueError("aot_buckets requires the fused engine")
+        rep = (shlib.replicated(self.mesh) if self.mesh is not None
+               else None)
+        with self._ctx():
+            for steps in aot_mod.tick_chunk_sizes(self.horizon):
+                key = self._aot_key("tick", steps)
+                if aot_mod.lookup(key) is None:
+                    self.stats["aot_compiles"] += 1
+                aot_mod.compile_cached(
+                    key, self._tick_jit(steps),
+                    (self.params, self._tok_dev, self._pos_dev,
+                     self._live_dev, self.caches),
+                    {"library": self.library})
+            if not self._packable:
+                return
+            for bucket in self.aot_buckets.buckets:
+                for pk in self._pack_sizes:
+                    prompts = jnp.zeros((pk, bucket), jnp.int32)
+                    lens = jnp.ones((pk,), jnp.int32)
+                    slots0 = jnp.arange(pk, dtype=jnp.int32)
+                    if rep is not None:
+                        prompts, lens, slots0 = (
+                            jax.device_put(x, rep)
+                            for x in (prompts, lens, slots0))
+                    key = self._aot_key("admit_packed", bucket, pk)
+                    if aot_mod.lookup(key) is None:
+                        self.stats["aot_compiles"] += 1
+                    aot_mod.compile_cached(
+                        key, self._packed_jit(pk),
+                        (self.params, prompts, lens, slots0, self.caches,
+                         self._tok_dev, self._pos_dev, self._live_dev),
+                        {"library": self.library})
+
     # -- program construction (re-run on every degradation rung) ----------
     def _build_programs(self) -> None:
-        cfg, cache_len = self.cfg, self.cache_len
-        self._prefill1 = _cached_jit(("prefill", cfg, cache_len),
+        # every key carries the mesh identity: a meshed engine's traces are
+        # made inside its axis-rules context and must never be confused with
+        # a single-host engine's traces for the same frozen cfg
+        cfg, cache_len, mk = self.cfg, self.cache_len, self._mesh_key
+        self._prefill1 = _cached_jit(("prefill", cfg, cache_len, mk),
                                      lambda: make_prefill(cfg, cache_len))
-        self._decode = _cached_jit(("decode", cfg),
+        self._decode = _cached_jit(("decode", cfg, mk),
                                    lambda: make_serve_step(cfg))
         # fused-numerics twins of prefill/decode for resume replay: the
         # teacher-forced rebuild must re-run the exact float path the fused
         # admission/tick ran pre-crash (DESIGN.md §14)
         self._prefill_fnum = _cached_jit(
-            ("prefill-fnum", cfg, cache_len),
+            ("prefill-fnum", cfg, cache_len, mk),
             lambda: make_prefill(cfg, cache_len, fused=_interp(cfg)))
         self._decode_fnum = _cached_jit(
-            ("decode-fnum", cfg),
+            ("decode-fnum", cfg, mk),
             lambda: make_serve_step(cfg, fused=_interp(cfg)))
         # serial-path argmax + watchdog sentinel in one program: same
         # dispatch/transfer budget as the bare argmax it replaces
@@ -373,14 +590,14 @@ class ServeEngine:
                 jnp.all(jnp.isfinite(logits[:, 0]), axis=-1))))
         # admission splice: donate the pool so slot insertion is in place
         self._splice = _cached_jit(
-            ("splice", cfg),
+            ("splice", cfg, mk),
             lambda: (lambda pool, one, slot:
                      tf.splice_cache(cfg, pool, one, slot)),
             donate_argnums=(0,))
         # fused admission: prefill + splice + first-token argmax + slot
         # state, one dispatch, pool and slot-state buffers donated
         self._admit_fused = _cached_jit(
-            ("admit", cfg, cache_len),
+            ("admit", cfg, cache_len, mk),
             lambda: make_engine_admit(cfg, cache_len),
             donate_argnums=(2, 4, 5, 6))
         # retire flips one slot's liveness (traced index: one trace total,
@@ -397,13 +614,57 @@ class ServeEngine:
                 live.at[slot].set(True))),
             donate_argnums=(0, 1, 2))
 
-    def _tick_fn(self, steps: int) -> Callable:
-        """Jitted fused tick for a chunk of ``steps`` decode steps; caches
-        and slot-state buffers (token/pos) are donated — decode updates the
-        pool in place every tick instead of copying it."""
-        return _cached_jit(("tick", self.cfg, steps),
+    def _tick_jit(self, steps: int) -> Callable:
+        """The lazily-traced jitted tick (also what AOT warm-up lowers)."""
+        return _cached_jit(("tick", self.cfg, steps, self._mesh_key),
                            lambda: make_engine_tick(self.cfg, steps),
                            donate_argnums=(1, 2, 4))
+
+    def _packed_jit(self, pack: int) -> Callable:
+        """Jitted packed bucketed admission for a static pack size (the
+        bucket length is a shape, not a key — one jit object, one trace per
+        bucket); pool + slot-state donated like the single admit."""
+        return _cached_jit(
+            ("admit_packed", self.cfg, self.cache_len, pack, self._mesh_key),
+            lambda: make_engine_admit_packed(self.cfg, self.cache_len, pack),
+            donate_argnums=(4, 5, 6, 7))
+
+    def _tick_fn(self, steps: int) -> Callable:
+        """Fused tick for a chunk of ``steps`` decode steps; caches and
+        slot-state buffers (token/pos) are donated — decode updates the pool
+        in place every tick instead of copying it. An AOT-warmed engine
+        returns the precompiled executable (``stats["aot_hits"]``); a cache
+        miss (post-degradation cfg, oversized chunk) falls back to the lazy
+        jit and is counted."""
+        jit_fn = self._tick_jit(steps)
+        if self.aot_buckets is None:
+            return jit_fn
+        exe = aot_mod.lookup(self._aot_key("tick", steps))
+        if exe is not None:
+            self.stats["aot_hits"] += 1
+            return self._exe_call(exe)
+        self.stats["aot_misses"] += 1
+        return jit_fn
+
+    def _packed_fn(self, bucket: int, pack: int) -> Callable:
+        jit_fn = self._packed_jit(pack)
+        exe = aot_mod.lookup(self._aot_key("admit_packed", bucket, pack))
+        if exe is not None:
+            self.stats["aot_hits"] += 1
+            return self._exe_call(exe)
+        self.stats["aot_misses"] += 1
+        return jit_fn
+
+    def _exe_call(self, exe) -> Callable:
+        """Wrap a compiled executable so mismatched input shardings get
+        re-placed instead of raising (see :func:`repro.serve.aot
+        .call_matched`); re-placements are counted in
+        ``stats["aot_reshards"]``."""
+        def call(*args, **kwargs):
+            out, moved = aot_mod.call_matched(exe, args, kwargs)
+            self.stats["aot_reshards"] += moved
+            return out
+        return call
 
     # -- fault handling: integrity, watchdog, degradation ladder ----------
     def _rung(self) -> str:
@@ -510,6 +771,10 @@ class ServeEngine:
         plan = self.cfg.plan
         if to == "serial":
             self.fused = False
+            if self.pipeline is not None:
+                # the async feeder only exists for the fused tick; the
+                # serial rung is the synchronous oracle — drain and drop it
+                self.close()
             if plan is not None:
                 self.cfg = self.cfg.replace(plan=plan.degrade_serial())
             elif _interp(self.cfg) and self.cfg.numerics != "interp-guarded":
@@ -539,6 +804,20 @@ class ServeEngine:
         if still_ok and self._trips >= self.watchdog_limit:
             self._degrade(f"repeated_{reason}")
 
+    def _journal(self, method: str, *args, crash: str | None = None) -> None:
+        """One journal write. Async engines route it through the pipeline's
+        FIFO so it lands *after* every already-queued token emit (the
+        single-writer ordering :meth:`resume` depends on); sync engines
+        write-and-fsync inline and hit the named crashpoint."""
+        if self.journal is None:
+            return
+        if self.pipeline is not None:
+            self.pipeline.journal_call(method, *args)
+            return
+        getattr(self.journal, method)(*args)
+        if crash is not None:
+            crashpoint(crash)
+
     def _fail_slot(self, s: int, error: str) -> None:
         """Retire a poisoned/expired slot with a structured error."""
         r = self.req[s]
@@ -550,11 +829,10 @@ class ServeEngine:
         self.req[s] = None
         self.cur[s] = -1
         self.pos[s] = 0
+        self._emitted[s] = 0
         if self.fused:
             self._live_dev = self._set_live(self._live_dev, s, False)
-        if self.journal is not None:
-            self.journal.fail(r.rid, error)
-            crashpoint("serve.fail.journaled")
+        self._journal("fail", r.rid, error, crash="serve.fail.journaled")
 
     # -- admission control -------------------------------------------------
     def submit(self, req: Request):
@@ -613,57 +891,164 @@ class ServeEngine:
             self.stats["rejected"] += 1
             raise Rejected("deadline",
                            f"request {req.rid}: already past its deadline")
-        if self.journal is not None:
-            self.journal.submit(req.rid, req.prompt, req.max_new,
-                                req.deadline)
-            crashpoint("serve.submit.journaled")
+        self._journal("submit", req.rid, req.prompt, req.max_new,
+                      req.deadline, crash="serve.submit.journaled")
         self.queue.append(req)
 
     def _expired(self, r: Request) -> bool:
         return r.deadline is not None and self.clock() > r.deadline
 
     def _admit(self):
+        if (self.aot_buckets is not None and self.fused
+                and self._packable):
+            self._admit_bucketed()
+        else:
+            self._admit_legacy()
+
+    def _fail_expired_queued(self, r: Request) -> None:
+        """Expired while queued: fail without burning a prefill."""
+        r.error = "deadline_exceeded"
+        self.failed.append(r)
+        self.stats["expired"] += 1
+        self._journal("fail", r.rid, r.error)
+
+    def _admit_legacy(self):
         for s in range(self.slots):
             while self.req[s] is None and self.queue:
                 r = self.queue.popleft()
                 if self._expired(r):
-                    # expired while queued: fail it without burning a
-                    # prefill, and keep draining into this slot
-                    r.error = "deadline_exceeded"
-                    self.failed.append(r)
-                    self.stats["expired"] += 1
-                    if self.journal is not None:
-                        self.journal.fail(r.rid, r.error)
+                    # keep draining into this slot
+                    self._fail_expired_queued(r)
                     continue
                 if r.out:  # resumed mid-stream: rebuild, emit nothing
                     self._admit_replay(r, s)
                     break
-                if self.fused:
-                    # one dispatch: prefill + in-place pool splice + greedy
-                    # first token + slot-state update (donated buffers)
-                    (first, self.caches, self._tok_dev, self._pos_dev,
-                     self._live_dev) = self._admit_fused(
-                        self.params, r.prompt[None, :], self.caches, s,
-                        self._tok_dev, self._pos_dev, self._live_dev,
-                        library=self.library)
-                    tok = int(first)
-                else:
-                    logits, cache1, _ = self._prefill1(
-                        self.params, r.prompt[None, :], library=self.library)
-                    # splice this request's cache rows into slot s of the
-                    # pool (batch axis differs per segment: tf.splice_cache
-                    # knows the stacked-layer layout); the pool buffer is
-                    # donated — the insertion is in place, not a pool copy
-                    self.caches = self._splice(self.caches, cache1, s)
-                    tok = int(jnp.argmax(logits[0, -1]))
-                r.out.append(tok)
-                self.req[s] = r
-                self.pos[s] = len(r.prompt)
-                self.cur[s] = tok
-                if self.journal is not None:
-                    self.journal.emit(r.rid, [tok])
-                    crashpoint("serve.admit.emitted")
+                self._admit_one(r, s)
                 break
+
+    def _admit_one(self, r: Request, s: int):
+        """Exact-length admission of one request into slot ``s`` (the PR-5
+        path; also the bucketed path's fallback for prompts longer than
+        every bucket)."""
+        self.stats["admit_dispatches"] += 1
+        if self.fused:
+            # one dispatch: prefill + in-place pool splice + greedy
+            # first token + slot-state update (donated buffers)
+            with self._ctx():
+                (first, self.caches, self._tok_dev, self._pos_dev,
+                 self._live_dev) = self._admit_fused(
+                    self.params, r.prompt[None, :], self.caches, s,
+                    self._tok_dev, self._pos_dev, self._live_dev,
+                    library=self.library)
+            self.req[s] = r
+            self.pos[s] = len(r.prompt)
+            self._emitted[s] = 1
+            if self.pipeline is not None:
+                # first-token download + journal emit happen on the worker,
+                # in order with every other journal write
+                self.pipeline.emit_admit(((0, r),), first)
+                return
+            tok = int(first)
+        else:
+            with self._ctx():
+                logits, cache1, _ = self._prefill1(
+                    self.params, r.prompt[None, :], library=self.library)
+                # splice this request's cache rows into slot s of the
+                # pool (batch axis differs per segment: tf.splice_cache
+                # knows the stacked-layer layout); the pool buffer is
+                # donated — the insertion is in place, not a pool copy
+                self.caches = self._splice(self.caches, cache1, s)
+                tok = int(jnp.argmax(logits[0, -1]))
+            self.req[s] = r
+            self.pos[s] = len(r.prompt)
+            self._emitted[s] = 1
+        r.out.append(tok)
+        self.cur[s] = tok
+        if self.journal is not None:
+            self.journal.emit(r.rid, [tok])
+            crashpoint("serve.admit.emitted")
+
+    def _admit_bucketed(self):
+        """Bucketed admission (DESIGN.md §17): drain the queue front into
+        free slots in ascending order exactly like the legacy loop — the
+        (request, slot) mapping is fixed *before* grouping, so packing never
+        reorders admissions — then group same-bucket admissions and dispatch
+        each group as one padded packed prefill."""
+        free = [s for s in range(self.slots) if self.req[s] is None]
+        packed: list[tuple[Request, int, int]] = []
+        while free and self.queue:
+            r = self.queue.popleft()
+            if self._expired(r):
+                self._fail_expired_queued(r)
+                continue
+            s = free.pop(0)
+            if r.out:  # resumed mid-stream: rebuild, emit nothing
+                self._admit_replay(r, s)
+                continue
+            b = self.aot_buckets.bucket_for(len(r.prompt))
+            if b is None:
+                # longer than every bucket: exact-length compile, counted
+                self.stats["aot_fallbacks"] += 1
+                self._admit_one(r, s)
+                continue
+            packed.append((r, s, b))
+        by_bucket: dict[int, list] = {}
+        for r, s, b in packed:
+            by_bucket.setdefault(b, []).append((r, s))
+        for b in sorted(by_bucket):
+            group = by_bucket[b]
+            while group:
+                pk = 1
+                for cand in self._pack_sizes:
+                    if cand <= len(group):
+                        pk = cand
+                sub, group = group[:pk], group[pk:]
+                self._admit_packed(sub, b)
+
+    def _admit_packed(self, sub: list, bucket: int) -> None:
+        """One padded prefill dispatch admitting ``len(sub)`` requests."""
+        pk = len(sub)
+        prompts = np.zeros((pk, bucket), np.int32)
+        lens = np.zeros(pk, np.int32)
+        slot_ix = np.zeros(pk, np.int32)
+        for i, (r, s) in enumerate(sub):
+            n = len(r.prompt)
+            prompts[i, :n] = r.prompt
+            lens[i] = n
+            slot_ix[i] = s
+        fn = self._packed_fn(bucket, pk)
+        args = (jnp.asarray(prompts), jnp.asarray(lens),
+                jnp.asarray(slot_ix))
+        if self.mesh is not None:
+            # AOT executables pin input shardings: host-built admission
+            # arrays must arrive committed-replicated like the lowering saw
+            rep = shlib.replicated(self.mesh)
+            args = tuple(jax.device_put(a, rep) for a in args)
+        with self._ctx():
+            (firsts, self.caches, self._tok_dev, self._pos_dev,
+             self._live_dev) = fn(
+                self.params, *args, self.caches, self._tok_dev,
+                self._pos_dev, self._live_dev, library=self.library)
+        self.stats["admit_dispatches"] += 1
+        self.stats["packed_admits"] += 1
+        self.stats["packed_requests"] += pk
+        for i, (r, s) in enumerate(sub):
+            self.req[s] = r
+            self.pos[s] = len(r.prompt)
+            self._emitted[s] = 1
+        if self.pipeline is not None:
+            self.pipeline.emit_admit(
+                tuple((i, r) for i, (r, _s) in enumerate(sub)), firsts)
+            return
+        vals = np.asarray(jax.device_get(firsts)).reshape(-1)
+        for i, (r, s) in enumerate(sub):
+            tok = int(vals[i])
+            r.out.append(tok)
+            self.cur[s] = tok
+            if self.journal is not None:
+                self.journal.emit(r.rid, [tok])
+        if self.journal is not None:
+            crashpoint("serve.admit.emitted")
 
     def _admit_replay(self, r: Request, s: int):
         """Re-admit a journal-recovered in-flight request at its recorded
@@ -676,19 +1061,21 @@ class ServeEngine:
         and nothing is re-journaled."""
         prefill = self._prefill_fnum if self.fused else self._prefill1
         decode = self._decode_fnum if self.fused else self._decode
-        _logits, cache1, _ = prefill(self.params, r.prompt[None, :],
-                                     library=self.library)
-        start = len(r.prompt)
-        for i, t in enumerate(r.out[:-1]):
-            tok1 = jnp.asarray([[t]], jnp.int32)
-            pos1 = jnp.asarray([start + i], jnp.int32)
-            _logits, cache1 = decode(self.params, tok1, pos1, cache1,
-                                     library=self.library)
-            self.stats["resume_replay_steps"] += 1
-        self.caches = self._splice(self.caches, cache1, s)
+        with self._ctx():
+            _logits, cache1, _ = prefill(self.params, r.prompt[None, :],
+                                         library=self.library)
+            start = len(r.prompt)
+            for i, t in enumerate(r.out[:-1]):
+                tok1 = jnp.asarray([[t]], jnp.int32)
+                pos1 = jnp.asarray([start + i], jnp.int32)
+                _logits, cache1 = decode(self.params, tok1, pos1, cache1,
+                                         library=self.library)
+                self.stats["resume_replay_steps"] += 1
+            self.caches = self._splice(self.caches, cache1, s)
         self.req[s] = r
         self.pos[s] = start + len(r.out) - 1
         self.cur[s] = r.out[-1]
+        self._emitted[s] = len(r.out)
         if self.fused:
             (self._tok_dev, self._pos_dev, self._live_dev) = self._set_slot(
                 self._tok_dev, self._pos_dev, self._live_dev, s,
@@ -699,17 +1086,18 @@ class ServeEngine:
         for s, r in enumerate(self.req):
             if r is None:
                 continue
-            if len(r.out) >= r.max_new:
+            # the main-thread emitted count, NOT len(r.out): the async
+            # pipeline extends r.out from the worker thread
+            if self._emitted[s] >= r.max_new:
                 r.done = True
                 self.finished.append(r)
                 self.req[s] = None
                 self.cur[s] = -1
                 self.pos[s] = 0
+                self._emitted[s] = 0
                 if self.fused:
                     self._live_dev = self._set_live(self._live_dev, s, False)
-                if self.journal is not None:
-                    self.journal.done(r.rid)
-                    crashpoint("serve.retire.journaled")
+                self._journal("done", r.rid, crash="serve.retire.journaled")
             elif self._expired(r):
                 self.stats["expired"] += 1
                 self._fail_slot(s, "deadline_exceeded")
@@ -734,46 +1122,73 @@ class ServeEngine:
         decodes once before retiring. The default ``step()`` performs
         exactly one decode step either way.
         """
+        if self.pipeline is not None:
+            self.pipeline.check()
         if (self.verify_rom_every
                 and self.stats["ticks"] % self.verify_rom_every == 0):
             self.verify_library()
         self._admit()
         if all(r is None for r in self.req):
+            if self.pipeline is not None:
+                # idle: everything queued behind us is the backlog — drain
+                # so callers observing Request.out see the final state
+                self._drain_pipeline()
             return False
         if not self.fused:
             return self._step_serial()
-        remaining = min(r.max_new - len(r.out)
-                        for r in self.req if r is not None)
+        remaining = min(r.max_new - int(self._emitted[s])
+                        for s, r in enumerate(self.req) if r is not None)
         steps = max(1, min(max_steps, remaining))
         # quantize to the largest power of two <= steps: retirement tails
         # then reuse log2(horizon)+1 compiled tick programs (1, 2, 4, ...)
         # instead of jitting one decode-scan per distinct tail length
         steps = 1 << (steps.bit_length() - 1)
         t0 = self.clock()
-        (toks, self._tok_dev, self._pos_dev, ok_dev,
-         self.caches) = self._tick_fn(steps)(
-            self.params, self._tok_dev, self._pos_dev, self._live_dev,
-            self.caches, library=self.library)
+        with self._ctx():
+            (toks, self._tok_dev, self._pos_dev, ok_dev,
+             self.caches) = self._tick_fn(steps)(
+                self.params, self._tok_dev, self._pos_dev, self._live_dev,
+                self.caches, library=self.library)
         self.stats["dispatches"] += 1  # the tick program
-        # ONE device->host round-trip: the (steps, B) token block and the
-        # (B,) watchdog sentinel come down together
-        out, ok = jax.device_get((toks, ok_dev))
-        self.stats["transfers"] += 1
-        self.stats["ticks"] += 1
-        self.stats["decode_steps"] += steps
-        tick_s = self.clock() - t0
-        poisoned = [s for s, r in enumerate(self.req)
-                    if r is not None and not bool(ok[s])]
-        for s, r in enumerate(self.req):
-            if r is not None and s not in poisoned:
-                fresh = [int(t) for t in out[:, s]]
-                r.out.extend(fresh)
-                self.cur[s] = int(out[-1, s])
+        if self.pipeline is not None:
+            # async host path: only the (B,) watchdog sentinel comes down
+            # synchronously (poison detection timing unchanged); the token
+            # block download + detokenize + journal emits ride the worker
+            ok = np.asarray(jax.device_get(ok_dev))
+            self.stats["transfers"] += 1
+            self.stats["ticks"] += 1
+            self.stats["decode_steps"] += steps
+            tick_s = self.clock() - t0
+            poisoned = [s for s, r in enumerate(self.req)
+                        if r is not None and not bool(ok[s])]
+            alive = tuple((s, r) for s, r in enumerate(self.req)
+                          if r is not None and s not in poisoned)
+            if alive:
+                self.pipeline.emit_chunk(alive, toks)
+            for s, _r in alive:
+                self._emitted[s] += steps
                 self.pos[s] += steps
-                if self.journal is not None:
-                    self.journal.emit(r.rid, fresh)
-        if self.journal is not None:
-            crashpoint("serve.tick.emitted")
+        else:
+            # ONE device->host round-trip: the (steps, B) token block and
+            # the (B,) watchdog sentinel come down together
+            out, ok = jax.device_get((toks, ok_dev))
+            self.stats["transfers"] += 1
+            self.stats["ticks"] += 1
+            self.stats["decode_steps"] += steps
+            tick_s = self.clock() - t0
+            poisoned = [s for s, r in enumerate(self.req)
+                        if r is not None and not bool(ok[s])]
+            for s, r in enumerate(self.req):
+                if r is not None and s not in poisoned:
+                    fresh = [int(t) for t in out[:, s]]
+                    r.out.extend(fresh)
+                    self.cur[s] = int(out[-1, s])
+                    self.pos[s] += steps
+                    self._emitted[s] += steps
+                    if self.journal is not None:
+                        self.journal.emit(r.rid, fresh)
+            if self.journal is not None:
+                crashpoint("serve.tick.emitted")
         for s in poisoned:
             # a poisoned slot is retired with a structured error — its
             # chunk of garbage tokens is never streamed or journaled
@@ -796,8 +1211,9 @@ class ServeEngine:
         pos = jnp.asarray(self.pos, jnp.int32)
         self.stats["transfers"] += 2  # token + position upload
         t0 = self.clock()
-        logits, self.caches = self._decode(self.params, toks, pos,
-                                           self.caches, library=self.library)
+        with self._ctx():
+            logits, self.caches = self._decode(
+                self.params, toks, pos, self.caches, library=self.library)
         self.stats["dispatches"] += 1  # decode program
         nxt_dev, ok_dev = self._argmax_ok(logits)
         self.stats["dispatches"] += 1  # argmax+sentinel program
@@ -813,6 +1229,7 @@ class ServeEngine:
                 r.out.append(int(nxt[s]))
                 self.cur[s] = int(nxt[s])
                 self.pos[s] += 1
+                self._emitted[s] += 1
                 if self.journal is not None:
                     self.journal.emit(r.rid, [int(nxt[s])])
         if self.journal is not None:
@@ -833,7 +1250,32 @@ class ServeEngine:
         while (self.queue or any(r is not None for r in self.req)) and t < max_ticks:
             self.step(self.horizon)
             t += 1
+        self._drain_pipeline()
         return self.finished
+
+    # -- async host pipeline lifecycle -------------------------------------
+    def _drain_pipeline(self) -> None:
+        """Block until the background worker has processed everything queued
+        so far, fold its counters into ``self.stats``, and surface any
+        worker exception. After this, every finished request's ``out`` holds
+        its full token stream."""
+        if self.pipeline is None:
+            return
+        self.pipeline.flush()
+        got = self.pipeline.drain_stats()
+        self.stats["transfers"] += got.get("transfers", 0)
+        self.stats["async_chunks"] += got.get("chunks", 0)
+        self.stats["async_tokens"] += got.get("tokens", 0)
+
+    def close(self) -> None:
+        """Clean shutdown of the async host pipeline (sync engines: no-op).
+        The engine stays usable afterwards — it falls back to synchronous
+        host bookkeeping."""
+        if self.pipeline is None:
+            return
+        self._drain_pipeline()
+        self.pipeline.close()
+        self.pipeline = None
 
     # -- crash recovery ----------------------------------------------------
     @classmethod

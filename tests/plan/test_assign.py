@@ -118,3 +118,40 @@ def test_auto_plan_verified_meets_budget_end_to_end():
     assert rep.predicted_error <= rep.error_budget
     assert rep.plan.uses_interp
     assert rep.speedup > 1.0
+
+
+def test_calibration_measures_aot_tick_and_feeds_throughput():
+    """ISSUE 10 satellite: measured (not modeled) per-slot decode latencies
+    from the AOT-warmed tick. The calibration dict carries a per-step cost
+    per numerics slot plus the derived per-site constants, the throughput
+    model consumes them, and the report stores them for the snapshot
+    envelope — while calibration=None keeps the bit-reproducible modeled
+    scoring unchanged."""
+    from repro.plan.assign import calibrate_slot_latencies
+
+    cfg = get_smoke_config("yi_6b")
+    params = tf.init_params(jax.random.key(0), cfg)
+    calib = calibrate_slot_latencies(cfg, params, horizon=4, reps=1)
+    assert "exact" in calib["site_cost_s"]
+    assert len(calib["site_cost_s"]) >= 2  # exact + at least one slot
+    assert all(v > 0 for v in calib["site_cost_s"].values())
+    assert all(v > 0 for v in calib["per_slot_step_s"].values())
+
+    plan = NumericsPlan.uniform("exact", cfg.n_layers)
+    modeled = modeled_tokens_per_s(plan, {}, horizon=4)
+    measured = modeled_tokens_per_s(plan, {}, horizon=4, calibration=calib)
+    assert measured != modeled  # wall clock actually displaced the model
+    from repro.dse.probe import DISPATCH_COST_S, TRANSFER_COST_S
+
+    n_terms = len(list(plan.assignments()))  # layers x sites, plus rest
+    expected = 1.0 / ((DISPATCH_COST_S + TRANSFER_COST_S) / 4
+                      + n_terms * calib["site_cost_s"]["exact"])
+    assert measured == pytest.approx(expected)
+
+    rep = auto_plan(cfg, error_budget=0.05, verify=False, calibrate=True,
+                    params=params, horizon=4)
+    assert rep.calibration is not None
+    assert rep.to_dict()["calibration"] == rep.calibration
+    rep_modeled = auto_plan(cfg, error_budget=0.05, verify=False)
+    assert rep_modeled.calibration is None
+    assert rep_modeled.plan == rep.plan  # calibration rescores, never reflips

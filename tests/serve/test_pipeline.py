@@ -1,0 +1,155 @@
+"""Async host pipeline (DESIGN.md §17): tokens and journal bitwise equal
+to the synchronous engine, ordered fsync'd writes, watchdog semantics
+preserved, clean shutdown, and worker-error surfacing."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import get_smoke_config
+from repro.models import transformer as tf
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.journal import load_requests
+from repro.serve.pipeline import HostPipeline
+
+MAX_NEW = 6
+CACHE = 48
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_smoke_config("yi_6b")
+    params = tf.init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(9)
+    prompts = [rng.integers(0, cfg.vocab_size, n).astype(np.int32)
+               for n in (5, 11, 3, 16, 9, 2)]
+    return cfg, params, prompts
+
+
+def _serve(cfg, params, prompts, **kw):
+    eng = ServeEngine(cfg, params, slots=3, cache_len=CACHE, **kw)
+    for i, p in enumerate(prompts):
+        eng.submit(Request(i, p, max_new=MAX_NEW))
+    out = {r.rid: r.out for r in eng.run()}
+    eng.close()
+    return out, eng
+
+
+def test_async_tokens_match_sync(setup):
+    cfg, params, prompts = setup
+    ref, _ = _serve(cfg, params, prompts)
+    got, eng = _serve(cfg, params, prompts, async_host=True)
+    assert got == ref
+    assert eng.stats["async_tokens"] > 0
+    assert eng.pipeline is None  # close() tore it down
+
+
+def test_async_with_buckets_matches_sync(setup):
+    cfg, params, prompts = setup
+    ref, _ = _serve(cfg, params, prompts)
+    got, eng = _serve(cfg, params, prompts, async_host=True,
+                      aot_buckets=(8, 16))
+    assert got == ref
+    assert eng.stats["aot_misses"] == 0
+
+
+def test_async_journal_replays_like_sync(setup, tmp_path):
+    """The worker thread carries every journal write in queue order, so an
+    async engine's journal is byte-for-byte replayable by the same resume
+    path the sync engine uses — and holds the same durable streams."""
+    cfg, params, prompts = setup
+    sj, aj = str(tmp_path / "sync.jnl"), str(tmp_path / "async.jnl")
+    ref, _ = _serve(cfg, params, prompts, journal=sj)
+    got, _ = _serve(cfg, params, prompts, journal=aj, async_host=True)
+    assert got == ref
+    sync_states, async_states = load_requests(sj), load_requests(aj)
+    assert set(sync_states) == set(async_states)
+    for rid, st in sync_states.items():
+        ast = async_states[rid]
+        assert ast.out == st.out, f"request {rid} journal diverged"
+        assert ast.in_flight == st.in_flight  # all done-marked
+    res = ServeEngine.resume(aj, cfg, params, slots=3, cache_len=CACHE)
+    assert res.stats["resume_skipped_done"] == len(prompts)
+
+
+def test_async_requires_fused(setup):
+    cfg, params, _ = setup
+    with pytest.raises(ValueError, match="fused"):
+        ServeEngine(cfg, params, slots=2, cache_len=CACHE, fused=False,
+                    async_host=True)
+
+
+def test_async_watchdog_still_fails_poisoned_slots(setup):
+    """The ok-sentinel download stays synchronous on the tick path: a NaN
+    fault trips the per-slot watchdog with async bookkeeping on, and the
+    poisoned chunk is never handed to the worker (no garbage tokens)."""
+    from repro.faults import TickFaultInjector
+
+    cfg, params, prompts = setup
+    eng = ServeEngine(cfg, params, slots=2, cache_len=CACHE,
+                      async_host=True, watchdog_limit=100)
+    inj = TickFaultInjector("nan", every_n=1, limit=1).install(eng)
+    for i, p in enumerate(prompts[:2]):
+        eng.submit(Request(i, p, max_new=MAX_NEW))
+    eng.run()
+    eng.close()
+    assert inj.injected == 1
+    assert eng.stats["watchdog_trips"] == 1
+    assert len(eng.failed) == 2
+    for r in eng.failed:
+        assert r.error == "non_finite_output"
+        assert len(r.out) == 1  # admission token only, no garbage chunk
+
+
+def test_degrade_to_serial_closes_pipeline(setup):
+    """The serial rung has no fused tick for the worker to trail — the
+    ladder drains and drops the pipeline before flipping, and the engine
+    finishes the surviving requests synchronously."""
+    from repro.faults import TickFaultInjector
+
+    cfg, params, prompts = setup
+    eng = ServeEngine(cfg, params, slots=1, cache_len=CACHE,
+                      async_host=True, watchdog_limit=2)
+    TickFaultInjector("nan", every_n=1, limit=2).install(eng)
+    for i, p in enumerate(prompts[:4]):
+        eng.submit(Request(i, p, max_new=3))
+    eng.run()
+    assert eng.stats["degradations"] == 1
+    assert eng.fused is False
+    assert eng.pipeline is None  # closed before the serial rung took over
+    assert len(eng.finished) == 2
+    assert all(len(r.out) == 3 for r in eng.finished)
+
+
+def test_pipeline_surfaces_worker_errors():
+    class BoomJournal:
+        def emit(self, rid, toks):
+            raise RuntimeError("disk full")
+
+    pipe = HostPipeline(journal=BoomJournal())
+    req = Request(0, np.zeros(1, np.int32), max_new=4)
+    pipe.emit_admit(((0, req),), np.asarray([7], np.int32))
+    with pytest.raises(RuntimeError, match="disk full"):
+        pipe.flush()
+    pipe.close()
+
+
+def test_pipeline_close_is_idempotent_and_rejects_after():
+    pipe = HostPipeline()
+    pipe.close()
+    pipe.close()
+    req = Request(0, np.zeros(1, np.int32), max_new=1)
+    with pytest.raises(RuntimeError, match="closed"):
+        pipe.emit_admit(((0, req),), np.asarray([1], np.int32))
+
+
+def test_pipeline_backpressure_bounded_queue():
+    pipe = HostPipeline(depth=2)
+    req = Request(0, np.zeros(1, np.int32), max_new=64)
+    for _ in range(16):  # far past depth: put() blocks, never grows
+        pipe.emit_admit(((0, req),), np.asarray([1], np.int32))
+    pipe.flush()
+    assert len(req.out) == 16
+    assert pipe.drain_stats()["tokens"] == 16
+    pipe.close()
